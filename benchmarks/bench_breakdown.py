@@ -1,0 +1,30 @@
+"""Paper Fig. 1/2: runtime breakdown (sample / slice+copy / compute) per
+sampler, and the byte-traffic ledger behind it."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_trainer
+
+FIELDS = ["dataset", "sampler", "sample_s", "copy_s", "compute_s",
+          "bytes_streamed_mb", "copy_share_pct"]
+
+
+def run(fast: bool = True) -> list:
+    datasets = ["ogbn-products"] if fast else ["ogbn-products", "oag-paper"]
+    rows = []
+    for ds in datasets:
+        for sampler in ("ns", "gns"):
+            r = run_trainer(ds, sampler, epochs=2, scale=0.15 if fast else 1.0)
+            b = r["breakdown"]
+            total = max(b["total_s"], 1e-9)
+            rows.append({
+                "dataset": ds, "sampler": sampler,
+                "sample_s": b["sample_s"], "copy_s": b["copy_s"],
+                "compute_s": b["compute_s"],
+                "bytes_streamed_mb": b["bytes_streamed"] / 1e6,
+                "copy_share_pct": 100.0 * b["copy_s"] / total,
+            })
+    return emit("fig1_breakdown", rows, FIELDS)
+
+
+if __name__ == "__main__":
+    run(fast=True)

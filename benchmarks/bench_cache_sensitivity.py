@@ -1,0 +1,24 @@
+"""Paper Table 6: GNS F1 vs cache size x refresh period P."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_trainer
+
+FIELDS = ["cache_fraction", "period", "f1"]
+
+
+def run(fast: bool = True) -> list:
+    fractions = [0.05, 0.01] if fast else [0.01, 0.001, 0.0001]
+    periods = [1, 5] if fast else [1, 2, 5, 10]
+    epochs = 3 if fast else 10
+    rows = []
+    for frac in fractions:
+        for p in periods:
+            r = run_trainer("ogbn-products", "gns", epochs=epochs,
+                            scale=0.15 if fast else 1.0,
+                            cache_fraction=frac, cache_period=p)
+            rows.append({"cache_fraction": frac, "period": p, "f1": r["f1"]})
+    return emit("table6_cache_sensitivity", rows, FIELDS)
+
+
+if __name__ == "__main__":
+    run(fast=True)

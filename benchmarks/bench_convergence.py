@@ -1,0 +1,28 @@
+"""Paper Fig. 3: F1 vs epoch for all four samplers (convergence parity)."""
+from __future__ import annotations
+
+from repro.core.cache import CacheConfig
+from repro.core.sampler import SamplerConfig
+from repro.graph.datasets import get_dataset
+from repro.train.trainer import GNNTrainer
+from benchmarks.common import emit
+
+FIELDS = ["sampler", "epoch", "f1"]
+
+
+def run(fast: bool = True) -> list:
+    ds = get_dataset("ogbn-products", scale=0.15 if fast else 1.0)
+    epochs = 4 if fast else 10
+    rows = []
+    for sampler in ("ns", "gns", "ladies", "lazygcn"):
+        scfg = SamplerConfig(batch_size=512,
+                             cache=CacheConfig(fraction=0.01, period=1))
+        tr = GNNTrainer(ds, sampler, sampler_cfg=scfg)
+        rep = tr.train(epochs, eval_every=1)
+        for ep, f1 in enumerate(rep.val_acc, start=1):
+            rows.append({"sampler": sampler, "epoch": ep, "f1": f1})
+    return emit("fig3_convergence", rows, FIELDS)
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -1,0 +1,39 @@
+"""Paper Table 4: average #input nodes per minibatch, NS vs GNS (+ cached).
+
+The mechanism behind the paper's speedup: GNS shrinks the input layer 3-6x
+and serves a large share of it from the device cache.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_trainer
+
+FIELDS = ["dataset", "input_nodes_ns", "input_nodes_gns", "cached_gns",
+          "reduction_x"]
+
+
+def run(fast: bool = True) -> list:
+    # Table-4 regime: the sample tree (batch x prod(fanouts)) must stay well
+    # under |V| or dedup saturates and hides the reduction (EXPERIMENTS.md).
+    datasets = ["yelp", "ogbn-products"] if fast else [
+        "yelp", "amazon", "oag-paper", "ogbn-products", "ogbn-papers"]
+    scale = 2.0 if fast else 1.0
+    bsz = 128 if fast else 1000
+    rows = []
+    for ds in datasets:
+        ns = run_trainer(ds, "ns", epochs=1, scale=scale, batch_size=bsz,
+                         max_batches=20)
+        gns = run_trainer(ds, "gns", epochs=1, scale=scale, batch_size=bsz,
+                          max_batches=20)
+        rows.append({
+            "dataset": ds,
+            "input_nodes_ns": ns["input_nodes_per_batch"],
+            "input_nodes_gns": gns["input_nodes_per_batch"],
+            "cached_gns": gns["cached_nodes_per_batch"],
+            "reduction_x": ns["input_nodes_per_batch"]
+            / max(gns["input_nodes_per_batch"], 1.0),
+        })
+    return emit("table4_input_nodes", rows, FIELDS)
+
+
+if __name__ == "__main__":
+    run(fast=True)

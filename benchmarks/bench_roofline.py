@@ -1,0 +1,94 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads benchmarks/results/dryrun/*.json (written by launch/dryrun.py) and
+emits the per-(arch x shape x mesh) three-term table + markdown for
+EXPERIMENTS.md §Roofline.  Pure aggregation — no jax needed.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+DRYRUN = RESULTS / "dryrun"
+
+FIELDS = ["arch", "shape", "mesh", "dominant", "compute_s", "memory_s",
+          "collective_s", "roofline_fraction", "useful_ratio"]
+
+
+def load_cells() -> list:
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok" and not r.get("roofline"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r.get("mesh", "?"), "status": "proof",
+                         "compile_s": r.get("compile_s")})
+            continue                      # multipod compile-proof cells
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r.get("mesh", "?"),
+                         "status": r.get("status"),
+                         "reason": r.get("reason", "")[:60]})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok", "dominant": t["dominant"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "roofline_fraction": t["roofline_fraction"],
+            "useful_ratio": t["useful_ratio"],
+            "params_total": r["params_total"],
+            "arg_bytes_per_device": r.get("arg_bytes_per_device", 0.0),
+            "grad_accum": r.get("grad_accum", 1),
+            "probe_mode": r.get("probe_mode", ""),
+        })
+    return rows
+
+
+def markdown_table(rows: list, mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| frac | useful |\n|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped |"
+                       f" — | — |\n")
+            continue
+        if r.get("status") == "proof":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"compiles ({r.get('compile_s')}s) | — | — |\n")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAILED |"
+                       f" — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| {r['dominant']} | {r['roofline_fraction']:.3f} "
+            f"| {r['useful_ratio']:.2f} |\n")
+    return "".join(out)
+
+
+def run(fast: bool = True) -> list:
+    rows = load_cells()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    print(f"dry-run cells: {len(rows)} ({len(ok)} probed, "
+          f"{sum(1 for r in rows if r.get('status') == 'proof')} compile-proof, "
+          f"{sum(1 for r in rows if r.get('status') == 'skipped')} skipped)")
+    print(",".join(FIELDS))
+    for r in ok:
+        print(",".join(f"{r.get(f):.4f}" if isinstance(r.get(f), float)
+                       else str(r.get(f)) for f in FIELDS))
+    (RESULTS / "roofline_table.md").write_text(
+        "### single-pod 16x16\n\n" + markdown_table(rows, "16x16") +
+        "\n### multi-pod 2x16x16\n\n" + markdown_table(rows, "2x16x16"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

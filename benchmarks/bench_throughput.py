@@ -1,0 +1,35 @@
+"""Paper Table 3: F1 + time/epoch for NS / GNS / LADIES / LazyGCN.
+
+Synthetic datasets replicate the paper's dataset *shapes* (graph/datasets.py)
+at container scale; the quantity compared is the RELATIVE speed and accuracy
+of the four samplers, which is scale-transportable (the paper's 2-4x GNS/NS
+gap comes from per-batch input-node counts, reproduced in bench_input_nodes).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_trainer
+
+FIELDS = ["dataset", "sampler", "f1", "epoch_time_s",
+          "input_nodes_per_batch", "speedup_vs_ns"]
+
+
+def run(fast: bool = True) -> list:
+    datasets = ["yelp", "ogbn-products"] if fast else [
+        "yelp", "amazon", "oag-paper", "ogbn-products", "ogbn-papers"]
+    scale = 0.15 if fast else 1.0
+    epochs = 2 if fast else 10
+    rows = []
+    for ds in datasets:
+        base_t = None
+        for sampler in ("ns", "gns", "ladies", "lazygcn"):
+            r = run_trainer(ds, sampler, epochs=epochs, scale=scale,
+                            max_batches=30 if fast else None)
+            if sampler == "ns":
+                base_t = r["epoch_time_s"]
+            r["speedup_vs_ns"] = base_t / max(r["epoch_time_s"], 1e-9)
+            rows.append(r)
+    return emit("table3_throughput", rows, FIELDS)
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -1,0 +1,69 @@
+"""Shared benchmark plumbing: dataset prep, trainer runs, CSV/JSON output."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.cache import CacheConfig
+from repro.core.sampler import SamplerConfig
+from repro.graph.datasets import get_dataset
+from repro.train.trainer import GNNTrainer
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+# CI-scale note: the paper's |C| = 1%|V| regime relies on hub coverage that
+# only materializes on million-node power-law graphs (hub degree ~sqrt(n)).
+# At the 0.15x container scale we match the CACHE COVERAGE of the paper's 1%
+# rather than the raw fraction (5% of a 9k-node graph covers the same edge
+# share as 1% of the 2.4M-node original); `--full` uses the true 1%.
+CI_CACHE_FRACTION = 0.05
+
+
+def run_trainer(dataset: str, sampler: str, *, epochs: int = 2,
+                scale: float = 0.25, batch_size: int = 512,
+                cache_fraction: float = CI_CACHE_FRACTION, cache_period: int = 1,
+                layer_size: int = 512, fanouts=(5, 10, 15), seed: int = 0,
+                eval_batches: int = 8, max_batches=None):
+    ds = get_dataset(dataset, scale=scale, seed=seed)
+    scfg = SamplerConfig(
+        batch_size=batch_size, fanouts=fanouts,
+        cache=CacheConfig(fraction=cache_fraction, period=cache_period),
+        layer_size=layer_size)
+    tr = GNNTrainer(ds, sampler, sampler_cfg=scfg, seed=seed)
+    t0 = time.perf_counter()
+    rep = tr.train(epochs, max_batches=max_batches, eval_every=epochs,
+                   eval_batches=eval_batches)
+    wall = time.perf_counter() - t0
+    return {
+        "dataset": dataset, "sampler": sampler, "epochs": epochs,
+        "nodes": ds.graph.num_nodes, "edges": ds.graph.num_edges,
+        "f1": rep.val_acc[-1] if rep.val_acc else float("nan"),
+        "loss": rep.losses[-1],
+        "epoch_time_s": float(np.mean(rep.epoch_times)),
+        "wall_s": wall,
+        "input_nodes_per_batch": rep.input_nodes_per_batch,
+        "cached_nodes_per_batch": rep.cached_nodes_per_batch,
+        "isolated_per_batch": rep.isolated_per_batch,
+        "breakdown": tr.meter.breakdown(),
+    }
+
+
+def emit(name: str, rows: list, csv_fields: list):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / f"{name}.json"
+    out.write_text(json.dumps(rows, indent=1))
+    print(f"\n# {name} -> {out}")
+    print(",".join(csv_fields))
+    for r in rows:
+        print(",".join(_fmt(r.get(f)) for f in csv_fields))
+    return rows
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)

@@ -1,0 +1,60 @@
+"""Quickstart: GNS vs node-wise sampling on a synthetic power-law graph.
+
+Reproduces the paper's core claim at laptop scale in ~a minute: GNS reaches
+the same F1 as NS while moving far fewer feature bytes host->device and
+far fewer distinct input nodes per minibatch (paper Tables 3 & 4).
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--epochs 3]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.cache import CacheConfig
+from repro.core.sampler import SamplerConfig
+from repro.graph.datasets import get_dataset
+from repro.train.trainer import GNNTrainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=2)
+    # Table-4 regime: sample tree (batch x prod(fanouts)) << |V|, power-law
+    # hubs intact — see EXPERIMENTS.md §Repro regime note.
+    ap.add_argument("--dataset", default="ogbn-products")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--batch-size", type=int, default=128)
+    ap.add_argument("--max-batches", type=int, default=30)
+    args = ap.parse_args()
+
+    ds = get_dataset(args.dataset, scale=args.scale)
+    print(f"dataset: {ds.name}  |V|={ds.graph.num_nodes:,} "
+          f"|E|={ds.graph.num_edges:,} feat={ds.feat_dim}")
+
+    results = {}
+    for name in ("ns", "gns"):
+        scfg = SamplerConfig(batch_size=args.batch_size, fanouts=(5, 10, 15),
+                             cache=CacheConfig(fraction=0.05, period=1))
+        tr = GNNTrainer(ds, name, sampler_cfg=scfg)
+        rep = tr.train(args.epochs, max_batches=args.max_batches,
+                       eval_every=args.epochs)
+        results[name] = (rep, tr.meter)
+        print(f"\n== {name.upper()} ==")
+        print(f"  epoch time:        {rep.epoch_times[-1]:.2f}s")
+        print(f"  final loss:        {rep.losses[-1]:.4f}")
+        print(f"  val micro-F1:      {rep.val_acc[-1]:.4f}")
+        print(f"  input nodes/batch: {rep.input_nodes_per_batch:,.0f}"
+              f"  (cached: {rep.cached_nodes_per_batch:,.0f})")
+        print(f"  bytes streamed:    {tr.meter.bytes_streamed/1e6:,.1f} MB")
+
+    ns_bytes = results["ns"][1].bytes_streamed
+    gns_bytes = results["gns"][1].bytes_streamed
+    ns_in = results["ns"][0].input_nodes_per_batch
+    gns_in = results["gns"][0].input_nodes_per_batch
+    print(f"\nGNS vs NS:  input nodes {ns_in/max(gns_in,1):.1f}x fewer, "
+          f"streamed bytes {ns_bytes/max(gns_bytes,1):.1f}x fewer "
+          f"(paper Table 4: 3-6x fewer input nodes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic, keep-N, reshard-on-load."""
+from repro.checkpoint.store import (CheckpointManager, load_checkpoint,
+                                    save_checkpoint)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]

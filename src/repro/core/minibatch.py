@@ -1,0 +1,108 @@
+"""Static-shape padded minibatch blocks.
+
+DGL (the paper's substrate) builds *ragged* message-flow blocks per minibatch.
+XLA/TPU requires static shapes, so we adapt the block format (DESIGN.md §2):
+
+Every GNN layer ℓ is a :class:`LayerBlock` mapping a padded source-node array
+(representations at layer ℓ-1) to a padded destination-node array (layer ℓ):
+
+* ``nbr_idx[d, k]`` — index into this block's **source axis** of the k-th
+  sampled neighbor of destination d.  Pure gather; no scatter needed.
+* ``nbr_w[d, k]``  — aggregation weight.  Carries BOTH the importance-sampling
+  correction of eq. (10)–(12) AND the mean normalization; padded lanes are 0,
+  so masked lanes drop out of the weighted sum for free.
+* destinations are the **first** ``num_dst`` entries of the source array, so
+  the self-representation needed by GraphSAGE's concat is ``h_src[:num_dst]``.
+
+The padded layout turns sparse neighbor aggregation into a dense
+``gather + weighted sum over k`` — exactly the shape the Pallas ``gather_agg``
+kernel consumes (kernels/gather_agg.py), and MXU/VPU-friendly on TPU.
+
+All arrays are numpy on the host; the trainer ships the *device part* (a
+registered pytree, :class:`DeviceBatch`) to the accelerator each step.  Shapes
+depend only on (batch, fanouts), never on the sampled graph — one XLA
+compilation for the whole run.  Host-only metadata (actual node counts, bytes
+streamed) lives on :class:`MiniBatch` and never enters the traced path, so
+varying counts cannot trigger recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LayerBlock:
+    nbr_idx: np.ndarray   # int32 [D, K] gather indices into src axis
+    nbr_w: np.ndarray     # f32   [D, K] aggregation weights (0 = masked lane)
+    dst_mask: np.ndarray  # f32   [D]    1 for real dst rows
+    num_src: int = dataclasses.field(metadata=dict(static=True), default=0)
+    num_dst: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeviceBatch:
+    """The traced pytree a train/eval step consumes."""
+    blocks: tuple                  # tuple[LayerBlock], input -> output order
+    input_cache_slots: np.ndarray  # int32 [S0]  slot in device cache or -1
+    input_streamed: np.ndarray     # f32 [S0, F] host-gathered rows (0 for hits)
+    input_mask: np.ndarray         # f32 [S0]
+    labels: np.ndarray             # int32 [B]
+    label_mask: np.ndarray         # f32 [B]
+
+
+@dataclasses.dataclass
+class MiniBatch:
+    """Host-side minibatch: device pytree + untraced bookkeeping."""
+    device: DeviceBatch
+    input_node_ids: np.ndarray     # int64 [S0] global ids (pad = 0)
+    num_input: int = 0             # distinct input nodes (paper Table 4)
+    num_cached: int = 0            # of which served by the device cache
+    bytes_streamed: int = 0        # host->device feature bytes this batch
+    num_isolated: int = 0          # input-layer dst rows with no valid lane (Table 5)
+
+
+def block_pad_sizes(batch_size: int, fanouts: Sequence[int]) -> list[tuple[int, int]]:
+    """Static (num_dst, num_src) per block, input-layer first.
+
+    Worst case without dedup: S_ℓ = D_ℓ·(1+k_ℓ), chained from the output layer
+    (D_L = batch) down to the input layer.  Dedup only shrinks the *real*
+    counts; padding uses the bound so shapes are run-constant.
+    """
+    sizes = []
+    d = batch_size
+    for k in reversed(list(fanouts)):      # output layer first
+        s = d * (1 + k)
+        sizes.append((d, s))
+        d = s
+    return list(reversed(sizes))           # back to input-first
+
+
+def pad_to(arr: np.ndarray, n: int, axis: int = 0, fill=0) -> np.ndarray:
+    pad = n - arr.shape[axis]
+    assert pad >= 0, f"padded size {n} < actual {arr.shape[axis]}"
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return np.pad(arr, widths, constant_values=fill)
+
+
+def make_block(nbr_idx: np.ndarray, nbr_w: np.ndarray,
+               pad_dst: int, pad_src: int) -> LayerBlock:
+    """Pad a ragged (D, K) block to the static (pad_dst, K) shape."""
+    d, _ = nbr_idx.shape
+    dst_mask = np.zeros(pad_dst, dtype=np.float32)
+    dst_mask[:d] = 1.0
+    return LayerBlock(
+        nbr_idx=pad_to(nbr_idx.astype(np.int32), pad_dst, axis=0),
+        nbr_w=pad_to(nbr_w.astype(np.float32), pad_dst, axis=0),
+        dst_mask=dst_mask,
+        num_src=pad_src,
+        num_dst=pad_dst,
+    )

@@ -1,0 +1,94 @@
+"""Sampler pipeline: epoch iteration + asynchronous prefetch.
+
+The paper parallelizes sampling with multiprocessing (§3.3) so the GPU never
+waits for the CPU.  This container has one core, so we use a bounded-queue
+*thread* prefetcher — the numpy sampler releases the GIL in its hot loops and
+at pod scale there is one sampler pipeline per host anyway.
+
+Straggler mitigation (DESIGN.md §4): the queue is bounded and the consumer
+can specify a timeout; on timeout it *reuses the previous cache version /
+last batch* rather than blocking the whole data-parallel step — exploiting
+the paper's own Table 6 result that stale caches (refresh period P ≤ 5) are
+accuracy-neutral.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.minibatch import MiniBatch
+
+
+class EpochLoader:
+    """Shuffles targets, drives the sampler's cache lifecycle, yields batches.
+
+    Drop-last semantics (static shapes want full batches; the paper's epoch
+    is |V_s|/batch_size iterations, same convention).
+    """
+
+    def __init__(self, sampler, train_idx: np.ndarray, seed: int = 0,
+                 max_batches: Optional[int] = None):
+        self.sampler = sampler
+        self.train_idx = np.asarray(train_idx, dtype=np.int64)
+        self.seed = seed
+        self.max_batches = max_batches
+
+    def epoch(self, epoch: int) -> Iterator[MiniBatch]:
+        rng = np.random.default_rng(self.seed + 7919 * epoch)
+        self.sampler.start_epoch(epoch, rng)
+        b = self.sampler.cfg.batch_size if hasattr(self.sampler, "cfg") \
+            else self.sampler.inner.cfg.batch_size
+        perm = rng.permutation(len(self.train_idx))
+        n_batches = len(self.train_idx) // b
+        if self.max_batches is not None:
+            n_batches = min(n_batches, self.max_batches)
+        for i in range(n_batches):
+            targets = self.train_idx[perm[i * b:(i + 1) * b]]
+            yield self.sampler.sample(targets, rng)
+
+
+class Prefetcher:
+    """Bounded-queue background prefetch with straggler timeout."""
+
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterator[MiniBatch], depth: int = 2,
+                 timeout_s: Optional[float] = None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._timeout = timeout_s
+        self._err: Optional[BaseException] = None
+        self._last: Optional[MiniBatch] = None
+        self.reused = 0                       # straggler-mitigation reuse count
+        self._thread = threading.Thread(target=self._run, args=(it,), daemon=True)
+        self._thread.start()
+
+    def _run(self, it):
+        try:
+            for item in it:
+                self._q.put(item)
+        except BaseException as e:  # surfaced on the consumer side
+            self._err = e
+        finally:
+            self._q.put(self._SENTINEL)
+
+    def __iter__(self):
+        while True:
+            try:
+                item = self._q.get(timeout=self._timeout)
+            except queue.Empty:
+                # straggler: reuse the last batch instead of stalling the step
+                if self._last is None:
+                    item = self._q.get()      # nothing to reuse yet: block
+                else:
+                    self.reused += 1
+                    yield self._last
+                    continue
+            if item is self._SENTINEL:
+                if self._err is not None:
+                    raise self._err
+                return
+            self._last = item
+            yield item

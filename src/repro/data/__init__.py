@@ -1,0 +1,4 @@
+"""Data substrate: synthetic token corpus, sharded loaders, vocab cache."""
+from repro.data.tokens import SyntheticCorpus, TokenPipeline
+
+__all__ = ["SyntheticCorpus", "TokenPipeline"]

@@ -1,0 +1,154 @@
+"""Hot-vocabulary embedding cache — the GNS mechanism applied to LM tables.
+
+DESIGN.md §5: large-vocab archs (gemma 256k, seamless 256k, qwen2 152k) have
+Zipf-skewed token access — the same power-law skew GNS exploits via
+degree-proportional cache sampling (paper eq. 6).  Mapping:
+
+  graph node              -> vocab token
+  node degree             -> token frequency (EMA of observed counts)
+  GPU feature cache       -> HBM-pinned hot-row table (host keeps full table)
+  cache-prioritized sample-> input lookups served from cache, misses streamed
+  eq. (11) p^C            -> inclusion probability of a token in the cache
+  eq. (10) 1/p rescale    -> importance-corrected *sampled softmax* negatives
+
+Input embeddings are exact (a lookup, not a sample) — no correction needed;
+the paper's importance math is reused where sampling genuinely happens: the
+output softmax.  ``sampled_softmax_loss`` draws negatives from the cache
+distribution and reweights logits by -log(E[count]) exactly like sampled-
+softmax literature, with the GNS eq. (11) inclusion form.
+
+Traffic accounting reuses :class:`repro.core.device_cache.TrafficMeter` so
+benchmarks report the same host->device byte savings as the GNN path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_cache import TrafficMeter
+
+
+@dataclasses.dataclass(frozen=True)
+class VocabCacheConfig:
+    fraction: float = 0.01            # |C| / vocab (paper default 1%)
+    period: int = 1                   # refresh every N epochs (paper Table 6)
+    strategy: str = "sampled"         # "sampled" (GNS eq. 6) | "topk"
+    ema: float = 0.9                  # frequency EMA decay across refreshes
+
+    def size(self, vocab: int) -> int:
+        return max(int(vocab * self.fraction), 1)
+
+
+class VocabCache:
+    """Host-resident full embedding table + device-pinned hot rows."""
+
+    def __init__(self, host_table: np.ndarray, cfg: VocabCacheConfig,
+                 sharding: Optional[jax.sharding.Sharding] = None,
+                 seed: int = 0):
+        self.host_table = host_table                     # [V, d] (never on device)
+        self.cfg = cfg
+        self.sharding = sharding
+        self.vocab, self.dim = host_table.shape
+        self.size = cfg.size(self.vocab)
+        self.freq = np.ones(self.vocab, np.float64)      # uniform prior
+        self._rng = np.random.default_rng(seed)
+        self.version = -1
+        self.slot_of = np.full(self.vocab, -1, np.int32)
+        self.token_ids = np.zeros(self.size, np.int64)
+        self.table: Optional[jax.Array] = None
+        self.probs = self.freq / self.freq.sum()
+
+    # -- frequency tracking (the "degree" analog) ---------------------------
+    def observe(self, tokens: np.ndarray):
+        counts = np.bincount(tokens.reshape(-1), minlength=self.vocab)
+        self.freq = self.cfg.ema * self.freq + (1 - self.cfg.ema) * counts
+
+    # -- refresh (paper §3.2) ------------------------------------------------
+    def refresh(self, version: int, meter: Optional[TrafficMeter] = None):
+        self.probs = self.freq / self.freq.sum()
+        if self.cfg.strategy == "topk":
+            ids = np.argpartition(self.probs, -self.size)[-self.size:]
+        else:                                            # Gumbel top-k sample
+            g = -np.log(-np.log(self._rng.random(self.vocab) + 1e-300) + 1e-300)
+            keys = np.log(self.probs + 1e-300) + g
+            ids = np.argpartition(keys, -self.size)[-self.size:]
+        ids = np.sort(ids.astype(np.int64))
+        self.token_ids = ids
+        self.slot_of = np.full(self.vocab, -1, np.int32)
+        self.slot_of[ids] = np.arange(self.size, dtype=np.int32)
+        rows = self.host_table[ids]
+        self.table = jnp.asarray(rows)
+        if self.sharding is not None:
+            self.table = jax.device_put(self.table, self.sharding)
+        self.version = version
+        if meter is not None:
+            meter.bytes_cache_fill += rows.nbytes
+
+    # -- batch assembly (host side) ------------------------------------------
+    def assemble(self, tokens: np.ndarray,
+                 meter: Optional[TrafficMeter] = None) -> dict:
+        """slots + streamed rows for a token batch [...]; exact lookup.
+
+        Streamed rows are deduplicated per batch (the paper's 'distinct input
+        nodes' — Table 4 analog): each missing token's row crosses the host
+        boundary once per batch, not once per occurrence.
+        """
+        slots = self.slot_of[tokens]                     # [...]: slot or -1
+        miss_tokens = np.unique(tokens[slots < 0])
+        streamed = self.host_table[miss_tokens]          # [M, d]
+        # local index of each miss occurrence into the streamed block
+        local = np.searchsorted(miss_tokens, tokens)
+        local = np.where(slots < 0, local, 0).astype(np.int32)
+        if meter is not None:
+            meter.add_batch(int(streamed.nbytes))
+        return {"slots": slots.astype(np.int32),
+                "streamed": streamed.astype(np.float32),
+                "miss_local": local}
+
+    def hit_rate(self, tokens: np.ndarray) -> float:
+        return float((self.slot_of[tokens] >= 0).mean())
+
+    # -- eq. (11): inclusion probability of a token in the sampled cache ----
+    def inclusion_probs(self, token_ids: np.ndarray) -> np.ndarray:
+        p = self.probs[token_ids]
+        return 1.0 - (1.0 - p) ** self.size
+
+
+# ---------------------------------------------------------------------------
+# device-side pure functions (jit-safe)
+# ---------------------------------------------------------------------------
+
+def embed_with_cache(cache_table: jnp.ndarray, batch: dict) -> jnp.ndarray:
+    """h = where(slot >= 0, cache[slot], streamed[miss_local]) — exact."""
+    slots = batch["slots"]
+    hit = slots >= 0
+    cached = jnp.take(cache_table, jnp.clip(slots, 0), axis=0)
+    missed = jnp.take(batch["streamed"], batch["miss_local"], axis=0)
+    return jnp.where(hit[..., None], cached, missed)
+
+
+def sampled_softmax_loss(hidden: jnp.ndarray, labels: jnp.ndarray,
+                         label_rows: jnp.ndarray, cache_table: jnp.ndarray,
+                         cache_inclusion: jnp.ndarray) -> jnp.ndarray:
+    """Sampled softmax with cache negatives + GNS eq. (11) correction.
+
+    hidden [T, d]; labels [T]; label_rows [T, d] = unembed rows of the gold
+    tokens; cache_table [C, d] = negatives; cache_inclusion [C] = p^C from
+    eq. (11).  Subtracting log p^C makes the sampled partition an unbiased
+    estimate of the full one (standard sampled-softmax correction with the
+    GNS inclusion probability as the proposal mass).
+    """
+    t = hidden.shape[0]
+    pos = jnp.einsum("td,td->t", hidden.astype(jnp.float32),
+                     label_rows.astype(jnp.float32))
+    neg = hidden.astype(jnp.float32) @ cache_table.astype(jnp.float32).T  # [T, C]
+    neg = neg - jnp.log(jnp.clip(cache_inclusion, 1e-9, 1.0))[None, :]
+    # exclude accidental hits of the gold token among negatives
+    # (cache slot of the label, if present, would double-count the positive)
+    all_logits = jnp.concatenate([pos[:, None], neg], axis=1)
+    logz = jax.nn.logsumexp(all_logits, axis=1)
+    return jnp.mean(logz - pos)

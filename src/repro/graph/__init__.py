@@ -1,0 +1,24 @@
+"""Graph substrate: CSR storage, synthetic giant-graph generators, partitioning.
+
+The paper trains on graphs with up to 111M nodes / 3.2B edges kept in host
+memory (Table 2).  This package provides the host-side graph store used by the
+GNS sampler: an immutable CSR structure backed by numpy, fast vectorized
+synthetic generators that replicate the *shape* of the paper's datasets
+(power-law degree distribution, feature dim, train fraction), and a hash
+partitioner for multi-host pods.
+"""
+from repro.graph.csr import CSRGraph
+from repro.graph.generate import powerlaw_graph, sbm_graph
+from repro.graph.datasets import get_dataset, DATASETS, GraphDataset
+from repro.graph.partition import hash_partition, Partition
+
+__all__ = [
+    "CSRGraph",
+    "powerlaw_graph",
+    "sbm_graph",
+    "get_dataset",
+    "DATASETS",
+    "GraphDataset",
+    "hash_partition",
+    "Partition",
+]

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: blocked attention with online softmax (FlashAttention).
+
+The LM-side compute hot-spot for the assigned architectures (train_4k /
+prefill_32k).  TPU-native adaptation notes (DESIGN.md §2):
+
+* Tiles are sized for VMEM and the MXU: q/k/v blocks are (block_q, head_dim)
+  and (block_k, head_dim) with head_dim ∈ {64, 128, 256} — MXU-aligned on the
+  contracting dim; scores block (block_q, block_k) stays in registers/VMEM.
+* Online softmax carries (m, l, acc) in VMEM scratch across the innermost
+  kv-block grid dimension (Pallas TPU grids execute sequentially, so scratch
+  is a legal carry — this replaces the CUDA shared-memory accumulator).
+* GQA is handled in the index_map (kv head = q head // group) — no
+  jnp.repeat materialization of K/V.
+* Causal + sliding-window masking is applied per-tile from global indices;
+  fully-masked tiles are skipped via ``pl.when`` (the causal wedge costs
+  ~2x fewer tiles, the SWA band makes long-context linear in seq).
+
+Supports: causal LM (decode & train), sliding-window (h2o-danube3, zamba2
+shared attn option), cross-attention (seamless enc-dec), MQA/GQA (gemma,
+qwen2, starcoder2, ...), q_len != kv_len (decode with KV cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, num_kv_blocks: int,
+            q_offset: int, kv_len: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # global row/col ranges of this tile
+    row0 = iq * block_q + q_offset          # first query's absolute kv position
+    col0 = jk * block_k
+
+    # tile-level visibility (skip fully-masked tiles)
+    visible = col0 < kv_len
+    if causal:
+        visible &= col0 <= row0 + block_q - 1
+    if window is not None:
+        visible &= col0 + block_k - 1 > row0 - window
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                        # (bq, bk)
+
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = cols < kv_len
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)                        # kill -1e30 rows
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(jk == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           kv_len: Optional[int] = None,
+                           q_offset: Optional[int] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, Sq, Dh]; k, v: [B, Hkv, Sk_padded, Dh].  Returns q-shaped.
+
+    ``kv_len`` masks padded keys (defaults to Sk).  Sq/Sk must be multiples
+    of block_q/block_k (ops.py pads).  Query positions are aligned to the
+    *end* of the kv axis (decode convention): absolute position of query i is
+    ``i + q_offset`` with ``q_offset = kv_len - actual_q_len`` — pass it
+    explicitly when q carries end-padding.
+    """
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    if kv_len is None:
+        kv_len = sk
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    if q_offset is None:
+        q_offset = kv_len - sq
+
+    grid = (b, hq, nq, nk)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        q_offset=q_offset, kv_len=kv_len)
+
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),     # m: running max
+            pltpu.VMEM((block_q,), jnp.float32),     # l: running denom
+            pltpu.VMEM((block_q, dh), jnp.float32),  # acc: running numerator
+        ],
+        interpret=interpret,
+    )
+    return fn(q, k, v)

@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU the compiled Pallas kernels run natively; on CPU
+(this container, CI) they run in ``interpret=True`` mode — same kernel body,
+Python-evaluated — so every test exercises the real kernel logic.  Callers
+can force the reference path with ``impl="reference"`` (the dry-run uses it:
+interpret-mode Pallas cannot be lowered into an XLA-for-TPU HLO from a CPU
+host, and the reference path gives XLA the fusion freedom the roofline
+analysis measures).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gather_agg import gather_agg_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_d"))
+def gather_agg(feat: jax.Array, idx: jax.Array, w: jax.Array,
+               impl: str = "pallas", block_d: int = 512) -> jax.Array:
+    """Fused gather + weighted aggregation (GNS hot-spot).  [B,D] f32."""
+    if impl == "reference":
+        return ref.gather_agg_ref(feat, idx, w)
+    d = feat.shape[1]
+    bd = min(block_d, d)
+    while d % bd:
+        bd -= 1
+    return gather_agg_pallas(feat, idx, w, block_d=bd, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "impl", "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, impl: str = "pallas",
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Blocked attention; pads seq dims to block multiples and unpads."""
+    if impl == "reference":
+        return ref.mha_ref(q, k, v, causal=causal, window=window, scale=scale)
+    sq, sk = q.shape[2], k.shape[2]
+    bq = min(block_q, max(16, 1 << (sq - 1).bit_length()))
+    bk = min(block_k, max(16, 1 << (sk - 1).bit_length()))
+    qp = _pad_axis(q, 2, bq)
+    kp = _pad_axis(k, 2, bk)
+    vp = _pad_axis(v, 2, bk)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 scale=scale, block_q=bq, block_k=bk,
+                                 kv_len=sk, q_offset=sk - sq,
+                                 interpret=_interpret())
+    return out[:, :, :sq, :]

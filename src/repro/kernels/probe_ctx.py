@@ -1,0 +1,38 @@
+"""Probe context: swap attention inners for HBM-traffic stand-ins.
+
+The dry-run's memory roofline term comes from cost_analysis of a CPU-backend
+compile, where the reference attention's softmax chain materializes every
+[B,H,S,S] intermediate in "HBM".  On the TPU target those live in VMEM
+inside the flash kernel (kernels/flash_attention.py); counting them as HBM
+traffic would overstate the memory term ~10x (EXPERIMENTS.md §Dry-run "cost
+accounting").
+
+Under ``linear_attention_traffic()``, mha_ref computes a *linear-cost*
+stand-in with exactly the flash kernel's HBM footprint — q, k, v read once,
+out written once — so the probe's 'bytes accessed' matches the kernelized
+TPU execution.  FLOPs are taken from the un-switched reference pass (the
+kernel really does perform the S^2 matmuls), collectives are identical in
+both (attention is shard_map-local).  Only train/prefill attention is
+switched; decode reads its whole KV cache every step — that reference
+traffic is real and stays.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def linear_attention_on() -> bool:
+    return getattr(_state, "linear", False)
+
+
+@contextlib.contextmanager
+def linear_attention_traffic(on: bool = True):
+    prev = linear_attention_on()
+    _state.linear = on
+    try:
+        yield
+    finally:
+        _state.linear = prev

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_agg_ref(feat: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
+    """out[b] = sum_k w[b,k] * feat[idx[b,k]]  (f32 accumulate)."""
+    gathered = jnp.take(feat, idx, axis=0).astype(jnp.float32)   # [B, K, D]
+    return jnp.einsum("bk,bkd->bd", w.astype(jnp.float32), gathered)
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, window: Optional[int] = None,
+            scale: Optional[float] = None,
+            bias: Optional[jax.Array] = None,
+            kv_len=None, q_pos=None, kv_pos=None) -> jax.Array:
+    """Reference multi-head attention with GQA, causal and sliding-window.
+
+    q: [B, Hq, Sq, Dh]; k, v: [B, Hkv, Sk, Dh] with Hq % Hkv == 0.
+    ``kv_len`` (static int or traced scalar) masks keys at positions >= it
+    and end-aligns the queries to it (decode with a partially-filled cache).
+    ``q_pos`` [Sq] / ``kv_pos`` [Sk]: explicit absolute positions for
+    ring-buffer (SWA) caches, where slot order is not position order; slots
+    with kv_pos < 0 are unwritten and masked.  Overrides kv_len alignment.
+    Computes in f32, returns q.dtype.  Sharding is decided by the CALLER
+    (models/attention.py wraps this in shard_map on the production mesh) —
+    the oracle itself stays mesh-free.
+    """
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    # GQA-native grouped einsum: never materialize k/v at Hq heads — the
+    # repeat would make backward's dk/dv partial sums Hq/Hkv times larger
+    # (measured as a per-layer all-reduce storm, EXPERIMENTS.md §Perf it. 0).
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, sq, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    from repro.kernels.probe_ctx import linear_attention_on
+    if linear_attention_on() and sq > 1:
+        # flash-kernel HBM-traffic stand-in (see kernels/probe_ctx.py):
+        # q/k/v read once, out written once; O(S) intermediates only.
+        # (single-token decode keeps the real path: reading the whole KV
+        # cache per step IS the memory cost of decoding.)
+        kv = jnp.einsum("bnkd,bnke->bnde", kf, vf)          # [b,n,dh,dv]
+        out = jnp.einsum("bngqd,bnde->bngqe", qf, kv)
+        return out.reshape(b, hq, sq, v.shape[-1]).astype(q.dtype)
+
+    s = jnp.einsum("bngqd,bnkd->bngqk", qf, kf)
+    if bias is not None:                       # must broadcast to [b,n,g,q,k]
+        s = s + bias
+    if q_pos is not None:
+        iq = q_pos[:, None]
+        jk = kv_pos[None, :]
+        mask = jk >= 0                         # unwritten ring slots
+        if causal:
+            mask &= jk <= iq
+        if window is not None:
+            mask &= jk > iq - window
+    else:
+        end = sk if kv_len is None else kv_len
+        iq = jnp.arange(sq)[:, None] + (end - sq)  # align ends (decode-friendly)
+        jk = jnp.arange(sk)[None, :]
+        mask = jk < end                            # padded / unwritten cache rows
+        if causal:
+            mask &= jk <= iq
+        if window is not None:
+            mask &= jk > iq - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)        # fully-masked rows -> 0
+    out = jnp.einsum("bngqk,bnkd->bngqd", p, vf)
+    out = out.reshape(b, hq, sq, v.shape[-1])  # dv != dqk in MLA
+    return out.astype(q.dtype)

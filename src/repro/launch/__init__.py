@@ -1,0 +1,1 @@
+"""Launchers: production mesh, sharding rules, dry-run, train/serve drivers."""

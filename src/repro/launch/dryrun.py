@@ -1,0 +1,444 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY in this process — smoke tests
+# and benchmarks see the real 1-device CPU.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, build the production mesh
+(single-pod 16x16 = 256 chips, multi-pod 2x16x16 = 512 chips), lower the
+REAL train_step / serve_step with the production in/out shardings against
+ShapeDtypeStruct inputs (zero allocation), ``.compile()`` it, and record:
+
+  * memory_analysis()      — proof the cell fits (bytes per device),
+  * cost_analysis()        — FLOPs / bytes for the roofline (§Roofline),
+  * collective bytes       — parsed from the post-SPMD HLO text,
+  * the 3-term roofline    — repro/roofline/analysis.py.
+
+Results are written incrementally to benchmarks/results/dryrun/<cell>.json
+so an interrupted sweep resumes.  Failures (sharding mismatch, OOM at
+compile, unsupported collective) are bugs in the system — the sweep reports
+them and exits nonzero.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod-only|--single-only]
+"""
+# (no `from __future__ import annotations`: the XLA_FLAGS lines must be first)
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models import scan_util
+from repro.models.lm import get_model
+from repro.optim.adam import AdamConfig, AdamW
+from repro.roofline.analysis import collective_bytes_from_hlo, roofline_terms
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _leaf_count(structs) -> float:
+    return float(sum(
+        int(jnp.prod(jnp.array(l.shape))) if l.shape else 1
+        for l in jax.tree_util.tree_leaves(structs)))
+
+
+def _param_counts(structs, cfg) -> tuple[float, float]:
+    """(total, active) param counts from eval_shape structs (exact)."""
+    total = expert = 0.0
+
+    def visit(kp, l):
+        nonlocal total, expert
+        n = 1.0
+        for s in l.shape:
+            n *= s
+        total += n
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        if "experts_" in path:
+            expert += n
+
+    jax.tree_util.tree_map_with_path(visit, structs)
+    active = total
+    if cfg.moe is not None and expert:
+        active = total - expert * (1.0 - cfg.moe.top_k / cfg.moe.num_experts)
+    return total, active
+
+
+def _sharded_bytes(structs, shardings, mesh) -> float:
+    """Per-device bytes of a struct pytree under its shardings."""
+    total = 0.0
+    for l, sh in zip(jax.tree_util.tree_leaves(structs),
+                     jax.tree_util.tree_leaves(
+                         shardings, is_leaf=lambda x: hasattr(x, "spec"))):
+        n = l.dtype.itemsize
+        for dim in l.shape:
+            n *= dim
+        shard = 1
+        for part in sh.spec:
+            if part is None:
+                continue
+            axes = (part,) if isinstance(part, str) else part
+            for a in axes:
+                shard *= mesh.shape[a]
+        total += n / shard
+    return total
+
+
+# ---------------------------------------------------------------------------
+# cost probes
+# ---------------------------------------------------------------------------
+# XLA cost_analysis counts a while(scan) body once (models/scan_util.py), so
+# costs come from UNROLLED probe compiles.  Stacks are per-layer homogeneous,
+# hence exactly affine in the probe unit u: cost(u) = a + g*u.  Two probes at
+# small u recover (a, g); extrapolation to the real depth is exact.  Probes
+# always run accum=1 at the full global batch (same total tokens — fwd/bwd
+# cost is accum-invariant); the f32 accumulator's HBM traffic for accum>1 is
+# added analytically (documented in EXPERIMENTS.md §Dry-run).
+
+PROBE_FULL_MAX_LAYERS = 14          # full unroll below this; affine above
+
+
+def _probe_plan(cfg):
+    """(make_cfg(u), u1, u2, u_target) in affine units."""
+    if cfg.encoder_layers > 0:
+        # enc and dec depths are equal (12/12): unit scales both together
+        def make(u):
+            return dataclasses.replace(cfg, num_layers=u, encoder_layers=u,
+                                       grad_accum=1)
+        return make, 2, 4, cfg.num_layers
+    if cfg.shared_attn_every:
+        c = cfg.shared_attn_every
+
+        def make(u):                 # unit = shared-attn group
+            return dataclasses.replace(cfg, num_layers=u * c, grad_accum=1)
+        return make, 1, 2, cfg.num_layers // c
+    if cfg.xlstm is not None:
+        def make(u):
+            keep = tuple(i for i in cfg.xlstm.slstm_at if i < u)
+            return dataclasses.replace(
+                cfg, num_layers=u, grad_accum=1,
+                xlstm=dataclasses.replace(cfg.xlstm, slstm_at=keep))
+        return make, cfg.num_layers, cfg.num_layers, cfg.num_layers
+    nd = cfg.moe.first_dense_layers if cfg.moe else 0
+
+    def make(u):
+        return dataclasses.replace(cfg, num_layers=u, grad_accum=1)
+    if cfg.num_layers <= PROBE_FULL_MAX_LAYERS:
+        return make, cfg.num_layers, cfg.num_layers, cfg.num_layers
+    return make, nd + 2, nd + 4, cfg.num_layers
+
+
+def _compile_probe(cfg, shape, mesh):
+    """Unrolled compile of one probe cfg -> (flops, bytes, coll dict)."""
+    model = get_model(cfg)
+    with shlib.use_mesh(mesh), shlib.arch_scope(cfg), scan_util.unrolled():
+        specs = input_specs(cfg, shape, mesh, model=model)
+        p_structs, p_sh = specs["params"]
+        if shape.kind in ("decode", "prefill"):
+            serve_step = (make_serve_step(model) if shape.kind == "decode"
+                      else make_prefill_step(model))
+            t_struct, t_sh = specs["tokens"]
+            s_structs, s_sh = specs["state"]
+            lowered = jax.jit(serve_step, in_shardings=(p_sh, t_sh, s_sh),
+                              out_shardings=(t_sh, s_sh),
+                              donate_argnums=(2,)).lower(
+                                  p_structs, t_struct, s_structs)
+        else:
+            opt = AdamW(AdamConfig(lr=3e-4))
+            train_step = make_train_step(model, opt)
+            b_structs, b_sh = specs["batch"]
+            o_structs = jax.eval_shape(opt.init, p_structs)
+            o_sh = {"m": p_sh, "v": p_sh,
+                    "step": jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec())}
+            loss_sh = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            lowered = jax.jit(train_step, in_shardings=(p_sh, o_sh, b_sh),
+                              out_shardings=(p_sh, o_sh, loss_sh),
+                              donate_argnums=(0, 1)).lower(
+                                  p_structs, o_structs, b_structs)
+        compiled = lowered.compile()
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def _affine_coll(c1, c2, w1, w2) -> dict:
+    out = {}
+    for k in c1:
+        if k == "total":
+            continue
+        out[k] = {"bytes": max(int(w1 * c1[k]["bytes"] + w2 * c2[k]["bytes"]), 0),
+                  "count": max(int(round(w1 * c1[k]["count"] + w2 * c2[k]["count"])), 0)}
+    out["total"] = sum(v["bytes"] for v in out.values())
+    return out
+
+
+def probe_costs(cfg, shape, mesh) -> dict:
+    """Two probe passes per unit: the reference pass gives FLOPs/collectives;
+    the linear-attention-traffic pass (kernels/probe_ctx.py) gives 'bytes
+    accessed' matching the flash kernel's HBM footprint instead of the
+    reference softmax chain.  Skipped where identical (decode: single-token
+    attention reads its cache for real; xlstm: no mha-based attention)."""
+    from repro.kernels.probe_ctx import linear_attention_traffic
+
+    make, u1, u2, u_t = _probe_plan(cfg)
+    needs_linear = shape.kind != "decode" and cfg.xlstm is None
+
+    def probe(u):
+        f, b_ref, c = _compile_probe(make(u), shape, mesh)
+        if needs_linear:
+            with linear_attention_traffic():
+                _, b_lin, _ = _compile_probe(make(u), shape, mesh)
+            return f, b_lin, c
+        return f, b_ref, c
+
+    f1, b1, c1 = probe(u1)
+    if u2 == u1:                     # full unroll — exact
+        flops, byt, coll = f1, b1, c1
+        mode = f"full_unroll(u={u1})"
+    else:
+        f2, b2, c2 = probe(u2)
+        g = (u_t - u1) / (u2 - u1)   # cost(u) = p1 + (p2-p1)*g
+        flops = f1 + (f2 - f1) * g
+        byt = b1 + (b2 - b1) * g
+        coll = _affine_coll(c1, c2, 1.0 - g, g)
+        mode = f"affine(u1={u1},u2={u2},u={u_t})"
+    accum = max(cfg.grad_accum, 1)
+    accum_bytes = 0.0
+    if shape.kind == "train" and accum > 1:
+        # f32 grad accumulator read+write per extra microbatch, per chip
+        n_per_chip = _probe_param_bytes_per_chip(cfg, mesh)
+        accum_bytes = (accum - 1) * 2 * n_per_chip
+        byt += accum_bytes
+    return {"flops": flops, "bytes": byt, "coll": coll, "mode": mode,
+            "accum_bytes_correction": accum_bytes}
+
+
+def _probe_param_bytes_per_chip(cfg, mesh) -> float:
+    model = get_model(cfg)
+    with shlib.use_mesh(mesh), shlib.arch_scope(cfg):
+        specs = input_specs(cfg, SHAPES["train_4k"], mesh, model=model)
+        p_structs, p_sh = specs["params"]
+    n = 0.0
+    for l in jax.tree_util.tree_leaves(p_structs):
+        c = 4.0                                     # f32 accumulator
+        for d in l.shape:
+            c *= d
+        n += c
+    return n / mesh.size                            # FSDP/TP sharded average
+
+
+VARIANTS = {
+    # §Perf hillclimb variants (EXPERIMENTS.md); applied by name with '+'
+    "pure_dp": lambda c: dataclasses.replace(c, pure_dp=True, fsdp=True),
+    "chunked_ce": lambda c: dataclasses.replace(c, chunked_ce=512),
+    "mlstm_chunk": lambda c: dataclasses.replace(
+        c, xlstm=dataclasses.replace(c.xlstm, chunk=256)),
+    "accum4": lambda c: dataclasses.replace(c, grad_accum=4),
+    "grad_cast": lambda c: dataclasses.replace(c, bf16_grad_stream=True),
+    "bf16_moments": lambda c: c,     # moment dtype handled via CLI flag
+}
+
+
+def apply_variant(cfg, variant: str):
+    for name in variant.split("+"):
+        if name:
+            cfg = VARIANTS[name](cfg)
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opt_moment_dtype: str = "float32", probe: bool = True,
+             variant: str = "") -> dict:
+    cfg = apply_variant(get_config(arch), variant)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    model = get_model(cfg)
+    t0 = time.time()
+
+    with shlib.use_mesh(mesh), shlib.arch_scope(cfg):
+        specs = input_specs(cfg, shape, mesh, model=model)
+        p_structs, p_sh = specs["params"]
+        n_total, n_active = _param_counts(p_structs, cfg)
+
+        if shape.kind in ("decode", "prefill"):
+            serve_step = (make_serve_step(model) if shape.kind == "decode"
+                      else make_prefill_step(model))
+            t_struct, t_sh = specs["tokens"]
+            s_structs, s_sh = specs["state"]
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_sh, t_sh, s_sh),
+                             out_shardings=(t_sh, s_sh),
+                             donate_argnums=(2,))   # state updated in place
+            lowered = jitted.lower(p_structs, t_struct, s_structs)
+            arg_bytes = (_sharded_bytes(p_structs, p_sh, mesh)
+                         + _sharded_bytes(s_structs, s_sh, mesh))
+        else:
+            mdt = jnp.bfloat16 if opt_moment_dtype == "bfloat16" else jnp.float32
+            opt = AdamW(AdamConfig(lr=3e-4, moment_dtype=mdt))
+            train_step = make_train_step(model, opt)
+            b_structs, b_sh = specs["batch"]
+            o_structs = jax.eval_shape(opt.init, p_structs)
+            o_sh = {"m": p_sh, "v": p_sh,
+                    "step": jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec())}
+            loss_sh = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            jitted = jax.jit(train_step,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, loss_sh),
+                             donate_argnums=(0, 1))  # params/opt in place
+            lowered = jitted.lower(p_structs, o_structs, b_structs)
+            arg_bytes = (_sharded_bytes(p_structs, p_sh, mesh)
+                         + _sharded_bytes(o_structs, o_sh, mesh))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- artifacts -------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        }
+    except Exception as e:                                   # CPU backend gaps
+        mem_d = {"error": str(e)}
+    hlo_len = len(compiled.as_text())
+    del compiled, lowered, jitted
+
+    # cost probes (unrolled; scan bodies fully counted — see scan_util).
+    # The multi-pod pass is the shard/compile proof only (§Roofline is
+    # single-pod), so probes are skipped there unless forced.
+    t0p = time.time()
+    probe_d = probe_costs(cfg, shape, mesh) if probe else None
+    t_probe = time.time() - t0p
+    terms = (roofline_terms(probe_d["flops"], probe_d["bytes"],
+                            probe_d["coll"], cfg, shape, chips,
+                            n_active=n_active) if probe else None)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "status": "ok",
+        "kind": shape.kind,
+        "grad_accum": cfg.grad_accum,
+        "params_total": n_total, "params_active": n_active,
+        "arg_bytes_per_device": arg_bytes,
+        "memory_analysis": mem_d,
+        "probe_mode": probe_d["mode"] if probe else "skipped(multipod)",
+        "cost_flops_per_device": probe_d["flops"] if probe else None,
+        "cost_bytes_per_device": probe_d["bytes"] if probe else None,
+        "roofline": terms.as_dict() if probe else None,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "probe_s": round(t_probe, 2),
+        "hlo_bytes": hlo_len,
+    }
+    return rec
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool,
+              variant: str = "") -> Path:
+    mesh = "multi" if multi_pod else "single"
+    tag = f"__{variant.replace('+', '_')}" if variant else ""
+    return RESULTS_DIR / f"{arch}__{shape_name}__{mesh}{tag}.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true",
+                    help="run the 2x16x16 mesh (default: single-pod 16x16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true", help="ignore cached cells")
+    ap.add_argument("--moment-dtype", default=None,
+                    help="override optimizer moment dtype (bfloat16 for MoE)")
+    ap.add_argument("--variant", default="",
+                    help="'+'-joined §Perf variant names (see VARIANTS)")
+    args = ap.parse_args(argv)
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.multipod] if not args.both_meshes else [False, True]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                path = cell_path(arch, shape_name, mp, args.variant)
+                if path.exists() and not args.force:
+                    print(f"[cached] {path.name}")
+                    continue
+                label = f"{arch} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+                print(f"[run] {label}", flush=True)
+                try:
+                    mdt = args.moment_dtype or (
+                        "bfloat16" if get_config(arch).fsdp else "float32")
+                    rec = run_cell(arch, shape_name, mp, opt_moment_dtype=mdt,
+                                   probe=not mp, variant=args.variant)
+                    jax.clear_caches()
+                except Exception:
+                    failures.append(label)
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "variant": args.variant, "status": "failed",
+                           "traceback": traceback.format_exc()}
+                    print(rec["traceback"], file=sys.stderr)
+                path.write_text(json.dumps(rec, indent=1))
+                if rec["status"] == "ok" and rec.get("roofline"):
+                    r = rec["roofline"]
+                    print(f"  ok: dominant={r['dominant']} "
+                          f"compute={r['compute_s']:.4f}s "
+                          f"memory={r['memory_s']:.4f}s "
+                          f"collective={r['collective_s']:.4f}s "
+                          f"frac={r['roofline_fraction']:.3f} "
+                          f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                          flush=True)
+                elif rec["status"] == "ok":
+                    print(f"  ok (compile proof only): "
+                          f"lower {rec['lower_s']}s compile {rec['compile_s']}s",
+                          flush=True)
+                elif rec["status"] == "skipped":
+                    print(f"  skipped: {rec['reason']}")
+    if failures:
+        print(f"\nFAILED cells ({len(failures)}):", *failures, sep="\n  ")
+        return 1
+    print("\nall requested cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

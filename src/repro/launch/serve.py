@@ -1,0 +1,157 @@
+"""Batched decode engine (the LM zoo's serving path).
+
+Design (lockstep batched decoding):
+
+* Requests are grouped into batches of ``max_batch`` by EXACT prompt length
+  (the decode state keeps one scalar position for the whole batch — lockstep.
+  Production engines left-pad + per-slot offsets / paged KV; exact-length
+  grouping keeps the compiled step identical and is the documented
+  simplification — DESIGN.md §4).
+* One prefill call (decode_step over the S prompt tokens — fills the KV
+  cache / recurrent state), then token-by-token greedy or temperature
+  sampling; per-slot EOS tracking; a finished slot's tokens are ignored.
+* The compiled step is cached per (batch, prompt_len bucket, cache_len) —
+  steady-state serving reuses one executable.
+
+Works for every family: attention archs carry KV caches, SSM/xLSTM carry
+O(1) recurrent state, enc-dec prefills the encoder via ``prefill_encoder``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec
+from repro.models.lm import ModelAPI, get_model
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                   # -1: never stops early
+
+
+@dataclasses.dataclass
+class Completion:
+    tokens: np.ndarray                 # [<=max_new_tokens]
+    prefill_s: float
+    decode_s: float
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, max_batch: int = 8,
+                 cache_margin: int = 64, rng_seed: int = 0,
+                 temperature: float = 0.0):
+        self.cfg = cfg
+        self.model: ModelAPI = get_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_margin = cache_margin
+        self.temperature = temperature
+        self._rng = jax.random.PRNGKey(rng_seed)
+        self._step_cache: dict = {}
+
+    # ------------------------------------------------------------------
+    def _decode_fn(self):
+        if "step" not in self._step_cache:
+            model = self.model
+            temp = self.temperature
+
+            @jax.jit
+            def step(params, tokens, state, key):
+                logits, state = model.decode_step(params, tokens, state)
+                if temp > 0.0:
+                    nxt = jax.random.categorical(key, logits / temp, axis=-1)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1)
+                return nxt.astype(jnp.int32)[:, None], state
+
+            self._step_cache["step"] = step
+        return self._step_cache["step"]
+
+    def _init_state(self, batch: int, cache_len: int, enc_len: int = 0):
+        cfg = self.cfg
+        if cfg.encoder_layers > 0:
+            return self.model.decode_init(batch, cache_len, enc_len)
+        if cfg.xlstm is not None:
+            return self.model.decode_init(batch)
+        return self.model.decode_init(batch, cache_len)
+
+    # ------------------------------------------------------------------
+    def generate_batch(self, requests: Sequence[Request],
+                       frame_embeds: Optional[np.ndarray] = None
+                       ) -> list[Completion]:
+        """All requests must share a prompt length (exact-length batching)."""
+        assert requests and len(requests) <= self.max_batch
+        s = len(requests[0].prompt)
+        assert all(len(r.prompt) == s for r in requests), \
+            "exact-length batching: group requests by prompt length"
+        b = len(requests)
+        max_new = max(r.max_new_tokens for r in requests)
+        cache_len = s + max_new + self.cache_margin
+
+        enc_len = frame_embeds.shape[1] if frame_embeds is not None else 0
+        state = self._init_state(b, cache_len, enc_len)
+        if self.cfg.encoder_layers > 0:
+            assert frame_embeds is not None, "enc-dec serving needs frames"
+            state["cross"] = encdec.prefill_encoder(
+                self.params, self.cfg, jnp.asarray(frame_embeds))
+
+        prompts = jnp.asarray(np.stack([r.prompt for r in requests]), jnp.int32)
+        step = self._decode_fn()
+        self._rng, k = jax.random.split(self._rng)
+
+        t0 = time.perf_counter()
+        nxt, state = step(self.params, prompts, state, k)
+        nxt.block_until_ready()
+        prefill_s = time.perf_counter() - t0
+
+        out = np.full((b, max_new), -1, np.int32)
+        done = np.zeros(b, bool)
+        steps = 0
+        t0 = time.perf_counter()
+        for i in range(max_new):
+            cur = np.asarray(nxt)[:, 0]
+            for j, r in enumerate(requests):
+                if not done[j] and i < r.max_new_tokens:
+                    out[j, i] = cur[j]
+                    if cur[j] == r.eos_id or i + 1 >= r.max_new_tokens:
+                        done[j] = True
+            steps += 1
+            if done.all():
+                break
+            self._rng, k = jax.random.split(self._rng)
+            nxt, state = step(self.params, nxt, state, k)
+        decode_s = time.perf_counter() - t0
+
+        comps = []
+        for j, r in enumerate(requests):
+            toks = out[j][out[j] >= 0][: r.max_new_tokens]
+            comps.append(Completion(tokens=toks, prefill_s=prefill_s,
+                                    decode_s=decode_s, steps=steps))
+        return comps
+
+    def serve(self, requests: Sequence[Request], **kw) -> list[Completion]:
+        """Group by prompt length, batch up to max_batch, run rounds."""
+        by_len: dict[int, list[Request]] = {}
+        order: dict[int, list[int]] = {}
+        for i, r in enumerate(requests):
+            by_len.setdefault(len(r.prompt), []).append(r)
+            order.setdefault(len(r.prompt), []).append(i)
+        results: list[Optional[Completion]] = [None] * len(requests)
+        for L, group in by_len.items():
+            idxs = order[L]
+            for lo in range(0, len(group), self.max_batch):
+                chunk = group[lo:lo + self.max_batch]
+                comps = self.generate_batch(chunk, **kw)
+                for k_i, c in zip(idxs[lo:lo + self.max_batch], comps):
+                    results[k_i] = c
+        return results  # type: ignore[return-value]

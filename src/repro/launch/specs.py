@@ -1,0 +1,179 @@
+"""Input / state / parameter specs for the dry-run and launchers.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input — shardable, no device allocation — the
+pattern required by the multi-pod dry-run (system instructions §MULTI-POD).
+
+Decode state sharding rules (leaf name + trailing-rank keyed; leading
+stacked-layer dims replicate):
+
+  k/v        [L,B,Hkv,S,Dh] -> (None, batch, model, seq, None)
+  slot_pos   [L,W]          -> replicated (tiny)
+  c_kv       [L,B,S,lora]   -> (None, batch, seq, None)     (MLA latent)
+  k_rope     [L,B,S,rope]   -> (None, batch, seq, None)
+  conv       [.,B,K,C]      -> (batch, None, model)          (Mamba2)
+  ssd        [.,B,H,P,N]    -> (batch, model, None, None)
+  mLSTM c/n/m, sLSTM h/c/n/m -> batch + heads-on-model
+
+'batch' resolves to ('pod','data'); 'seq' to 'data' — each mesh axis is used
+at most once per spec, so decode_32k (B=128) shards batch over pod×data and
+replicates seq, while long_500k (B=1) shards the 500k-token cache over 'data'
+(sequence parallelism) instead.  Axes that do not divide fall back to
+replication (launch/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.sharding import spec_for, tree_param_shardings
+from repro.models.lm import ModelAPI, enc_dec_split, get_model
+
+
+# ---------------------------------------------------------------------------
+# batch structs
+# ---------------------------------------------------------------------------
+
+def train_batch_structs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.encoder_layers > 0:
+        s_enc, s_dec = enc_dec_split(cfg, s)
+        return {
+            "frame_embeds": jax.ShapeDtypeStruct((b, s_enc, cfg.d_model),
+                                                 jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, s_dec), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        p = min(cfg.frontend_tokens, max(s - 1, 1))
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model),
+                                                 jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, s - p), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def batch_shardings(mesh: Mesh, structs: dict, accum_dim: bool = False) -> dict:
+    """Batch leaves shard on the batch dim; a leading [accum] microbatch dim
+    (train_step layout, launch/steps.py) is replicated."""
+    out = {}
+    for name, sd in structs.items():
+        lead = (None,) if accum_dim else ()
+        axes = lead + ("batch",) + (None,) * (len(sd.shape) - len(lead) - 1)
+        out[name] = NamedSharding(mesh, spec_for(mesh, axes, sd.shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode state structs
+# ---------------------------------------------------------------------------
+
+def decode_state_structs(model: ModelAPI, shape: ShapeSpec):
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.encoder_layers > 0:
+        enc_len, _ = enc_dec_split(cfg, s)
+        return jax.eval_shape(lambda: model.decode_init(b, s, enc_len))
+    if cfg.xlstm is not None:
+        return jax.eval_shape(lambda: model.decode_init(b))
+    return jax.eval_shape(lambda: model.decode_init(b, s))
+
+
+# leaf-name -> trailing logical axes, right-aligned; leading stacked dims None
+_STATE_RULES: dict[str, tuple] = {
+    "k": ("batch", "model", "seq", None),
+    "v": ("batch", "model", "seq", None),
+    "c_kv": ("batch", "seq", None),
+    "k_rope": ("batch", "seq", None),
+    "conv": ("batch", None, "model"),
+    "ssd": ("batch", "model", None, None),
+}
+# per-layer ranks of the xLSTM cell states (run-stacked leaves add 1):
+_MLSTM_RULES = {"c": ("batch", "model", None, None),
+                "n": ("batch", "model", None), "m": ("batch", "model")}
+_SLSTM_RULES = {"h": ("batch", "model", None), "c": ("batch", "model", None),
+                "n": ("batch", "model", None), "m": ("batch", "model", None)}
+
+
+def _state_axes(path: str, shape) -> tuple:
+    leaf = path.split("/")[-1]
+    if "mlstm" in path:
+        rule = _MLSTM_RULES.get(leaf)
+    elif "slstm" in path:
+        rule = _SLSTM_RULES.get(leaf)
+    else:
+        rule = _STATE_RULES.get(leaf)
+    if rule is None or len(rule) > len(shape):
+        return (None,) * len(shape)
+    return (None,) * (len(shape) - len(rule)) + rule
+
+
+def state_shardings(mesh: Mesh, state_structs) -> Any:
+    def one(kp, sd):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        axes = _state_axes(path, sd.shape)
+        return NamedSharding(mesh, spec_for(mesh, axes, sd.shape))
+    return jax.tree_util.tree_map_with_path(one, state_structs)
+
+
+# ---------------------------------------------------------------------------
+# params / optimizer
+# ---------------------------------------------------------------------------
+
+def param_structs(model: ModelAPI):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def param_shardings(mesh: Mesh, structs, cfg: ArchConfig):
+    return tree_param_shardings(mesh, structs, fsdp=cfg.fsdp)
+
+
+def opt_state_shardings(mesh: Mesh, opt_structs, params_shardings):
+    """Adam moments follow their parameter's sharding; step replicated."""
+    return {
+        "m": params_shardings,
+        "v": params_shardings,
+        "step": NamedSharding(mesh, spec_for(mesh, (), ())),
+    }
+
+
+# ---------------------------------------------------------------------------
+# top-level: everything the dry-run needs for one (arch x shape)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                model: Optional[ModelAPI] = None) -> dict:
+    """Structs + shardings for one dry-run cell.
+
+    kind == train:  {params, opt, batch} structs/shardings for train_step.
+    kind == decode: {params, tokens, state} structs/shardings for serve_step.
+    (prefill lowers the same loss forward as train without the update.)
+    """
+    model = model or get_model(cfg)
+    p_structs = param_structs(model)
+    p_sh = param_shardings(mesh, p_structs, cfg)
+    out = {"params": (p_structs, p_sh)}
+
+    if shape.kind in ("decode", "prefill"):
+        if shape.kind == "decode":
+            s_new = 1
+        elif cfg.encoder_layers > 0:       # enc-dec: prompt = decoder share
+            _, s_new = enc_dec_split(cfg, shape.seq_len)
+        else:
+            s_new = shape.seq_len
+        t_struct = jax.ShapeDtypeStruct((shape.global_batch, s_new), jnp.int32)
+        t_sh = NamedSharding(mesh, spec_for(mesh, ("batch", None),
+                                            t_struct.shape))
+        s_structs = decode_state_structs(model, shape)
+        out["tokens"] = (t_struct, t_sh)
+        out["state"] = (s_structs, state_shardings(mesh, s_structs))
+    else:
+        from repro.launch.steps import add_accum_dim
+        b_structs = add_accum_dim(cfg, train_batch_structs(cfg, shape))
+        out["batch"] = (b_structs, batch_shardings(mesh, b_structs,
+                                                   accum_dim=True))
+    return out

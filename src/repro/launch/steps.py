@@ -1,0 +1,83 @@
+"""Compiled step builders shared by the dry-run, trainer and server.
+
+``make_train_step``: value_and_grad + AdamW update, with microbatch gradient
+accumulation via ``lax.scan`` (cfg.grad_accum) — batches arrive with a
+leading [accum] dim so no resharding is needed between microbatches, and the
+f32 gradient accumulator inherits the (possibly ZeRO/FSDP-sharded) parameter
+sharding.
+
+``make_serve_step``: one decode step + greedy sampling — returns the next
+token ids, not the [B, vocab] logits, so the step's output traffic is O(B).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scan_util
+from repro.models.lm import ModelAPI
+from repro.optim.adam import AdamW
+
+
+def make_train_step(model: ModelAPI, opt: AdamW) -> Callable:
+    cfg = model.cfg
+    accum = max(cfg.grad_accum, 1)
+
+    def train_step(params, opt_state, batch):
+        """batch leaves: [accum, B/accum, ...]."""
+        if accum == 1:
+            mb = jax.tree_util.tree_map(lambda x: x[0], batch)
+            loss, grads = jax.value_and_grad(model.loss)(params, mb)
+        else:
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(model.loss)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, g_sum), _ = scan_util.scan(body, (jnp.zeros((), jnp.float32), g0),
+                                                batch)
+            loss = loss_sum / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, g_sum)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_serve_step(model: ModelAPI) -> Callable:
+    def serve_step(params, tokens, state):
+        """tokens [B, 1] -> (next_tokens [B, 1], new state)."""
+        logits, new_state = model.decode_step(params, tokens, state)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_state
+
+    return serve_step
+
+
+def make_prefill_step(model: ModelAPI) -> Callable:
+    def prefill_step(params, tokens, state):
+        """tokens [B, S_prompt] -> (next_tokens [B, 1], filled state)."""
+        logits, new_state = model.prefill(params, tokens, state)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_state
+
+    return prefill_step
+
+
+def add_accum_dim(cfg, structs):
+    """[B, ...] batch structs -> [accum, B/accum, ...] (train_step layout)."""
+    accum = max(cfg.grad_accum, 1)
+
+    def one(sd):
+        b = sd.shape[0]
+        assert b % accum == 0, (b, accum)
+        return jax.ShapeDtypeStruct((accum, b // accum) + tuple(sd.shape[1:]),
+                                    sd.dtype)
+
+    return jax.tree_util.tree_map(one, structs)

@@ -1,0 +1,159 @@
+"""LM training driver (deliverable b's end-to-end path for the LM zoo).
+
+Wires together: config -> model -> sharded params -> AdamW -> TokenPipeline
+-> jitted train_step (grad accum, remat) -> CheckpointManager.
+
+Fault-tolerance story exercised here (DESIGN.md §4):
+  * periodic atomic checkpoints carrying step + data-pipeline cursor;
+  * ``--resume`` restarts from the newest checkpoint, and because the data
+    pipeline is seed-deterministic by (epoch, step), the token stream
+    continues bit-exact;
+  * **elastic**: the checkpoint stores unsharded leaves; on load they are
+    placed under the *current* mesh's shardings, so the same run can resume
+    on a different device count (reshard-on-load).
+
+On this CPU container the driver runs REDUCED configs (same code path as the
+production mesh, 1 device); the production mesh path is exercised by the
+dry-run.  ``examples/lm_pretrain.py`` calls ``train_loop`` directly.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.tokens import SyntheticCorpus, TokenPipeline
+from repro.launch import sharding as shlib
+from repro.launch.specs import (batch_shardings, param_shardings,
+                                train_batch_structs)
+from repro.launch.steps import add_accum_dim, make_train_step
+from repro.models.lm import get_model
+from repro.optim.adam import AdamConfig, AdamW
+
+
+@dataclasses.dataclass
+class TrainReport:
+    losses: list
+    step_times: list
+    resumed_from: int = 0
+    checkpoints: int = 0
+
+
+def _extra_builders(cfg) -> dict:
+    """Stub-frontend embedding builders (audio/vlm) for the pipeline."""
+    out = {}
+    if cfg.encoder_layers > 0:
+        def frames(epoch, step, accum, b_local, _cfg=cfg):
+            rng = np.random.default_rng((epoch * 1_000_003 + step) * 2 + 1)
+            from repro.models.lm import enc_dec_split
+            return rng.standard_normal(
+                (accum, b_local, 0, _cfg.d_model), dtype=np.float32)
+        # seq dims are bound in train_loop where seq_len is known
+    return out
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq_len: int,
+               mesh=None, lr: float = 3e-4, seed: int = 0,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+               resume: bool = False, log_every: int = 10) -> TrainReport:
+    model = get_model(cfg)
+    opt = AdamW(AdamConfig(lr=lr, clip_norm=1.0))
+    train_step = make_train_step(model, opt)
+    accum = max(cfg.grad_accum, 1)
+
+    with shlib.use_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(seed))
+        opt_state = opt.init(params)
+        if mesh is not None:
+            p_sh = param_shardings(mesh, params, cfg)
+            params = jax.tree_util.tree_map(jax.device_put, params, p_sh)
+            opt_state = {
+                "m": jax.tree_util.tree_map(jax.device_put, opt_state["m"], p_sh),
+                "v": jax.tree_util.tree_map(jax.device_put, opt_state["v"], p_sh),
+                "step": opt_state["step"],
+            }
+        step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+        mgr = CheckpointManager(ckpt_dir, every=ckpt_every) if ckpt_dir else None
+        start = 0
+        if mgr and resume:
+            (params, opt_state), start, _extra = _restore(mgr, (params, opt_state))
+
+        corpus = SyntheticCorpus(cfg.vocab_size, seed=seed)
+        from repro.models.lm import enc_dec_split
+        if cfg.encoder_layers > 0:
+            s_enc, s_dec = enc_dec_split(cfg, seq_len)
+            def frames(epoch, step, a, b, d=cfg.d_model, s=s_enc):
+                rng = np.random.default_rng((epoch * 1_000_003 + step))
+                return rng.standard_normal((a, b, s, d)).astype(np.float32)
+            pipe = TokenPipeline(corpus, batch, s_dec, accum=accum,
+                                 extra_builders={"frame_embeds": frames})
+        elif cfg.frontend == "vision":
+            p = min(cfg.frontend_tokens, max(seq_len - 1, 1))
+            def patches(epoch, step, a, b, d=cfg.d_model, s=p):
+                rng = np.random.default_rng((epoch * 1_000_003 + step))
+                return rng.standard_normal((a, b, s, d)).astype(np.float32)
+            pipe = TokenPipeline(corpus, batch, seq_len - p, accum=accum,
+                                 extra_builders={"patch_embeds": patches})
+        else:
+            pipe = TokenPipeline(corpus, batch, seq_len, accum=accum)
+
+        report = TrainReport([], [], resumed_from=start)
+        for step, host_batch in enumerate(pipe.epoch(0, steps, start_step=start),
+                                          start=start):
+            t0 = time.perf_counter()
+            dev_batch = jax.tree_util.tree_map(jnp.asarray, host_batch)
+            params, opt_state, loss = step_fn(params, opt_state, dev_batch)
+            loss = float(loss)
+            report.losses.append(loss)
+            report.step_times.append(time.perf_counter() - t0)
+            if mgr:
+                saved = mgr.maybe_save(step + 1, (params, opt_state),
+                                       extra={"seq_len": seq_len, "batch": batch})
+                if saved:
+                    report.checkpoints += 1
+            if log_every and step % log_every == 0:
+                print(f"step {step}: loss {loss:.4f} "
+                      f"({report.step_times[-1]*1e3:.0f} ms)", flush=True)
+        return report
+
+
+def _restore(mgr: CheckpointManager, tree_like):
+    tree, step, extra = mgr.restore_or_init(tree_like)
+    if step:
+        tree = jax.tree_util.tree_map(jnp.asarray, tree)
+    return tree, step, extra
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU container default)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    report = train_loop(cfg, steps=args.steps, batch=args.batch,
+                        seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+                        resume=args.resume)
+    print(f"final loss: {report.losses[-1]:.4f}  "
+          f"mean step: {np.mean(report.step_times[1:]) * 1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: the paper's GNN (GraphSAGE/GCN on padded blocks) + the assigned
+LM-family architectures (see repro/configs)."""

@@ -1,0 +1,149 @@
+"""Shared model building blocks: norms, RoPE, init helpers.
+
+All models are functional: params are plain nested dicts of jnp arrays
+(sharding is inferred from leaf names — launch/sharding.py rule table), and
+every forward is a pure function usable under jit / scan / shard_map.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    scale = scale if scale is not None else (in_dim ** -0.5)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x: [..., S, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, Dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., 0::2], x32[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def activation(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "silu": jax.nn.silu,
+        "swish": jax.nn.silu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    }[name]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token NLL in f32.  logits [..., V], labels [...] int."""
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+@jax.custom_vjp
+def grad_cast(x: jnp.ndarray) -> jnp.ndarray:
+    """Identity whose BACKWARD casts the cotangent to x's dtype.
+
+    §Perf (deepseek iteration 2): f32 cotangents created inside a block
+    (f32 router/gating math, f32 attention internals) can survive the
+    block's transpose and cross TP boundaries at double width even though
+    the primal stream is bf16.  Placing grad_cast on the residual stream at
+    block boundaries pins the backward to the forward's dtype.
+    """
+    return x
+
+
+def _grad_cast_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)      # dtype token (dtypes aren't JAX types)
+
+
+def _grad_cast_bwd(token, ct):
+    return (ct.astype(token.dtype),)
+
+
+grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def chunked_unembed_ce(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """Fused block-wise unembed + cross-entropy (§Perf — beyond-paper).
+
+    h [B,S,d] post-final-norm hiddens; w [d,V] unembedding; labels/mask
+    [B,S].  Scans over S-blocks so the [B,S,V] logits tensor (f32: tens of
+    GB at 4k x 150k-vocab) never materializes — each block's logits live
+    only inside one remat'd scan body (recomputed in backward).
+    """
+    from repro.models import scan_util
+
+    b, s, d = h.shape
+    assert s % chunk == 0, (s, chunk)
+    nb = s // chunk
+    blk = lambda t: jnp.moveaxis(
+        t.reshape(b, nb, chunk, *t.shape[2:]), 1, 0)      # [NB,B,C,...]
+
+    def body(carry, xs):
+        h_b, l_b, m_b = xs
+        logits = (h_b @ w).astype(jnp.float32)            # [B,C,V] one block
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_b[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        nll = (logz - gold) * m_b
+        return (carry[0] + nll.sum(), carry[1] + m_b.sum()), None
+
+    body = jax.checkpoint(body)
+    (tot, cnt), _ = scan_util.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (blk(h), blk(labels), blk(mask.astype(jnp.float32))))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def stack_init(key, n: int, init_fn):
+    """Initialize n copies of a param tree and stack leaves on axis 0."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)

@@ -1,0 +1,191 @@
+"""Encoder-decoder assembly (seamless-m4t): bidirectional encoder over stub
+frame embeddings + causal decoder with cross-attention.
+
+The modality frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings [B, S_enc, d_model] directly (``input_specs``
+provides them).  Encoder and decoder stacks are scan-stacked like
+transformer.py; the decoder block adds a cross-attention sublayer whose K/V
+are projected from the (layer-constant) encoder output inside the scan body.
+
+Decode: per-layer self-attn KV caches + per-layer *precomputed* cross K/V
+([L, B, H, S_enc, Dh] — computed once by ``prefill_encoder``), so each decode
+step re-reads the compressed cross context but never re-runs the encoder.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import constrain
+from repro.models import attention as attn
+from repro.models import scan_util
+from repro.models import ffn as ffn_mod
+from repro.models.common import cross_entropy, embed_init, rms_norm, stack_init
+from repro.models.transformer import embed_tokens, unembed
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _init_enc_block(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attn(ks[0], cfg),
+        "ffn": ffn_mod.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_ffn, dt),
+    }
+
+
+def _init_dec_block(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "norm_x": jnp.zeros((cfg.d_model,), jnp.float32),
+        "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attn(ks[0], cfg),
+        "xattn": attn.init_attn(ks[1], cfg, cross=True),
+        "ffn": ffn_mod.init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.gated_ffn, dt),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "embed_in": embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                               jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "unembed": embed_init(ks[1], cfg.d_model, cfg.vocab_size,
+                              jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32),
+        "encoder": stack_init(ks[2], cfg.encoder_layers,
+                              lambda k: _init_enc_block(k, cfg)),
+        "decoder": stack_init(ks[3], cfg.num_layers,
+                              lambda k: _init_dec_block(k, cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(params: dict, cfg: ArchConfig, frame_embeds: jnp.ndarray) -> jnp.ndarray:
+    """frame_embeds [B, S_enc, d] -> encoder output [B, S_enc, d]."""
+    h = frame_embeds.astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    h = constrain(h, "batch", None, None)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, bp):
+        x = carry
+        a, _ = attn.attn_forward(bp["attn"], cfg, rms_norm(x, bp["norm1"]),
+                                 positions, causal=False)
+        x = x + a
+        x = x + ffn_mod.ffn_forward(bp["ffn"], cfg.ffn_act,
+                                    rms_norm(x, bp["norm2"]), cfg.gated_ffn)
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = scan_util.scan(fn, h, params["encoder"])
+    return h
+
+
+def prefill_encoder(params: dict, cfg: ArchConfig,
+                    frame_embeds: jnp.ndarray) -> dict:
+    """Run the encoder once and project per-decoder-layer cross K/V."""
+    enc_out = encode(params, cfg, frame_embeds)
+
+    def project(bp):
+        k, v = attn.make_cross_kv(bp["xattn"], cfg, enc_out)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(project)(
+        jax.tree_util.tree_map(lambda x: x, params["decoder"]))
+    return cross                              # leaves [L, B, Hkv, S_enc, Dh]
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+def _dec_block(bp, cfg: ArchConfig, h, positions, enc_out=None,
+               cross_kv=None, cache=None, cache_pos=None):
+    """One decoder block.  Cross K/V either projected from enc_out (train)
+    or precomputed (decode)."""
+    a, new_cache = attn.attn_forward(bp["attn"], cfg, rms_norm(h, bp["norm1"]),
+                                     positions, kv_cache=cache,
+                                     cache_pos=cache_pos)
+    h = h + a
+    if cross_kv is None:
+        cross_kv = attn.make_cross_kv(bp["xattn"], cfg, enc_out)
+    xa, _ = attn.attn_forward(bp["xattn"], cfg, rms_norm(h, bp["norm_x"]),
+                              positions, cross_kv=cross_kv)
+    h = h + xa
+    h = h + ffn_mod.ffn_forward(bp["ffn"], cfg.ffn_act,
+                                rms_norm(h, bp["norm2"]), cfg.gated_ffn)
+    return h, new_cache
+
+
+def encdec_loss(params: dict, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    """batch: frame_embeds [B, S_enc, d] + tokens [B, S_dec]."""
+    enc_out = encode(params, cfg, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    h = embed_tokens(params, cfg, tokens)
+    h = constrain(h, "batch", None, None)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, bp):
+        out, _ = _dec_block(bp, cfg, carry, positions, enc_out=enc_out)
+        return out, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = scan_util.scan(fn, h, params["decoder"])
+    logits = unembed(params, cfg, h)
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
+                      enc_len: int) -> dict:
+    """Zero self-attn caches + zero cross-KV slots (filled by prefill)."""
+    one = attn.init_kv_cache(cfg, batch, cache_len)
+    caches = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers, *x.shape)), one)
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim_eff
+    cdt = attn.cache_dtype(cfg)
+    cross = {"k": jnp.zeros((cfg.num_layers, batch, hkv, enc_len, dh), cdt),
+             "v": jnp.zeros((cfg.num_layers, batch, hkv, enc_len, dh), cdt)}
+    return {"caches": caches, "cross": cross, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
+                state: dict) -> tuple[jnp.ndarray, dict]:
+    h = embed_tokens(params, cfg, tokens)
+    b, s, _ = h.shape
+    pos = state["pos"]
+    positions = jnp.broadcast_to(pos + jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+
+    def body(carry, xs):
+        bp, cache, cross = xs
+        out, new_cache = _dec_block(bp, cfg, carry, positions,
+                                    cross_kv=(cross["k"], cross["v"]),
+                                    cache=cache, cache_pos=pos)
+        return out, new_cache
+
+    h, new_caches = scan_util.scan(body, h, (params["decoder"], state["caches"],
+                                           state["cross"]))
+    logits = unembed(params, cfg, h)
+    return logits[:, -1], {"caches": new_caches, "cross": state["cross"],
+                           "pos": pos + s}

@@ -1,0 +1,33 @@
+"""Dense FFN: gated (SwiGLU/GeGLU) and plain MLP variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import constrain
+from repro.models.common import activation, dense_init
+
+
+def init_ffn(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], d_model, d_ff, dtype),
+         "w2": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w3"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def ffn_forward(p: dict, cfg_act: str, x: jnp.ndarray,
+                gated: bool = True) -> jnp.ndarray:
+    """x: [..., d_model] (rank 2 for MoE token-major, rank 3 for [B,S,d])."""
+    act = activation(cfg_act)
+    mid = (None,) * (x.ndim - 2)
+    h = x @ p["w1"]
+    h = constrain(h, "batch", *mid, "model")
+    if gated:
+        h = act(h) * (x @ p["w3"])
+    else:
+        h = act(h)
+    out = h @ p["w2"]
+    return constrain(out, "batch", *mid, None)

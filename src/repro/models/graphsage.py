@@ -1,0 +1,108 @@
+"""GraphSAGE (mean aggregator) on static padded minibatch blocks.
+
+The paper trains 3-layer GraphSAGE (§4.1).  The forward pass consumes the
+:class:`repro.core.minibatch.DeviceBatch` format shared by all four samplers,
+so a single compiled step serves NS / GNS / LADIES / LazyGCN — the importance
+weighting of eq. (10) is entirely inside ``nbr_w``.
+
+Layer ℓ (paper eq. 1/3 with mean aggregator + concat update):
+
+    a_v = Σ_k  w[v,k] · h_src[idx[v,k]]          (weighted neighbor mean)
+    h'_v = g(W · [h_v ; a_v] + b)
+
+The aggregation is the compute hot-spot and maps to the Pallas
+``gather_agg`` kernel (kernels/gather_agg.py); ``aggregate_impl`` picks the
+kernel or the pure-jnp reference (CPU/dry-run default).
+
+The input layer assembles features from the device cache (hits) and the
+streamed rows (misses) — the data-movement core of the paper:
+
+    h0 = where(slot >= 0, cache_table[slot], streamed)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.minibatch import DeviceBatch, LayerBlock
+
+
+@dataclasses.dataclass(frozen=True)
+class SageConfig:
+    feat_dim: int
+    hidden_dim: int = 256              # paper: 256/512
+    num_classes: int = 32
+    num_layers: int = 3
+    aggregate_impl: str = "reference"  # "reference" | "pallas"
+
+
+def reference_aggregate(h_src: jnp.ndarray, nbr_idx: jnp.ndarray,
+                        nbr_w: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp oracle for the gather + weighted-mean aggregation."""
+    gathered = jnp.take(h_src, nbr_idx, axis=0)        # [D, K, F]
+    return jnp.einsum("dk,dkf->df", nbr_w, gathered)
+
+
+def _get_aggregate(impl: str) -> Callable:
+    if impl == "pallas":
+        from repro.kernels.ops import gather_agg
+        return gather_agg
+    return reference_aggregate
+
+
+def init_params(rng: jax.Array, cfg: SageConfig) -> dict:
+    keys = jax.random.split(rng, cfg.num_layers)
+    params = {"layers": []}
+    in_dim = cfg.feat_dim
+    for i in range(cfg.num_layers):
+        out_dim = cfg.num_classes if i == cfg.num_layers - 1 else cfg.hidden_dim
+        scale = jnp.sqrt(2.0 / (2 * in_dim))
+        w = jax.random.normal(keys[i], (2 * in_dim, out_dim), jnp.float32) * scale
+        b = jnp.zeros((out_dim,), jnp.float32)
+        params["layers"].append({"w": w, "b": b})
+        in_dim = out_dim
+    return params
+
+
+def assemble_input(batch: DeviceBatch, cache_table: jnp.ndarray) -> jnp.ndarray:
+    """h0 from cache hits + streamed misses (the GNS data path)."""
+    slots = batch.input_cache_slots
+    hit = slots >= 0
+    cached_rows = jnp.take(cache_table, jnp.clip(slots, 0), axis=0)
+    h0 = jnp.where(hit[:, None], cached_rows, batch.input_streamed)
+    return h0 * batch.input_mask[:, None]
+
+
+def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
+            cfg: SageConfig) -> jnp.ndarray:
+    """Returns logits [B_padded, num_classes]."""
+    agg = _get_aggregate(cfg.aggregate_impl)
+    h = assemble_input(batch, cache_table)
+    for i, (blk, layer) in enumerate(zip(batch.blocks, params["layers"])):
+        h_dst = h[: blk.num_dst]
+        a = agg(h, blk.nbr_idx, blk.nbr_w)
+        z = jnp.concatenate([h_dst, a], axis=-1) @ layer["w"] + layer["b"]
+        h = jax.nn.relu(z) if i < len(batch.blocks) - 1 else z
+        h = h * blk.dst_mask[:, None]
+    return h
+
+
+def loss_fn(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
+            cfg: SageConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    logits = forward(params, batch, cache_table, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch.labels[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    denom = jnp.maximum(batch.label_mask.sum(), 1.0)
+    loss = (nll * batch.label_mask).sum() / denom
+    acc = ((jnp.argmax(logits, -1) == batch.labels) * batch.label_mask).sum() / denom
+    return loss, acc
+
+
+def dummy_cache_table(feat_dim: int) -> jnp.ndarray:
+    """1-row zero cache for samplers without a device cache (NS/LADIES)."""
+    return jnp.zeros((1, feat_dim), jnp.float32)

@@ -1,0 +1,184 @@
+"""Hybrid Mamba2 + shared-attention assembly (zamba2-2.7b).
+
+Structure: ``num_layers`` Mamba2 blocks; after every ``shared_attn_every``
+of them, ONE shared transformer block (self-attn + FFN, a single parameter
+set reused across all invocations) is applied — zamba2's parameter-sharing
+trick.  With 54 layers and cadence 6 that is 9 invocations of the shared
+block, each with its own KV cache (weights shared, state not).
+
+Scan layout: outer ``lax.scan`` over the 9 groups; body = inner scan over the
+6 Mamba2 blocks of the group (params reshaped [G, C, ...]) followed by the
+shared block (params closed over — constant across groups).  Compiles one
+group body regardless of depth.
+
+Pure-SSM configs (shared_attn_every == 0) degenerate to a single scan over
+all Mamba2 blocks — the same module serves both families.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import constrain
+from repro.models import attention as attn
+from repro.models import scan_util
+from repro.models import ffn as ffn_mod
+from repro.models import ssm
+from repro.models.common import embed_init, rms_norm, stack_init
+from repro.models.transformer import embed_tokens, unembed, cross_entropy
+
+
+def group_dims(cfg: ArchConfig) -> tuple[int, int]:
+    """(num_groups, group_size); group_size == num_layers if no shared attn."""
+    c = cfg.shared_attn_every
+    if not c:
+        return 1, cfg.num_layers
+    assert cfg.num_layers % c == 0, (cfg.num_layers, c)
+    return cfg.num_layers // c, c
+
+
+def _init_mamba_block(key, cfg: ArchConfig) -> dict:
+    return {"norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "cell": ssm.init_ssm(key, cfg)}
+
+
+def _init_shared_block(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attn(ks[0], cfg),
+        "ffn": ffn_mod.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_ffn, dt),
+    }
+
+
+def init_hybrid(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    in_key = "embed" if cfg.tie_embeddings else "embed_in"
+    params = {
+        in_key: embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mamba_layers": stack_init(ks[1], cfg.num_layers,
+                                   lambda k: _init_mamba_block(k, cfg)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[2], cfg.d_model, cfg.vocab_size, dt)
+    if cfg.shared_attn_every:
+        params["shared"] = _init_shared_block(ks[3], cfg)
+    return params
+
+
+def _regroup(tree, g: int, c: int):
+    """[L, ...] stacked params -> [G, C, ...]."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape(g, c, *x.shape[1:]), tree)
+
+
+def _mamba_scan(params_c, cfg: ArchConfig, h, states=None):
+    def body(carry, xs):
+        if states is None:
+            bp = xs
+            out, _ = ssm.ssm_forward(bp["cell"], cfg, rms_norm(carry, bp["norm"]))
+            return carry + out, None
+        bp, st = xs
+        out, new_st = ssm.ssm_forward(bp["cell"], cfg,
+                                      rms_norm(carry, bp["norm"]), state=st)
+        return carry + out, new_st
+
+    fn = jax.checkpoint(body) if (cfg.remat and states is None) else body
+    xs = params_c if states is None else (params_c, states)
+    return scan_util.scan(fn, h, xs)
+
+
+def _shared_block(sp, cfg: ArchConfig, h, positions, cache=None, cache_pos=None):
+    a, new_cache = attn.attn_forward(sp["attn"], cfg, rms_norm(h, sp["norm1"]),
+                                     positions, kv_cache=cache,
+                                     cache_pos=cache_pos)
+    h = h + a
+    h = h + ffn_mod.ffn_forward(sp["ffn"], cfg.ffn_act,
+                                rms_norm(h, sp["norm2"]), cfg.gated_ffn)
+    return h, new_cache
+
+
+def hybrid_forward(params: dict, cfg: ArchConfig, tokens: jnp.ndarray):
+    h = embed_tokens(params, cfg, tokens)
+    h = constrain(h, "batch", None, None)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    g, c = group_dims(cfg)
+    grouped = _regroup(params["mamba_layers"], g, c)
+
+    if not cfg.shared_attn_every:
+        h, _ = _mamba_scan(params["mamba_layers"], cfg, h)
+        return unembed(params, cfg, h)
+
+    shared = params["shared"]
+
+    def group_body(carry, params_g):
+        x, _ = _mamba_scan(params_g, cfg, carry)
+        x, _ = _shared_block(shared, cfg, x, positions)
+        return x, None
+
+    h, _ = scan_util.scan(group_body, h, grouped)
+    return unembed(params, cfg, h)
+
+
+def hybrid_loss(params: dict, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    logits = hybrid_forward(params, cfg, tokens)
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    g, c = group_dims(cfg)
+    one = ssm.init_ssm_state(cfg, batch)
+    if cfg.shared_attn_every:
+        mamba = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None, None], (g, c, *x.shape)), one)
+    else:                                  # pure-SSM: flat [L, ...] states
+        mamba = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.num_layers, *x.shape)), one)
+    state = {"mamba": mamba, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.shared_attn_every:
+        kv = attn.init_kv_cache(cfg, batch, cache_len)
+        state["shared_kv"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (g, *x.shape)), kv)
+    return state
+
+
+def decode_step(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
+                state: dict) -> tuple[jnp.ndarray, dict]:
+    h = embed_tokens(params, cfg, tokens)
+    b, s, _ = h.shape
+    pos = state["pos"]
+    positions = jnp.broadcast_to(pos + jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    g, c = group_dims(cfg)
+    grouped = _regroup(params["mamba_layers"], g, c)
+
+    if not cfg.shared_attn_every:
+        h, new_m = _mamba_scan(params["mamba_layers"], cfg, h,
+                               states=state["mamba"])
+        logits = unembed(params, cfg, h)
+        return logits[:, -1], {"mamba": new_m, "pos": pos + s}
+
+    shared = params["shared"]
+
+    def group_body(carry, xs):
+        params_g, m_states, kv = xs
+        x, new_m = _mamba_scan(params_g, cfg, carry, states=m_states)
+        x, new_kv = _shared_block(shared, cfg, x, positions,
+                                  cache=kv, cache_pos=pos)
+        return x, (new_m, new_kv)
+
+    h, (new_m, new_kv) = scan_util.scan(
+        group_body, h, (grouped, state["mamba"], state["shared_kv"]))
+    logits = unembed(params, cfg, h)
+    return logits[:, -1], {"mamba": new_m, "shared_kv": new_kv, "pos": pos + s}

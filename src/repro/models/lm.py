@@ -1,0 +1,126 @@
+"""Unified LM model API — one interface over all 10 assigned architectures.
+
+``get_model(cfg)`` dispatches on the config's family markers and returns a
+:class:`ModelAPI` whose members are pure functions (jit/pjit-safe):
+
+  init(key)                     -> params pytree
+  loss(params, batch)           -> scalar CE      (lowered for train shapes)
+  decode_init(batch, cache_len) -> decode state   (zeros; structure source)
+  decode_step(params, tok, st)  -> (logits, st')  (lowered for decode shapes)
+
+Batch layouts by family (see launch/specs.input_specs):
+  decoder       {"tokens": [B, S]}
+  vlm           {"tokens": [B, S - P], "patch_embeds": [B, P, d]}  (P frontend
+                tokens prepended; total positions == S for roofline parity)
+  audio enc-dec {"frame_embeds": [B, S/4, d], "tokens": [B, 3S/4]} (frontend
+                stub frames + text; total positions == S)
+  ssm/hybrid    {"tokens": [B, S]}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hybrid, transformer, xlstm_lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], jnp.ndarray]
+    decode_init: Callable[..., Any]
+    decode_step: Callable[[Any, jnp.ndarray, Any], tuple]
+    # prefill(params, tokens [B,S], state) -> (logits [B,V], state').
+    # Attention families: decode_step with S tokens (fills the KV cache).
+    # Recurrent families (ssm/xlstm/hybrid): the PARALLEL form — a per-token
+    # recurrence would be wrong for both speed and the dry-run cost model;
+    # final-state emission is omitted (cost delta negligible, DESIGN.md §5).
+    prefill: Callable[[Any, jnp.ndarray, Any], tuple] = None
+
+
+def enc_dec_split(cfg: ArchConfig, seq_len: int) -> tuple[int, int]:
+    """(S_enc, S_dec) with S_enc + S_dec == seq_len (audio enc-dec)."""
+    s_enc = max(seq_len // 4, 1)
+    return s_enc, seq_len - s_enc
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    if cfg.encoder_layers > 0:
+        dec = lambda p, t, s: encdec.decode_step(p, cfg, t, s)
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            loss=lambda p, b: encdec.encdec_loss(p, cfg, b),
+            decode_init=lambda batch, cache_len, enc_len: (
+                encdec.init_decode_state(cfg, batch, cache_len, enc_len)),
+            decode_step=dec,
+            prefill=dec,
+        )
+    if cfg.xlstm is not None:
+        def xl_prefill(p, t, s):
+            logits = xlstm_lm.xlstm_forward(p, cfg, t)
+            return logits[:, -1], s
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: xlstm_lm.init_xlstm_lm(key, cfg),
+            loss=lambda p, b: xlstm_lm.xlstm_loss(p, cfg, b),
+            decode_init=lambda batch, cache_len=0: (
+                xlstm_lm.init_decode_state(cfg, batch)),
+            decode_step=lambda p, t, s: xlstm_lm.decode_step(p, cfg, t, s),
+            prefill=xl_prefill,
+        )
+    if cfg.ssm is not None:
+        def hy_prefill(p, t, s):
+            logits = hybrid.hybrid_forward(p, cfg, t)
+            return logits[:, -1], s
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: hybrid.init_hybrid(key, cfg),
+            loss=lambda p, b: hybrid.hybrid_loss(p, cfg, b),
+            decode_init=lambda batch, cache_len: (
+                hybrid.init_decode_state(cfg, batch, cache_len)),
+            decode_step=lambda p, t, s: hybrid.decode_step(p, cfg, t, s),
+            prefill=hy_prefill,
+        )
+    # decoder-only (dense / moe / mla / vlm-with-patch-prefix)
+    dec = lambda p, t, s: transformer.lm_decode_step(p, cfg, t, s)
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(key, cfg),
+        loss=lambda p, b: transformer.lm_loss(p, cfg, b),
+        decode_init=lambda batch, cache_len: (
+            transformer.init_decode_state(cfg, batch, cache_len)),
+        decode_step=dec,
+        prefill=dec,
+    )
+
+
+def make_batch(cfg: ArchConfig, seq_len: int, batch: int,
+               rng: Optional[jax.Array] = None, vocab_clip: int = 0) -> dict:
+    """Concrete random batch of the family's layout (smoke tests/examples)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    vocab = min(cfg.vocab_size, vocab_clip) if vocab_clip else cfg.vocab_size
+    if cfg.encoder_layers > 0:
+        s_enc, s_dec = enc_dec_split(cfg, seq_len)
+        return {
+            "frame_embeds": jax.random.normal(k1, (batch, s_enc, cfg.d_model),
+                                              jnp.float32),
+            "tokens": jax.random.randint(k2, (batch, s_dec), 0, vocab,
+                                         jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        p = min(cfg.frontend_tokens, max(seq_len - 1, 1))
+        return {
+            "patch_embeds": jax.random.normal(k1, (batch, p, cfg.d_model),
+                                              jnp.float32),
+            "tokens": jax.random.randint(k2, (batch, seq_len - p), 0, vocab,
+                                         jnp.int32),
+        }
+    return {"tokens": jax.random.randint(k2, (batch, seq_len), 0, vocab,
+                                         jnp.int32)}

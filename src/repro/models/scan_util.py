@@ -1,0 +1,46 @@
+"""Scan wrapper with an unroll context for dry-run cost probes.
+
+XLA's ``cost_analysis`` counts a ``while`` (lax.scan) body ONCE, not
+multiplied by the trip count (verified empirically — see
+EXPERIMENTS.md §Dry-run "cost accounting"), so a scanned 28-layer model
+under-reports FLOPs/bytes/collectives by ~28x.  The dry-run therefore
+compiles each cell twice:
+
+  1. the production program (scanned layers) — the compile/shard proof and
+     memory_analysis artifact;
+  2. a cost probe under ``unrolled()`` — every layer/accum scan fully
+     unrolled so cost_analysis and the HLO collective census are exact.
+
+Only LAYER and grad-accum scans go through this wrapper.  Time-step scans
+(sLSTM recurrence, SSD inter-chunk state scan) stay rolled — their
+undercounted share is small (<5%, quantified in EXPERIMENTS.md) and
+unrolling 4k time steps would be un-compilable.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def unroll_scans() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+@contextlib.contextmanager
+def unrolled(on: bool = True):
+    prev = unroll_scans()
+    _state.unroll = on
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def scan(f, init, xs, length=None):
+    """lax.scan that fully unrolls inside an ``unrolled()`` scope."""
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if unroll_scans() else 1)

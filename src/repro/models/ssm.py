@@ -1,0 +1,195 @@
+"""Mamba2 (SSD) block — chunked, matmul-dominant (TPU-native form).
+
+The zamba2 backbone.  The State-Space Dual form computes, per head h with
+scalar decay a_t = exp(dt_t · A_h):
+
+    y_t = C_t · h_t,   h_t = a_t · h_{t-1} + dt_t · B_t ⊗ x_t
+
+Chunked algorithm (Mamba2 paper §6): split S into chunks of Q; the
+intra-chunk part is a (Q×Q) masked-decay attention-like matmul, the
+inter-chunk part is a scan over per-chunk states [H, P, N].  Everything is
+einsum — MXU-friendly, unlike the sequential scan a CUDA kernel would use
+(hardware adaptation noted in DESIGN.md).
+
+Decode is the O(1) recurrent update on [B, H, P, N] state + conv ring buffer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import constrain
+from repro.models.common import dense_init, rms_norm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def init_ssm(key, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 5)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * (s.d_conv ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "ssm_d": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((n_heads,), 1e-2))).astype(jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, d, dt),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jnp.ndarray):
+    s = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, bb, cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn],
+        axis=-1)
+    return z, x, bb, cc, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d.  x: [B,S,C]; w: [K,C].  Returns (y, new_state).
+
+    ``state`` is the last K-1 inputs from the previous call (decode ring
+    buffer); new_state is the updated buffer.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, S+K-1, C]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad[:, :0]
+    return jax.nn.silu(y), new_state
+
+
+def ssm_forward(p: dict, cfg: ArchConfig, x_in: jnp.ndarray,
+                state: Optional[dict] = None):
+    """x_in: [B, S, d].  Returns (y, new_state | None).
+
+    Train/prefill: state None (chunked SSD).  Decode: state holds
+    {"conv": [B,K-1,convdim], "ssd": [B,H,P,N]} and S is typically 1.
+    """
+    s_cfg = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    b, seq, _ = x_in.shape
+    hd, n = s_cfg.head_dim, s_cfg.d_state
+
+    proj = x_in @ p["in_proj"]
+    z, x, bb, cc, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([x, bb, cc], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    x, bb, cc = jnp.split(conv_out, [d_inner, d_inner + s_cfg.n_groups * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                          # [H]
+    decay = jnp.exp(dt * a)                                           # [B,S,H] in (0,1)
+
+    xh = x.reshape(b, seq, n_heads, hd).astype(jnp.float32)
+    # group->head broadcast (n_groups=1 for zamba2)
+    bbh = jnp.repeat(bb.reshape(b, seq, s_cfg.n_groups, n),
+                     n_heads // s_cfg.n_groups, axis=2).astype(jnp.float32)
+    cch = jnp.repeat(cc.reshape(b, seq, s_cfg.n_groups, n),
+                     n_heads // s_cfg.n_groups, axis=2).astype(jnp.float32)
+    dx = xh * dt[..., None]                                           # dt·x
+
+    if state is not None:
+        # recurrent decode: h' = a h + B ⊗ dx ; y = C·h' + D x
+        h0 = state["ssd"].astype(jnp.float32)                         # [B,H,P,N]
+
+        def step(h, inp):
+            a_t, b_t, c_t, dx_t = inp                                  # [B,H],[B,H,N],...
+            h = h * a_t[..., None, None] + jnp.einsum("bhp,bhn->bhpn", dx_t, b_t)
+            y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+            return h, y
+
+        seq_first = lambda t: jnp.moveaxis(t, 1, 0)
+        hT, ys = jax.lax.scan(step, h0, (seq_first(decay), seq_first(bbh),
+                                         seq_first(cch), seq_first(dx)))
+        y = jnp.moveaxis(ys, 0, 1)                                    # [B,S,H,P]
+        y = y + xh * p["ssm_d"][None, None, :, None]
+        new_state = {"conv": new_conv, "ssd": hT.astype(state["ssd"].dtype)}
+    else:
+        y = _ssd_chunked(decay, bbh, cch, dx, s_cfg.chunk)
+        y = y + xh * p["ssm_d"][None, None, :, None]
+        new_state = None
+
+    y = y.reshape(b, seq, d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_scale"])
+    out = y @ p["out_proj"]
+    return constrain(out, "batch", None, None), new_state
+
+
+def _ssd_chunked(decay, bbh, cch, dx, chunk: int):
+    """Chunked SSD.  decay [B,S,H]; bbh/cch [B,S,H,N]; dx [B,S,H,P] -> [B,S,H,P]."""
+    b, s, h = decay.shape
+    n = bbh.shape[-1]
+    p = dx.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+    rs = lambda t: t.reshape(b, nc, q, *t.shape[2:])
+    decay_c, b_c, c_c, dx_c = rs(decay), rs(bbh), rs(cch), rs(dx)
+
+    logd = jnp.log(jnp.maximum(decay_c, 1e-20))                  # [B,NC,Q,H]
+    cum = jnp.cumsum(logd, axis=2)                               # Σ_{r<=t} log a_r
+    total = cum[:, :, -1]                                        # [B,NC,H]
+
+    # intra-chunk: L[t,s] = exp(cum[t]-cum[s]) for s<=t (decay between s and t)
+    lt = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # [B,NC,Q,Q,H]
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, None, ..., None]
+    lmat = jnp.where(mask, jnp.exp(lt), 0.0)                     # [B,NC,Q,Q,H]
+    scores = jnp.einsum("bcthn,bcshn->bctsh", c_c, b_c) * lmat
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", scores, dx_c)
+
+    # chunk-final states: S_c = Σ_s (a_{s+1..Q}) B_s ⊗ dx_s
+    decay_after = jnp.exp(total[:, :, None, :] - cum)            # [B,NC,Q,H]
+    chunk_state = jnp.einsum("bcsh,bcshn,bcshp->bchnp",
+                             decay_after, b_c, dx_c)             # [B,NC,H,N,P]
+
+    # inter-chunk scan over chunk states
+    def scan_fn(carry, inp):
+        tot, st = inp                                            # [B,H], [B,H,N,P]
+        new = carry * jnp.exp(tot)[..., None, None] + st
+        return new, carry                                        # emit PREVIOUS state
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(chunk_state, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                # [B,NC,H,N,P]
+
+    # inter-chunk contribution: y_t += (a_{1..t}) C_t · h_prev
+    decay_into = jnp.exp(cum)                                    # [B,NC,Q,H]
+    y_inter = jnp.einsum("bcthn,bchnp->bcthp", c_c, prev_states) * decay_into[..., None]
+    return (y_intra + y_inter).reshape(b, s, h, p)
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), dtype),
+    }

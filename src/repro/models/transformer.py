@@ -1,0 +1,230 @@
+"""Decoder-only LM assembly: dense / MoE / MLA / VLM backbones.
+
+Layers are *stacked* (params carry a leading L dim) and applied with
+``jax.lax.scan`` so XLA compiles one block body regardless of depth — the
+difference between minutes and hours when dry-running 60-layer deepseek on a
+512-device mesh.  Heterogeneous stacks (deepseek's leading dense layers) are
+expressed as consecutive scan groups.
+
+``remat=True`` wraps the block in jax.checkpoint (policy: save nothing,
+recompute in backward) — with microbatch accumulation in launch/train.py this
+is what bounds activation memory for train_4k on the big archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import constrain
+from repro.models import attention as attn
+from repro.models import scan_util
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (cross_entropy, embed_init, grad_cast,
+                                 rms_norm, stack_init)
+
+
+# ---------------------------------------------------------------------------
+# one transformer block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 2)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    p = {
+        "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attn(ks[0], cfg),
+    }
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = ffn_mod.init_ffn(ks[1], cfg.d_model, cfg.d_ff,
+                                    cfg.gated_ffn, dt)
+    return p
+
+
+def block_forward(bp: dict, cfg: ArchConfig, h: jnp.ndarray,
+                  positions: jnp.ndarray, kind: str,
+                  cache: Optional[dict] = None,
+                  cache_pos=None):
+    h = constrain(h, "batch", None, None)
+    a, new_cache = attn.attn_forward(bp["attn"], cfg, rms_norm(h, bp["norm1"]),
+                                     positions, kv_cache=cache,
+                                     cache_pos=cache_pos)
+    h = h + a
+    x2 = rms_norm(h, bp["norm2"])
+    if kind == "moe":
+        h = h + moe_mod.moe_forward(bp["moe"], cfg, x2)
+    else:
+        h = h + ffn_mod.ffn_forward(bp["ffn"], cfg.ffn_act, x2, cfg.gated_ffn)
+    if cfg.bf16_grad_stream:
+        h = grad_cast(h)          # backward cotangent pinned to h.dtype
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# layer groups
+# ---------------------------------------------------------------------------
+
+def layer_groups(cfg: ArchConfig) -> list[tuple[str, int, str]]:
+    """[(group_name, num_layers, block_kind)] — scan groups in order."""
+    if cfg.moe is not None:
+        nd = cfg.moe.first_dense_layers
+        groups = []
+        if nd:
+            groups.append(("layers_dense", nd, "dense"))
+        groups.append(("layers_moe", cfg.num_layers - nd, "moe"))
+        return groups
+    return [("layers", cfg.num_layers, "dense")]
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 3 + len(layer_groups(cfg)))
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    # untied input tables are named embed_in and shard on d_model (local
+    # row gather + sharded grads); tied tables shard on vocab so the UNEMBED
+    # side stays local — launch/sharding.py rule table, EXPERIMENTS.md §Perf.
+    in_key = "embed" if cfg.tie_embeddings else "embed_in"
+    params = {
+        in_key: embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[1], cfg.d_model, cfg.vocab_size, dt)
+    for i, (name, n, kind) in enumerate(layer_groups(cfg)):
+        params[name] = stack_init(ks[3 + i], n,
+                                  lambda k, kind=kind: init_block(k, cfg, kind))
+    return params
+
+
+def _scan_group(params_g, cfg: ArchConfig, h, positions, kind: str,
+                caches=None, cache_pos=None):
+    body = functools.partial(block_forward, cfg=cfg, positions=positions,
+                             kind=kind, cache_pos=cache_pos)
+
+    def scan_fn(carry, xs):
+        if caches is None:
+            bp = xs
+            out, _ = body(bp, h=carry)
+            return out, None
+        bp, cache = xs
+        out, new_cache = body(bp, h=carry, cache=cache)
+        return out, new_cache
+
+    fn = jax.checkpoint(scan_fn) if (cfg.remat and caches is None) else scan_fn
+    xs = params_g if caches is None else (params_g, caches)
+    h, new_caches = scan_util.scan(fn, h, xs)
+    return h, new_caches
+
+
+# ---------------------------------------------------------------------------
+# train / prefill forward
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    table = params["embed_in"] if "embed_in" in params else params["embed"]
+    h = jnp.take(table, tokens, axis=0)
+    if cfg.scale_embed:
+        h = h * (cfg.d_model ** 0.5)
+    return h
+
+
+def unembed(params, cfg: ArchConfig, h: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(h, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["unembed"]
+    return constrain(logits, "batch", None, "model")
+
+
+def lm_forward(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
+               prefix_embeds: Optional[jnp.ndarray] = None,
+               return_hidden: bool = False) -> jnp.ndarray:
+    """tokens [B, S_text]; prefix_embeds [B, P, d] (VLM stub frontend)."""
+    h = embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    h = constrain(h, "batch", None, None)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    for name, n, kind in layer_groups(cfg):
+        h, _ = _scan_group(params[name], cfg, h, positions, kind)
+    if return_hidden:
+        return h
+    return unembed(params, cfg, h)
+
+
+def unembed_weight(params, cfg: ArchConfig) -> jnp.ndarray:
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def lm_loss(params: dict, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    """Next-token CE.  batch: tokens [B,S] (+ patch_embeds for vlm)."""
+    tokens = batch["tokens"]
+    prefix = batch.get("patch_embeds")
+    if cfg.chunked_ce:
+        from repro.models.common import chunked_unembed_ce
+        h = lm_forward(params, cfg, tokens, prefix_embeds=prefix,
+                       return_hidden=True)
+        if prefix is not None:
+            h = h[:, prefix.shape[1]:]
+        h = rms_norm(h, params["final_norm"])
+        b, s = tokens.shape
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)],
+            axis=1)
+        return chunked_unembed_ce(h, unembed_weight(params, cfg), labels,
+                                  mask, cfg.chunked_ce)
+    logits = lm_forward(params, cfg, tokens, prefix_embeds=prefix)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]          # text positions only
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    """Stacked per-layer KV caches (+ scalar position).
+
+    SWA archs allocate a ring buffer of window size — the memory feature that
+    qualifies them for long_500k (DESIGN.md §5).
+    """
+    eff_len = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    groups = {}
+    for name, n, _ in layer_groups(cfg):
+        if cfg.mla is not None:
+            one = attn.init_mla_cache(cfg, batch, eff_len)
+        else:
+            one = attn.init_kv_cache(cfg, batch, eff_len)
+        groups[name] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), one)
+    return {"caches": groups, "pos": jnp.zeros((), jnp.int32)}
+
+
+def lm_decode_step(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
+                   state: dict) -> tuple[jnp.ndarray, dict]:
+    """tokens [B, S_new] (S_new=1 for autoregressive decode)."""
+    h = embed_tokens(params, cfg, tokens)
+    b, s, _ = h.shape
+    pos = state["pos"]
+    positions = pos + jnp.arange(s, dtype=jnp.int32)[None]
+    positions = jnp.broadcast_to(positions, (b, s))
+    cache_pos = pos          # absolute; SWA ring wrap handled in attn_forward
+    new_caches = {}
+    for name, n, kind in layer_groups(cfg):
+        h, nc = _scan_group(params[name], cfg, h, positions, kind,
+                            caches=state["caches"][name], cache_pos=cache_pos)
+        new_caches[name] = nc
+    logits = unembed(params, cfg, h)
+    return logits[:, -1], {"caches": new_caches, "pos": pos + s}

@@ -1,0 +1,267 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) + sLSTM (scalar, scan).
+
+xlstm-125m config: 12 blocks, mostly mLSTM with sLSTM at configured indices
+(the paper's xLSTM[7:1] ratio).  Both carry O(1) decode state, which is what
+qualifies the arch for the 500k-token decode shape.
+
+mLSTM parallel (train) form — stabilized exponential gating (xLSTM paper,
+eq. 19-27): with log-forget cumsums F_t and input gates ĩ_s,
+
+    D[t,s] = F_t - F_s + ĩ_s   (s <= t)
+    m_t    = max_s D[t,s]
+    W[t,s] = exp(D[t,s] - m_t)
+    h_t    = Σ_s W[t,s] (q_t·k_s) v_s / max(|Σ_s W (q·k)|, exp(-m_t))
+
+Decode form: matrix memory C [B,H,Dqk,Dv], normalizer n [B,H,Dqk], running
+max m [B,H].
+
+sLSTM: per-head recurrent with exponential gates + stabilizer; sequential by
+construction -> lax.scan over time (the paper's CUDA kernel has no TPU
+analogue; the scan is the idiomatic mapping, noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import scan_util
+from repro.launch.sharding import constrain
+from repro.models.common import dense_init, rms_norm
+
+
+def _dims(cfg: ArchConfig):
+    x = cfg.xlstm
+    d_inner = int(x.proj_factor * cfg.d_model)
+    d_qk = int(x.qk_factor * d_inner)
+    return d_inner, d_qk, x.num_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_inner, d_qk, nh = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d_inner, dt),      # x -> (inner, gate)
+        "wq": dense_init(ks[1], d_inner, d_qk, dt),
+        "wk": dense_init(ks[2], d_inner, d_qk, dt),
+        "wv": dense_init(ks[3], d_inner, d_inner, dt),
+        "w_if": dense_init(ks[4], d_inner, 2 * nh, dt),     # input/forget gates
+        "w_o": dense_init(ks[5], d_inner, d_inner, dt),     # output gate
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+        "w_down": dense_init(ks[6], d_inner, d, dt),
+    }
+
+
+def mlstm_forward(p: dict, cfg: ArchConfig, x: jnp.ndarray,
+                  state: Optional[dict] = None):
+    d_inner, d_qk, nh = _dims(cfg)
+    b, s, _ = x.shape
+    hq, hv = d_qk // nh, d_inner // nh
+
+    up = x @ p["w_up"]
+    inner, gate = jnp.split(up, 2, axis=-1)
+    q = (inner @ p["wq"]).reshape(b, s, nh, hq).transpose(0, 2, 1, 3)
+    k = (inner @ p["wk"]).reshape(b, s, nh, hq).transpose(0, 2, 1, 3)
+    v = (inner @ p["wv"]).reshape(b, s, nh, hv).transpose(0, 2, 1, 3)
+    q = constrain(q, "batch", "model", None, None)
+    gates = (inner @ p["w_if"]).astype(jnp.float32).reshape(b, s, nh, 2)
+    i_raw = gates[..., 0].transpose(0, 2, 1)                   # [B,H,S]
+    f_raw = gates[..., 1].transpose(0, 2, 1)
+    logf = jax.nn.log_sigmoid(f_raw)
+    scale = hq ** -0.5
+
+    if state is None:
+        if cfg.xlstm.chunk and s > cfg.xlstm.chunk and s % cfg.xlstm.chunk == 0:
+            h = _mlstm_chunked(q.astype(jnp.float32) * scale,
+                               k.astype(jnp.float32), v.astype(jnp.float32),
+                               i_raw, logf, cfg.xlstm.chunk)
+        else:
+            fcum = jnp.cumsum(logf, axis=-1)                   # F_t
+            dmat = fcum[..., :, None] - fcum[..., None, :] + i_raw[..., None, :]
+            mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+            dmat = jnp.where(mask[None, None], dmat, -jnp.inf)
+            m = dmat.max(axis=-1)                              # [B,H,S]
+            w = jnp.exp(dmat - m[..., None])
+            scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                                k.astype(jnp.float32)) * scale
+            cw = scores * w
+            denom = jnp.maximum(jnp.abs(cw.sum(-1)), jnp.exp(-m))  # [B,H,S]
+            h = jnp.einsum("bhts,bhsv->bhtv", cw, v.astype(jnp.float32))
+            h = h / denom[..., None]
+        new_state = None
+    else:
+        # recurrent decode over s steps
+        def step(carry, inp):
+            c_mat, n_vec, m_run = carry
+            q_t, k_t, v_t, i_t, lf_t = inp                     # [B,H,hq],... [B,H]
+            m_new = jnp.maximum(lf_t + m_run, i_t)
+            fg = jnp.exp(lf_t + m_run - m_new)
+            ig = jnp.exp(i_t - m_new)
+            c_mat = fg[..., None, None] * c_mat + ig[..., None, None] * \
+                jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+            n_vec = fg[..., None] * n_vec + ig[..., None] * k_t
+            num = jnp.einsum("bhk,bhkv->bhv", q_t * scale, c_mat)
+            den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q_t * scale, n_vec)),
+                              jnp.exp(-m_new))
+            return (c_mat, n_vec, m_new), num / den[..., None]
+
+        sf = lambda t: jnp.moveaxis(t, 2, 0)
+        carry0 = (state["c"].astype(jnp.float32), state["n"].astype(jnp.float32),
+                  state["m"].astype(jnp.float32))
+        carryT, hs = jax.lax.scan(step, carry0,
+                                  (sf(q.astype(jnp.float32)),
+                                   sf(k.astype(jnp.float32)),
+                                   sf(v.astype(jnp.float32)),
+                                   sf(i_raw), sf(logf)))
+        h = jnp.moveaxis(hs, 0, 2)                             # [B,H,S,hv]
+        new_state = {"c": carryT[0], "n": carryT[1], "m": carryT[2]}
+
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, d_inner).astype(x.dtype)
+    o = jax.nn.sigmoid((inner @ p["w_o"]).astype(jnp.float32)).astype(x.dtype)
+    h = rms_norm(h, p["norm_scale"]) * o * jax.nn.silu(gate)
+    return h @ p["w_down"], new_state
+
+
+def _mlstm_chunked(q, k, v, i_raw, logf, chunk: int):
+    """Chunkwise-parallel mLSTM (TFLA-style; §Perf iteration — beyond-paper).
+
+    q [B,H,S,dq] (pre-scaled), k/v f32, gates i_raw/logf [B,H,S].  Splits S
+    into Q-chunks: intra-chunk uses the stabilized parallel form on [Q,Q]
+    tiles; inter-chunk carries the matrix memory (C, n, m) recurrently —
+    exactly the decode recurrence, batched per chunk.  Unrolled algebra of
+    the per-step recurrence (stabilizer maxes combine associatively):
+
+      m_t = max(F_t + m0, max_{s<=t} (F_t - F_s + i_s))
+      C_t = e^{F_t+m0-m_t} C0 + sum_s e^{F_t-F_s+i_s-m_t} k_s v_s^T
+      h_t = [e^{F_t+m0-m_t} (q_t C0) + sum_s W[t,s](q_t k_s) v_s] / denom
+      denom = max(|same with n|, e^{-m_t})
+
+    Memory: O(S*Q) instead of O(S^2) — the quadratic [S,S] decay matrices
+    that dominate the xlstm train_4k/prefill_32k memory term vanish.
+    """
+    b, h, s, dq = q.shape
+    dv = v.shape[-1]
+    nc = s // chunk
+    rs = lambda t: t.reshape(*t.shape[:2], nc, chunk, *t.shape[3:])
+    qc, kc, vc = rs(q), rs(k), rs(v)                    # [B,H,NC,Q,*]
+    ic, fc = rs(i_raw), rs(logf)
+    fcum = jnp.cumsum(fc, axis=-1)                      # F_t within chunk
+    ftot = fcum[..., -1]                                # [B,H,NC]
+
+    # intra-chunk stabilized parallel pieces (per chunk)
+    dmat = fcum[..., :, None] - fcum[..., None, :] + ic[..., None, :]
+    mask = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+    dmat = jnp.where(mask[None, None, None], dmat, -jnp.inf)
+    m_intra = dmat.max(axis=-1)                         # [B,H,NC,Q]
+
+    def chunk_step(carry, xs):
+        c0, n0, m0 = carry                              # [B,H,dq,dv],[B,H,dq],[B,H]
+        qk, kk, vk, fk, ik, dk, mk, ftk = xs            # fk = in-chunk cumsum
+        # combined stabilizer: running-max carry vs intra max
+        m_t = jnp.maximum(fk + m0[..., None], mk)       # [B,H,Q]
+        w = jnp.exp(dk - m_t[..., None])                # [B,H,Q,Q]
+        scores = jnp.einsum("bhtd,bhsd->bhts", qk, kk)
+        cw = scores * w
+        num = jnp.einsum("bhts,bhsv->bhtv", cw, vk)
+        den = cw.sum(-1)
+        carry_scale = jnp.exp(fk + m0[..., None] - m_t)  # [B,H,Q]
+        num = num + carry_scale[..., None] * jnp.einsum("bhtd,bhdv->bhtv", qk, c0)
+        den = den + carry_scale * jnp.einsum("bhtd,bhd->bht", qk, n0)
+        hk = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # chunk-end carry (t = Q): decay each in-chunk key to the boundary
+        m_q = m_t[..., -1]
+        dec = jnp.exp(ftk[..., None] - fk + ik - m_q[..., None])  # [B,H,Q]
+        c1 = (jnp.exp(ftk + m0 - m_q)[..., None, None] * c0
+              + jnp.einsum("bhs,bhsd,bhsv->bhdv", dec, kk, vk))
+        n1 = (jnp.exp(ftk + m0 - m_q)[..., None] * n0
+              + jnp.einsum("bhs,bhsd->bhd", dec, kk))
+        return (c1, n1, m_q), hk
+
+    carry = (jnp.zeros((b, h, dq, dv), jnp.float32),
+             jnp.zeros((b, h, dq), jnp.float32),
+             jnp.full((b, h), -1e30, jnp.float32))
+    seq_first = lambda t: jnp.moveaxis(t, 2, 0)         # NC to the front
+    _, hs = scan_util.scan(chunk_step, carry,
+                           (seq_first(qc), seq_first(kc), seq_first(vc),
+                            seq_first(fcum), seq_first(ic), seq_first(dmat),
+                            seq_first(m_intra), seq_first(ftot)))
+    # hs [NC,B,H,Q,dv] -> [B,H,S,dv]
+    return jnp.moveaxis(hs, 0, 2).reshape(b, h, s, dv)
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> dict:
+    d_inner, d_qk, nh = _dims(cfg)
+    hq, hv = d_qk // nh, d_inner // nh
+    return {"c": jnp.zeros((batch, nh, hq, hv), jnp.float32),
+            "n": jnp.zeros((batch, nh, hq), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.xlstm.num_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        # 4 gates (i, f, z, o) from input; block-diagonal recurrent per head
+        "w_ih": dense_init(ks[0], d, 4 * d, dt),
+        "w_hh": (jax.random.normal(ks[1], (nh, hd, 4 * hd), jnp.float32)
+                 * hd ** -0.5).astype(dt),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "norm_scale": jnp.zeros((d,), jnp.float32),
+        "w_down": dense_init(ks[2], d, d, dt),
+    }
+
+
+def slstm_forward(p: dict, cfg: ArchConfig, x: jnp.ndarray,
+                  state: Optional[dict] = None):
+    d = cfg.d_model
+    nh = cfg.xlstm.num_heads
+    hd = d // nh
+    b, s, _ = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, b)
+
+    gx = (x @ p["w_ih"]).astype(jnp.float32) + p["b_gates"]     # [B,S,4d]
+
+    def step(carry, g_t):
+        h, c, n, m = carry                                      # [B,nh,hd] each, m [B,nh,hd]
+        rec = jnp.einsum("bhd,hdk->bhk", h, p["w_hh"].astype(jnp.float32))
+        g = g_t.reshape(b, nh, 4 * hd) + rec
+        i_r, f_r, z_r, o_r = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(f_r + m, i_r)                       # exp-gate stabilizer
+        ig = jnp.exp(i_r - m_new)
+        fg = jnp.exp(f_r + m - m_new)
+        c = fg * c + ig * jnp.tanh(z_r)
+        n = fg * n + ig
+        h_new = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1.0)
+        return (h_new, c, n, m_new), h_new
+
+    carry0 = (state["h"], state["c"], state["n"], state["m"])
+    carryT, hs = jax.lax.scan(step, carry0, jnp.moveaxis(gx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    h = rms_norm(h, p["norm_scale"])
+    new_state = {"h": carryT[0], "c": carryT[1], "n": carryT[2], "m": carryT[3]}
+    return h @ p["w_down"], new_state
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> dict:
+    d = cfg.d_model
+    nh = cfg.xlstm.num_heads
+    hd = d // nh
+    z = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(),
+            "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}

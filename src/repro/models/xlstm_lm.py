@@ -1,0 +1,118 @@
+"""xLSTM language-model assembly (xlstm-125m).
+
+Block pattern: mostly mLSTM with sLSTM at ``cfg.xlstm.slstm_at`` — expressed
+as consecutive same-kind *runs*, each run a scan group over stacked params
+(same compile-once-per-block-kind property as transformer.py).
+
+Every block is pre-norm residual: ``h = h + block(rms_norm(h))``.
+Decode state is O(1) per layer: mLSTM matrix memory / sLSTM scalar cells —
+the property that qualifies this arch for long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import constrain
+from repro.models import scan_util
+from repro.models import xlstm as xl
+from repro.models.common import embed_init, rms_norm, stack_init
+from repro.models.transformer import embed_tokens, unembed, cross_entropy
+
+
+def layer_runs(cfg: ArchConfig) -> list[tuple[str, int, str]]:
+    """[(group_name, count, kind)] — consecutive same-kind runs."""
+    slstm = set(cfg.xlstm.slstm_at)
+    kinds = ["slstm" if i in slstm else "mlstm" for i in range(cfg.num_layers)]
+    runs, start = [], 0
+    for i in range(1, cfg.num_layers + 1):
+        if i == cfg.num_layers or kinds[i] != kinds[start]:
+            runs.append((f"run{len(runs)}_{kinds[start]}", i - start, kinds[start]))
+            start = i
+    return runs
+
+
+def _init_block(key, cfg: ArchConfig, kind: str) -> dict:
+    p = {"norm": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind == "mlstm":
+        p["cell"] = xl.init_mlstm(key, cfg)
+    else:
+        p["cell"] = xl.init_slstm(key, cfg)
+    return p
+
+
+def init_xlstm_lm(key, cfg: ArchConfig) -> dict:
+    runs = layer_runs(cfg)
+    ks = jax.random.split(key, 2 + len(runs))
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    in_key = "embed" if cfg.tie_embeddings else "embed_in"
+    params = {
+        in_key: embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[1], cfg.d_model, cfg.vocab_size, dt)
+    for i, (name, n, kind) in enumerate(runs):
+        params[name] = stack_init(ks[2 + i], n,
+                                  lambda k, kind=kind: _init_block(k, cfg, kind))
+    return params
+
+
+def _scan_run(params_r, cfg: ArchConfig, h, kind: str, states=None):
+    fwd = xl.mlstm_forward if kind == "mlstm" else xl.slstm_forward
+
+    def body(carry, xs):
+        if states is None:
+            bp = xs
+            out, _ = fwd(bp["cell"], cfg, rms_norm(carry, bp["norm"]))
+            return carry + out, None
+        bp, st = xs
+        out, new_st = fwd(bp["cell"], cfg, rms_norm(carry, bp["norm"]),
+                          state=st)
+        return carry + out, new_st
+
+    fn = jax.checkpoint(body) if (cfg.remat and states is None) else body
+    xs = params_r if states is None else (params_r, states)
+    return scan_util.scan(fn, h, xs)
+
+
+def xlstm_forward(params: dict, cfg: ArchConfig, tokens: jnp.ndarray):
+    h = embed_tokens(params, cfg, tokens)
+    h = constrain(h, "batch", None, None)
+    for name, n, kind in layer_runs(cfg):
+        h, _ = _scan_run(params[name], cfg, h, kind)
+    return unembed(params, cfg, h)
+
+
+def xlstm_loss(params: dict, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    logits = xlstm_forward(params, cfg, tokens)
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int) -> dict:
+    groups = {}
+    for name, n, kind in layer_runs(cfg):
+        one = (xl.init_mlstm_state(cfg, batch) if kind == "mlstm"
+               else xl.init_slstm_state(cfg, batch))
+        groups[name] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), one)
+    return {"states": groups, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
+                state: dict) -> tuple[jnp.ndarray, dict]:
+    h = embed_tokens(params, cfg, tokens)
+    new_states = {}
+    for name, n, kind in layer_runs(cfg):
+        h, ns = _scan_run(params[name], cfg, h, kind,
+                          states=state["states"][name])
+        new_states[name] = ns
+    logits = unembed(params, cfg, h)
+    return logits[:, -1], {"states": new_states,
+                           "pos": state["pos"] + tokens.shape[1]}

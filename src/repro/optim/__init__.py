@@ -1,0 +1,12 @@
+"""Optimizers + distributed-optimization tricks (pure JAX, no optax)."""
+from repro.optim.adam import AdamW, AdamConfig, clip_by_global_norm
+from repro.optim.schedules import warmup_cosine, constant
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     ErrorFeedbackState, ef_compress_update)
+
+__all__ = [
+    "AdamW", "AdamConfig", "clip_by_global_norm",
+    "warmup_cosine", "constant",
+    "compress_int8", "decompress_int8", "ErrorFeedbackState",
+    "ef_compress_update",
+]

@@ -1,0 +1,91 @@
+"""AdamW in pure JAX with giant-model memory options.
+
+Memory modes (DESIGN.md §4 — what makes arctic-480b fit 16 GB/chip v5e):
+
+* ``moment_dtype=bf16``: first/second moments in bfloat16 halves optimizer
+  state (the update math still runs in f32; moments are rounded on store).
+  Classic trick from large-scale MoE training; convergence impact is
+  negligible for the second moment and small for the first at these scales.
+* the *sharding* of the moments follows the parameters, so with ZeRO-style
+  fully-sharded params (launch/sharding.py) the optimizer state is fully
+  sharded too.
+
+The optimizer is a pytree-in/pytree-out pure function — safe under jit,
+shard_map and microbatch accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-3                 # paper §4.1: ADAM, lr 0.003
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = None
+    moment_dtype: Any = jnp.float32  # jnp.bfloat16 for giant MoE configs
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+class AdamW:
+    """Functional AdamW: ``state = init(params)``, ``params, state = update(...)``."""
+
+    def __init__(self, cfg: AdamConfig = AdamConfig(),
+                 lr_schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None):
+        self.cfg = cfg
+        self.lr_schedule = lr_schedule
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, dtype=self.cfg.moment_dtype)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), dtype=jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        cfg = self.cfg
+        if cfg.clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+        step = state["step"] + 1
+        lr = cfg.lr if self.lr_schedule is None else self.lr_schedule(step) * cfg.lr
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return (newp.astype(p.dtype),
+                    m32.astype(cfg.moment_dtype),
+                    v32.astype(cfg.moment_dtype))
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,26 @@
+"""LR schedules as step -> multiplier functions (composed with AdamConfig.lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), dtype=jnp.float32)
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, min_frac: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return sched
+
+
+def inverse_sqrt(warmup_steps: int):
+    def sched(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        w = float(max(warmup_steps, 1))
+        return jnp.minimum(s / w, jnp.sqrt(w / s))
+    return sched

@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g)."""
+from repro.roofline.analysis import (HW, RooflineTerms, analyze_compiled,
+                                     collective_bytes_from_hlo, model_flops,
+                                     roofline_terms)
+
+__all__ = ["HW", "RooflineTerms", "analyze_compiled",
+           "collective_bytes_from_hlo", "model_flops", "roofline_terms"]

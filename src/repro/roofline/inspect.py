@@ -1,0 +1,182 @@
+"""Collective census with op provenance — the §Perf profiling tool.
+
+Compiles the (unrolled) cost probe for one cell and prints the top collective
+ops with their HLO metadata ``op_name`` (which carries the jaxpr path, i.e.
+WHICH model line produced the op).  This is the dry-run profiler: no
+wall-clock trace exists on CPU, so sharding work is driven by reading the
+collective structure of the lowered program (system instructions §Pallas
+hints).
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.inspect --arch qwen2-7b \
+      --shape train_4k [--probe-units 2]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.roofline.analysis import (_COLLECTIVES, _SHAPE_RE, _group_size,
+                                     _shape_bytes)
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def collective_census(hlo_text: str) -> list:
+    """[(bytes, op_type, result_shape, group_size, op_name), ...] desc."""
+    rows = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        hit = None
+        for c in _COLLECTIVES:
+            for form in (f" {c}(", f" {c}-start("):
+                if form in line:
+                    hit = (c, line.find(form))
+                    break
+            if hit:
+                break
+        if not hit:
+            continue
+        c, opcode_at = hit
+        eq = line.find("=")
+        if eq < 0 or eq > opcode_at:
+            continue
+        region = line[eq + 1:opcode_at]
+        shapes = _SHAPE_RE.findall(region)
+        rb = sum(_shape_bytes(d, s) for d, s in shapes)
+        s = max(_group_size(line), 1)
+        mult = {"all-gather": (s - 1) / s, "all-reduce": 2 * (s - 1) / s,
+                "reduce-scatter": (s - 1), "all-to-all": (s - 1) / s,
+                "ragged-all-to-all": (s - 1) / s}.get(c, 1.0)
+        m = _META_RE.search(line)
+        name = m.group(1) if m else "?"
+        rows.append((int(rb * mult), c, "+".join(f"{d}[{sh}]" for d, sh in shapes),
+                     s, name))
+    rows.sort(reverse=True)
+    return rows
+
+
+_RESULT_RE = re.compile(r"^\s*(?:ROOT\s+)?%[\w.\-]+ = ")
+
+
+def memory_census(hlo_text: str, top: int = 25):
+    """Aggregate HLO result bytes by (opcode, site) — a write-traffic proxy
+    for finding what inflates the 'bytes accessed' roofline term."""
+    by_site = collections.Counter()
+    total = 0
+    for line in hlo_text.splitlines():
+        if not _RESULT_RE.match(line):
+            continue
+        eq = line.find("=")
+        rest = line[eq + 1:].lstrip()
+        shapes = []
+        # result region = up to the opcode token (first identifier followed by '(')
+        m2 = re.match(r"((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+)([\w\-]+)\(",
+                      rest)
+        if not m2:
+            continue
+        region, opcode = m2.group(1), m2.group(2)
+        if opcode in ("tuple", "get-tuple-element", "parameter", "constant"):
+            continue
+        b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(region))
+        if b < (1 << 20):
+            continue
+        mm = _META_RE.search(line)
+        name = mm.group(1) if mm else "?"
+        site = "/".join(name.split("/")[-2:])
+        by_site[(opcode, site)] += b
+        total += b
+    print(f"\n== memory census (>=1MB results): {total/1e9:.2f} GB total ==")
+    for (opcode, site), b in by_site.most_common(top):
+        print(f"  {b/1e9:8.2f} GB  {opcode:<22} {site}")
+
+
+def summarize(rows, top: int = 25):
+    total = sum(r[0] for r in rows)
+    print(f"collective ops: {len(rows)}, wire bytes/chip: {total/1e9:.2f} GB")
+    by_site = collections.Counter()
+    for b, c, shape, s, name in rows:
+        # collapse the site to the last two path segments
+        site = "/".join(name.split("/")[-3:])
+        by_site[(c, site)] += b
+    print("\n-- by site --")
+    for (c, site), b in by_site.most_common(top):
+        print(f"  {b/1e9:8.2f} GB  {c:<18} {site}")
+    print("\n-- largest single ops --")
+    for b, c, shape, s, name in rows[:top]:
+        print(f"  {b/1e9:8.2f} GB  {c:<18} g={s:<4} {shape}  {name[-80:]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--probe-units", type=int, default=None,
+                    help="layer units for the probe cfg (default: plan's u1)")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--linear", action="store_true",
+                    help="linear-attention traffic probe (memory census)")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import _compile_probe, _probe_plan
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import sharding as shlib
+    from repro.launch.specs import input_specs
+    from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+    from repro.models import scan_util
+    from repro.models.lm import get_model
+    from repro.optim.adam import AdamConfig, AdamW
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    make, u1, _, _ = _probe_plan(cfg)
+    probe_cfg = make(args.probe_units or u1)
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    model = get_model(probe_cfg)
+
+    from repro.kernels.probe_ctx import linear_attention_traffic
+    import contextlib
+    lin = linear_attention_traffic() if args.linear else contextlib.nullcontext()
+    with shlib.use_mesh(mesh), shlib.arch_scope(probe_cfg), scan_util.unrolled(), lin:
+        specs = input_specs(probe_cfg, shape, mesh, model=model)
+        p_structs, p_sh = specs["params"]
+        if shape.kind in ("decode", "prefill"):
+            step = (make_serve_step(model) if shape.kind == "decode"
+                else make_prefill_step(model))
+            t_struct, t_sh = specs["tokens"]
+            s_structs, s_sh = specs["state"]
+            compiled = jax.jit(step, in_shardings=(p_sh, t_sh, s_sh),
+                               out_shardings=(t_sh, s_sh),
+                               donate_argnums=(2,)).lower(
+                                   p_structs, t_struct, s_structs).compile()
+        else:
+            opt = AdamW(AdamConfig(lr=3e-4))
+            step = make_train_step(model, opt)
+            b_structs, b_sh = specs["batch"]
+            o_structs = jax.eval_shape(opt.init, p_structs)
+            o_sh = {"m": p_sh, "v": p_sh,
+                    "step": jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec())}
+            loss_sh = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                               out_shardings=(p_sh, o_sh, loss_sh),
+                               donate_argnums=(0, 1)).lower(
+                                   p_structs, o_structs, b_structs).compile()
+    hlo = compiled.as_text()
+    rows = collective_census(hlo)
+    print(f"== {args.arch} x {args.shape} (probe units "
+          f"{args.probe_units or u1}, mesh {mesh.shape}) ==")
+    summarize(rows, top=args.top)
+    memory_census(hlo, top=args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Training runtimes: GNN trainer (the paper's pipeline) + LM trainer."""
+from repro.train.trainer import GNNTrainer, TrainReport
+
+__all__ = ["GNNTrainer", "TrainReport"]

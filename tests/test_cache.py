@@ -1,0 +1,75 @@
+"""§3.2 cache sampling tests."""
+import numpy as np
+import pytest
+
+from repro.core.cache import (CacheConfig, cache_probs, degree_cache_probs,
+                              random_walk_cache_probs, sample_cache)
+from repro.graph.generate import powerlaw_graph
+
+
+@pytest.fixture(scope="module")
+def g():
+    return powerlaw_graph(5000, avg_degree=10, seed=0)
+
+
+def test_degree_probs_normalized(g):
+    p = degree_cache_probs(g)
+    assert np.isclose(p.sum(), 1.0)
+    # proportionality to degree
+    deg = g.degrees
+    i, j = np.argmax(deg), np.argmin(deg)
+    assert p[i] / max(p[j], 1e-12) == pytest.approx(deg[i] / max(deg[j], 1e-9), rel=1e-6)
+
+
+def test_random_walk_probs_mass_near_train(g):
+    rng = np.random.default_rng(0)
+    train = rng.choice(g.num_nodes, size=50, replace=False)
+    p = random_walk_cache_probs(g, train, fanouts=(15, 10, 5))
+    assert np.isclose(p.sum(), 1.0)
+    # mass concentrates around the training set: the 1-hop neighborhood holds
+    # far more probability than its uniform share (walk length is 3, so the
+    # mass spreads to ~2 hops — Theorem: reachable-with-high-prob, §3.2 req 2)
+    hood = np.array(sorted({v for t in train for v in [t, *g.neighbors(t)]}))
+    mass = p[hood].sum()
+    uniform_share = len(hood) / g.num_nodes
+    assert mass > 3 * uniform_share
+    assert mass > 0.2
+
+
+def test_sample_cache_size_and_uniqueness(g):
+    cfg = CacheConfig(fraction=0.01)
+    rng = np.random.default_rng(1)
+    c = sample_cache(g, cfg, rng)
+    assert c.size == cfg.size(g.num_nodes) == 50
+    assert len(np.unique(c.node_ids)) == c.size
+    assert c.in_cache.sum() == c.size
+    # slot map round-trips
+    np.testing.assert_array_equal(c.node_ids[c.slot_of[c.node_ids]], c.node_ids)
+    assert (c.slot_of[~c.in_cache] == -1).all()
+
+
+def test_cache_biased_toward_degree(g):
+    """Degree-biased cache covers far more edge endpoints than uniform (§3.2)."""
+    cfg_deg = CacheConfig(fraction=0.01, strategy="degree")
+    cfg_uni = CacheConfig(fraction=0.01, strategy="uniform")
+    rng = np.random.default_rng(2)
+    cov_deg, cov_uni = [], []
+    for t in range(5):
+        cd = sample_cache(g, cfg_deg, np.random.default_rng(10 + t))
+        cu = sample_cache(g, cfg_uni, np.random.default_rng(20 + t))
+        cov_deg.append(cd.in_cache[g.indices].mean())
+        cov_uni.append(cu.in_cache[g.indices].mean())
+    assert np.mean(cov_deg) > 3 * np.mean(cov_uni)
+
+
+def test_auto_strategy_switches(g):
+    rng = np.random.default_rng(0)
+    small_train = rng.choice(g.num_nodes, size=10, replace=False)
+    big_train = np.arange(g.num_nodes)
+    p_small = cache_probs(g, CacheConfig(strategy="auto"), small_train)
+    p_big = cache_probs(g, CacheConfig(strategy="auto"), big_train)
+    p_deg = degree_cache_probs(g)
+    # big train fraction -> degree distribution
+    np.testing.assert_allclose(p_big, p_deg)
+    # small train fraction -> random-walk (different from degree)
+    assert not np.allclose(p_small, p_deg)

@@ -1,0 +1,35 @@
+"""Paper Fig. 3 / Table 3 analog: GNS converges like NS at matched settings.
+
+Scaled to the container: tiny SBM dataset, few epochs.  The claims we verify:
+  * both NS and GNS reach good accuracy (the task is learnable),
+  * GNS accuracy is within a few points of NS (paper: 78.01 vs 78.44 etc.),
+  * GNS streams far fewer bytes than NS (the systems win).
+"""
+import numpy as np
+import pytest
+
+from repro.core.cache import CacheConfig
+from repro.core.sampler import SamplerConfig
+from repro.graph.datasets import get_dataset
+from repro.train.trainer import GNNTrainer
+
+
+@pytest.mark.slow
+def test_gns_matches_ns_accuracy():
+    ds = get_dataset("tiny", seed=1)
+    results = {}
+    for name in ["ns", "gns"]:
+        scfg = SamplerConfig(fanouts=(5, 10, 15), batch_size=128,
+                             cache=CacheConfig(fraction=0.05, period=1))
+        tr = GNNTrainer(ds, name, sampler_cfg=scfg, seed=0)
+        tr.train(epochs=4, max_batches=7)
+        acc = tr.evaluate(ds.val_idx, num_batches=4)
+        results[name] = (acc, tr.meter.bytes_streamed)
+    acc_ns, bytes_ns = results["ns"]
+    acc_gns, bytes_gns = results["gns"]
+    assert acc_ns > 0.55, f"NS failed to learn: {acc_ns}"
+    assert acc_gns > acc_ns - 0.07, f"GNS {acc_gns} vs NS {acc_ns}"
+    # the systems claim: much less host->device feature traffic.  At this
+    # 2k-node scale the reduction is graph-size-limited (~0.65x); the paper's
+    # 4-6x shows up at larger scale (benchmarks/bench_input_nodes.py sweeps).
+    assert bytes_gns < 0.7 * bytes_ns, (bytes_gns, bytes_ns)

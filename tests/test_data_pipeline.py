@@ -1,0 +1,139 @@
+"""Token pipeline + vocab cache (the GNS-analog LM substrate)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.device_cache import TrafficMeter
+from repro.data.tokens import SyntheticCorpus, TokenPipeline
+from repro.data.vocab_cache import (VocabCache, VocabCacheConfig,
+                                    embed_with_cache, sampled_softmax_loss)
+
+
+# ---------------------------------------------------------------------------
+# token pipeline
+# ---------------------------------------------------------------------------
+
+def test_corpus_deterministic_and_host_sharded():
+    c = SyntheticCorpus(1000, seed=3)
+    a = c.batch(0, 5, batch=8, seq_len=16)
+    b = c.batch(0, 5, batch=8, seq_len=16)
+    np.testing.assert_array_equal(a, b)
+    # host shards are disjoint slices of the same global batch definition
+    h0 = c.batch(0, 5, batch=8, seq_len=16, host=0, num_hosts=2)
+    h1 = c.batch(0, 5, batch=8, seq_len=16, host=1, num_hosts=2)
+    assert h0.shape == h1.shape == (4, 16)
+    assert not np.array_equal(h0, h1)
+
+
+def test_corpus_zipf_skew():
+    c = SyntheticCorpus(5000, zipf_a=1.2, seed=0)
+    toks = c.batch(0, 0, batch=64, seq_len=256)
+    counts = np.bincount(toks.reshape(-1), minlength=5000)
+    top = np.sort(counts)[::-1]
+    assert top[:50].sum() > 0.35 * counts.sum()     # heavy head
+
+
+def test_pipeline_resume_matches():
+    c = SyntheticCorpus(100, seed=1)
+    p = TokenPipeline(c, batch=4, seq_len=8, accum=2)
+    full = list(p.epoch(0, steps=5))
+    tail = list(p.epoch(0, steps=5, start_step=3))
+    assert len(full) == 5 and len(tail) == 2
+    np.testing.assert_array_equal(full[3]["tokens"], tail[0]["tokens"])
+    assert full[0]["tokens"].shape == (2, 2, 8)     # [accum, B/accum, S]
+
+
+# ---------------------------------------------------------------------------
+# vocab cache
+# ---------------------------------------------------------------------------
+
+def _cache(vocab=512, dim=16, frac=0.25, strategy="sampled", seed=0):
+    rng = np.random.default_rng(seed)
+    table = rng.standard_normal((vocab, dim)).astype(np.float32)
+    vc = VocabCache(table, VocabCacheConfig(fraction=frac, strategy=strategy),
+                    seed=seed)
+    return table, vc
+
+
+def test_assembly_exact():
+    """Cache-hit + streamed assembly reproduces the full-table lookup exactly
+    (GNS input layer: h0 = where(slot>=0, cache[slot], streamed))."""
+    table, vc = _cache()
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, 512, size=(4, 11))
+    vc.observe(toks)
+    vc.refresh(0)
+    batch = vc.assemble(toks)
+    out = embed_with_cache(jnp.asarray(vc.table), {
+        "slots": jnp.asarray(batch["slots"]),
+        "streamed": jnp.asarray(batch["streamed"]),
+        "miss_local": jnp.asarray(batch["miss_local"]),
+    })
+    np.testing.assert_allclose(np.asarray(out), table[toks], rtol=1e-6)
+
+
+def test_hit_rate_improves_with_skew_and_observation():
+    table, vc = _cache(vocab=2000, frac=0.05, strategy="topk")
+    c = SyntheticCorpus(2000, zipf_a=1.3, seed=2)
+    toks = c.batch(0, 0, batch=32, seq_len=128)
+    cold = None
+    for it in range(3):
+        vc.observe(toks)
+        vc.refresh(it)
+        hr = vc.hit_rate(toks)
+        cold = hr if cold is None else cold
+    uniform_hr = 0.05
+    assert hr > 4 * uniform_hr, hr       # skew-aware cache beats uniform
+
+
+def test_streaming_bytes_drop_with_cache(tmp_path):
+    """Table 4 analog: streamed bytes shrink when the hot set is cached."""
+    table, vc = _cache(vocab=2000, frac=0.10, strategy="topk")
+    c = SyntheticCorpus(2000, zipf_a=1.3, seed=4)
+    toks = c.batch(0, 1, batch=32, seq_len=128)
+    m_nocache = TrafficMeter()
+    full_bytes = np.unique(toks).size * table.shape[1] * 4
+    vc.observe(toks)
+    vc.refresh(0)
+    m = TrafficMeter()
+    vc.assemble(toks, meter=m)
+    assert m.bytes_streamed < 0.6 * full_bytes
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 40))
+def test_inclusion_probs_bounds(size_scale):
+    _, vc = _cache(vocab=256, frac=size_scale / 40.0)
+    ids = np.arange(256)
+    p = vc.inclusion_probs(ids)
+    assert np.all(p >= 0) and np.all(p <= 1)
+    # monotone in the underlying frequency
+    vc.freq = np.arange(1, 257, dtype=np.float64)
+    vc.probs = vc.freq / vc.freq.sum()
+    p2 = vc.inclusion_probs(ids)
+    assert p2[-1] >= p2[0]
+
+
+def test_sampled_softmax_close_to_full():
+    """With the cache covering the whole vocab, sampled softmax == full CE."""
+    rng = np.random.default_rng(0)
+    v, d, t = 64, 8, 32
+    table = rng.standard_normal((v, d)).astype(np.float32)
+    unembed = rng.standard_normal((v, d)).astype(np.float32)
+    hidden = rng.standard_normal((t, d)).astype(np.float32)
+    labels = rng.integers(0, v, t)
+
+    # full-coverage cache, inclusion prob 1 -> exact softmax with the
+    # positive row counted once in the partition
+    neg = jnp.asarray(unembed)
+    incl = jnp.ones((v,))
+    loss = sampled_softmax_loss(jnp.asarray(hidden), jnp.asarray(labels),
+                                jnp.asarray(unembed[labels]), neg, incl)
+    logits = hidden @ unembed.T
+    logz = np.log(np.exp(logits).sum(1) + np.exp((hidden * unembed[labels]).sum(1)))
+    full = (logz - (hidden * unembed[labels]).sum(1)).mean()
+    np.testing.assert_allclose(float(loss), full, rtol=1e-5)

@@ -1,0 +1,81 @@
+"""Dry-run machinery on a small (2x4) host-device mesh, in a subprocess.
+
+The production 16x16 / 2x16x16 sweep lives in launch/dryrun.py (hours); this
+test proves the same lowering path — input_specs + param rules + shard_map
+attention + MoE dispatch + jit(in/out shardings).lower().compile() — on 8
+fake devices with reduced configs, in CI time.  Subprocess because jax locks
+the device count at first init.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.launch import sharding as shlib
+from repro.launch.specs import input_specs
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.lm import get_model
+from repro.optim.adam import AdamConfig, AdamW
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+shapes = [ShapeSpec("t", 32, 8, "train"), ShapeSpec("d", 32, 8, "decode"),
+          ShapeSpec("p", 32, 8, "prefill")]
+archs = ["qwen2-7b", "deepseek-v2-236b", "zamba2-2.7b", "xlstm-125m",
+         "seamless-m4t-medium", "h2o-danube-3-4b"]
+
+for arch in archs:
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    for shape in shapes:
+        with shlib.use_mesh(mesh):
+            specs = input_specs(cfg, shape, mesh, model=model)
+            p_structs, p_sh = specs["params"]
+            if shape.kind in ("decode", "prefill"):
+                step = (make_serve_step(model) if shape.kind == "decode"
+                        else make_prefill_step(model))
+                t_struct, t_sh = specs["tokens"]
+                s_structs, s_sh = specs["state"]
+                c = jax.jit(step, in_shardings=(p_sh, t_sh, s_sh),
+                            out_shardings=(t_sh, s_sh)).lower(
+                                p_structs, t_struct, s_structs).compile()
+            else:
+                opt = AdamW(AdamConfig(lr=1e-3))
+                step = make_train_step(model, opt)
+                b_structs, b_sh = specs["batch"]
+                o_structs = jax.eval_shape(opt.init, p_structs)
+                o_sh = {"m": p_sh, "v": p_sh,
+                        "step": jax.sharding.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec())}
+                loss_sh = jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())
+                c = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                            out_shardings=(p_sh, o_sh, loss_sh)).lower(
+                                p_structs, o_structs, b_structs).compile()
+            assert c.cost_analysis() is not None
+        print("ok", arch, shape.kind, flush=True)
+print("ALL_OK")
+"""
+
+
+@pytest.mark.dryrun
+def test_small_mesh_dryrun_all_families():
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", CODE], cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), env=env,
+        capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "ALL_OK" in proc.stdout, proc.stdout[-2000:]

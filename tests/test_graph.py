@@ -1,0 +1,115 @@
+"""Graph substrate tests: CSR, generators, partitioning."""
+import numpy as np
+import pytest
+
+from repro.graph.csr import CSRGraph
+from repro.graph.generate import powerlaw_graph, sbm_graph, node_features_from_labels
+from repro.graph.datasets import get_dataset
+from repro.graph.partition import hash_partition
+
+
+def test_csr_from_edges_basic():
+    src = np.array([0, 1, 2, 2])
+    dst = np.array([1, 2, 0, 3])
+    g = CSRGraph.from_edges(src, dst, 4)
+    assert g.num_nodes == 4
+    # symmetrized + deduped
+    assert set(g.neighbors(2).tolist()) == {0, 1, 3}
+    assert set(g.neighbors(0).tolist()) == {1, 2}
+    assert g.degrees.sum() == g.num_edges
+
+
+def test_csr_no_self_loops():
+    g = CSRGraph.from_edges(np.array([0, 1, 1]), np.array([0, 1, 2]), 3)
+    for v in range(3):
+        assert v not in g.neighbors(v)
+
+
+def test_powerlaw_degree_tail():
+    g = powerlaw_graph(20_000, avg_degree=10, seed=1)
+    deg = g.degrees
+    assert 5 <= deg.mean() <= 20
+    # heavy tail: max degree far above mean
+    assert deg.max() > 10 * deg.mean()
+
+
+def test_sample_neighbors_small_degree_full():
+    g = CSRGraph.from_edges(np.array([0, 0]), np.array([1, 2]), 4)
+    rng = np.random.default_rng(0)
+    nbrs, mask = g.sample_neighbors(np.array([0, 3]), k=5, rng=rng)
+    assert mask[0].sum() == 2 and set(nbrs[0][mask[0]].tolist()) == {1, 2}
+    assert mask[1].sum() == 0  # isolated node
+
+
+def test_sample_neighbors_no_replacement():
+    # star: node 0 connected to 1..20
+    src = np.zeros(20, dtype=np.int64)
+    dst = np.arange(1, 21)
+    g = CSRGraph.from_edges(src, dst, 21)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        nbrs, mask = g.sample_neighbors(np.array([0]), k=10, rng=rng)
+        picked = nbrs[0][mask[0]]
+        assert len(picked) == 10
+        assert len(np.unique(picked)) == 10  # distinct
+
+
+def test_sample_neighbors_uniformity():
+    src = np.zeros(8, dtype=np.int64)
+    dst = np.arange(1, 9)
+    g = CSRGraph.from_edges(src, dst, 9)
+    rng = np.random.default_rng(0)
+    counts = np.zeros(9)
+    for _ in range(2000):
+        nbrs, mask = g.sample_neighbors(np.array([0]), k=2, rng=rng)
+        for x in nbrs[0][mask[0]]:
+            counts[x] += 1
+    freq = counts[1:] / counts[1:].sum()
+    assert np.allclose(freq, 1 / 8, atol=0.02)
+
+
+def test_induced_cache_adjacency():
+    g = powerlaw_graph(2000, avg_degree=8, seed=2)
+    rng = np.random.default_rng(0)
+    cache_mask = rng.random(2000) < 0.1
+    s = g.induced_cache_adjacency(cache_mask)
+    assert s.num_nodes == g.num_nodes
+    for v in rng.integers(0, 2000, size=50):
+        expected = sorted(u for u in g.neighbors(v) if cache_mask[u])
+        assert sorted(s.neighbors(v).tolist()) == expected
+
+
+def test_sbm_homophily():
+    g, labels = sbm_graph(5000, num_blocks=8, avg_degree=10, p_in=0.8, seed=3)
+    src = np.repeat(np.arange(g.num_nodes), g.degrees)
+    same = (labels[src] == labels[g.indices]).mean()
+    assert same > 0.5  # strongly assortative vs 1/8 baseline
+
+
+def test_features_class_separated():
+    labels = np.random.default_rng(0).integers(0, 4, size=1000).astype(np.int32)
+    x = node_features_from_labels(labels, 16, noise=0.1, seed=0)
+    # class means well separated at low noise
+    mus = np.stack([x[labels == c].mean(0) for c in range(4)])
+    d = np.linalg.norm(mus[0] - mus[1])
+    assert d > 1.0
+
+
+def test_dataset_splits_disjoint():
+    ds = get_dataset("tiny", seed=0)
+    all_idx = np.concatenate([ds.train_idx, ds.val_idx, ds.test_idx])
+    assert len(np.unique(all_idx)) == len(all_idx)
+    assert ds.features.shape == (ds.graph.num_nodes, 32)
+
+
+def test_hash_partition_covers_graph():
+    g = powerlaw_graph(3000, avg_degree=6, seed=4)
+    parts = hash_partition(g, 4)
+    total_owned = sum(p.num_owned for p in parts)
+    assert total_owned == g.num_nodes
+    # per-part CSR matches global rows
+    p = parts[1]
+    for i in [0, 5, len(p.owned) - 1]:
+        v = p.owned[i]
+        local = p.local_indices[p.local_indptr[i]:p.local_indptr[i + 1]]
+        np.testing.assert_array_equal(local, g.neighbors(v))

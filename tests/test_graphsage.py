@@ -1,0 +1,89 @@
+"""GraphSAGE forward/backward on padded blocks + trainer smoke."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import CacheConfig
+from repro.core.sampler import SamplerConfig, make_sampler
+from repro.graph.datasets import get_dataset
+from repro.models import graphsage
+from repro.train.trainer import GNNTrainer
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return get_dataset("tiny", seed=0)
+
+
+def _minibatch(ds, name="ns", batch=16, fanouts=(3, 4, 5)):
+    cfg = SamplerConfig(fanouts=fanouts, batch_size=batch,
+                        cache=CacheConfig(fraction=0.05))
+    s = make_sampler(name, ds.graph, cfg, ds.features, ds.labels,
+                     train_idx=ds.train_idx)
+    rng = np.random.default_rng(0)
+    s.start_epoch(0, rng)
+    targets = rng.choice(ds.train_idx, size=batch, replace=False)
+    return s, s.sample(targets.astype(np.int64), rng)
+
+
+def test_forward_shapes_and_finite(ds):
+    s, mb = _minibatch(ds)
+    cfg = graphsage.SageConfig(feat_dim=ds.feat_dim, hidden_dim=32,
+                               num_classes=ds.num_classes)
+    params = graphsage.init_params(jax.random.PRNGKey(0), cfg)
+    logits = graphsage.forward(params, mb.device,
+                               graphsage.dummy_cache_table(ds.feat_dim), cfg)
+    assert logits.shape == (16, ds.num_classes)
+    assert jnp.isfinite(logits).all()
+
+
+def test_reference_aggregate_matches_manual(ds):
+    h = jnp.asarray(np.random.default_rng(0).normal(size=(50, 8)), jnp.float32)
+    idx = jnp.asarray(np.random.default_rng(1).integers(0, 50, (10, 4)), jnp.int32)
+    w = jnp.asarray(np.random.default_rng(2).random((10, 4)), jnp.float32)
+    out = graphsage.reference_aggregate(h, idx, w)
+    manual = np.zeros((10, 8), np.float32)
+    for d in range(10):
+        for k in range(4):
+            manual[d] += np.asarray(w)[d, k] * np.asarray(h)[np.asarray(idx)[d, k]]
+    np.testing.assert_allclose(np.asarray(out), manual, rtol=1e-4, atol=1e-6)
+
+
+def test_grad_flows_through_cache_path(ds):
+    """GNS path: cache-hit rows must still contribute gradients to layer 0."""
+    s, mb = _minibatch(ds, name="gns")
+    cfg = graphsage.SageConfig(feat_dim=ds.feat_dim, hidden_dim=16,
+                               num_classes=ds.num_classes)
+    params = graphsage.init_params(jax.random.PRNGKey(0), cfg)
+    cache_rows = ds.features[s.cache.node_ids]
+    table = jnp.asarray(cache_rows, jnp.float32)
+    loss, _ = graphsage.loss_fn(params, mb.device, table, cfg)
+    grads = jax.grad(lambda p: graphsage.loss_fn(p, mb.device, table, cfg)[0])(params)
+    assert jnp.isfinite(loss)
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree_util.tree_leaves(grads))
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("name", ["ns", "gns"])
+def test_trainer_loss_decreases(ds, name):
+    scfg = SamplerConfig(fanouts=(3, 4, 5), batch_size=64,
+                         cache=CacheConfig(fraction=0.1, period=1))
+    tr = GNNTrainer(ds, name, sampler_cfg=scfg, seed=0)
+    report = tr.train(epochs=3, max_batches=6)
+    assert report.losses[-1] < report.losses[0]
+    assert np.isfinite(report.losses).all()
+
+
+def test_trainer_traffic_accounting(ds):
+    scfg = SamplerConfig(fanouts=(3, 4, 5), batch_size=64,
+                         cache=CacheConfig(fraction=0.1, period=1))
+    tr = GNNTrainer(ds, "gns", sampler_cfg=scfg, seed=0)
+    report = tr.train(epochs=1, max_batches=4)
+    m = report.meter
+    assert m.steps == 4
+    assert m.bytes_cache_fill > 0          # cache got uploaded
+    assert report.cached_nodes_per_batch > 0
+    # GNS per-batch traffic far below the all-streamed equivalent
+    full = report.input_nodes_per_batch * ds.feat_dim * 4
+    assert m.bytes_streamed / m.steps < full

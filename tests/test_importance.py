@@ -1,0 +1,126 @@
+"""§3.4 importance coefficients: numerics + the unbiasedness property (eq. 5).
+
+The decisive test: over repeated cache draws + GNS neighbor sampling, the
+weighted aggregation Σ w·h must converge to the full-neighborhood mean.
+This is exactly eq. (5)/(B.15) — the property Theorem 1's proof rests on.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import CacheConfig
+from repro.core.importance import cache_hit_prob, importance_coefficients
+from repro.core.sampler import GNSSampler, SamplerConfig
+from repro.core.variance import full_neighbor_mean, sampled_mean_once
+from repro.graph.generate import powerlaw_graph
+
+
+# ---------------------------------------------------------------------------
+# unit / numeric behavior
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_prob_limits():
+    p = np.array([0.0, 1e-9, 0.5, 1.0 - 1e-13])
+    pc = cache_hit_prob(p, cache_size=100)
+    assert pc[0] == 0.0
+    assert pc[1] == pytest.approx(1e-7, rel=1e-3)   # ~ |C|*p for tiny p
+    assert pc[2] > 1 - 1e-12                         # saturates
+    assert np.all((0 <= pc) & (pc <= 1))
+
+
+@given(p=st.floats(1e-12, 0.99), c=st.integers(1, 10_000))
+@settings(max_examples=200, deadline=None)
+def test_cache_hit_prob_monotone_bounded(p, c):
+    pc = float(cache_hit_prob(np.array([p]), c)[0])
+    assert 0.0 <= pc <= 1.0
+    assert pc >= p * 0.9999 or c == 1  # more draws -> higher prob
+    pc2 = float(cache_hit_prob(np.array([p]), c + 1)[0])
+    assert pc2 >= pc - 1e-15
+
+
+@given(
+    probs=st.lists(st.floats(1e-8, 0.2), min_size=1, max_size=8),
+    cache_size=st.integers(1, 1000),
+    fanout=st.integers(1, 32),
+    ncv=st.integers(0, 64),
+)
+@settings(max_examples=200, deadline=None)
+def test_coefficients_positive_bounded(probs, cache_size, fanout, ncv):
+    p = np.array(probs)
+    for mode in ("ht", "paper"):
+        c = importance_coefficients(p, cache_size, fanout, np.full_like(p, ncv),
+                                    mode=mode)
+        assert np.all(c > 0)
+        if mode == "ht":
+            assert np.all(c <= 1.0 + 1e-9)   # an inclusion probability
+
+
+# ---------------------------------------------------------------------------
+# the eq. (5) unbiasedness property (Monte-Carlo)
+# ---------------------------------------------------------------------------
+
+def _mc_estimates(g, h, nodes, mode, trials, fanout=6, fraction=0.05):
+    cfg = SamplerConfig(fanouts=(fanout,), batch_size=len(nodes),
+                        cache=CacheConfig(fraction=fraction, period=1),
+                        importance_mode=mode)
+    s = GNSSampler(g, cfg, h.astype(np.float32), np.zeros(g.num_nodes, np.int32))
+    ests = np.zeros((trials, len(nodes), h.shape[1]))
+    for t in range(trials):
+        s.refresh_cache(np.random.default_rng(1000 + t), version=t)
+        ests[t] = sampled_mean_once(s, nodes, h, np.random.default_rng(2000 + t))
+    return ests
+
+
+@pytest.mark.slow
+def test_gns_weight_sum_unbiased():
+    """Exact form of eq. (5): with h ≡ 1, E[Σ_k w] must be exactly 1.
+
+    This isolates the importance-weight bookkeeping from feature noise:
+    any systematic error in eq. (11)/(12) or the top-up weights shows up as a
+    deterministic shift of the weight-sum mean.
+    """
+    g = powerlaw_graph(3000, avg_degree=12, seed=5)
+    h = np.ones((g.num_nodes, 1))
+    # probe a degree-diverse set including hubs (cache interacts with hubs)
+    order = np.argsort(g.degrees)
+    nodes = np.concatenate([order[-16:], order[len(order) // 2: len(order) // 2 + 16]]).astype(np.int64)
+    trials = 400
+    ests = _mc_estimates(g, h, nodes, "ht", trials)
+    mean = ests.mean(axis=0)[:, 0]             # E[Σw] per node
+    se = ests.std(axis=0)[:, 0] / np.sqrt(trials)
+    z = np.abs(mean - 1.0) / np.maximum(se, 1e-4)
+    # systematic bias (signed mean across nodes) must vanish; per-node
+    # deviations are MC noise and are checked against their standard errors
+    assert abs(np.mean(mean - 1.0)) < 0.02, mean
+    assert (z < 5).mean() > 0.9, (mean, z)
+
+
+@pytest.mark.slow
+def test_gns_aggregation_unbiased_zscore():
+    """MC mean of the weighted aggregation matches the exact mean within SE."""
+    g = powerlaw_graph(3000, avg_degree=12, seed=5)
+    rng = np.random.default_rng(0)
+    h = rng.normal(size=(g.num_nodes, 4))
+    nodes = np.argsort(g.degrees)[-24:].astype(np.int64)
+    target = full_neighbor_mean(g, h, nodes)
+    trials = 400
+    ests = _mc_estimates(g, h, nodes, "ht", trials)
+    mean = ests.mean(axis=0)
+    se = ests.std(axis=0) / np.sqrt(trials)
+    z = np.abs(mean - target) / np.maximum(se, 1e-5)
+    assert (z < 5).mean() > 0.95, f"fraction within 5 SE: {(z < 5).mean():.3f}"
+
+
+@pytest.mark.slow
+def test_gns_variance_decreases_with_cache_size():
+    """Theorem 1 trend: larger cache fraction C̃ -> smaller estimator MSE."""
+    from repro.core.variance import estimator_mse
+    g = powerlaw_graph(3000, avg_degree=12, seed=6)
+    rng = np.random.default_rng(0)
+    h = rng.normal(size=(g.num_nodes, 8))
+    nodes = rng.choice(g.num_nodes, size=64, replace=False).astype(np.int64)
+    mse_small = estimator_mse(g, h, nodes, "gns", fanout=5,
+                              cache_fraction=0.002, trials=60, seed=1)
+    mse_big = estimator_mse(g, h, nodes, "gns", fanout=5,
+                            cache_fraction=0.10, trials=60, seed=1)
+    assert mse_big < mse_small

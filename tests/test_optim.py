@@ -1,0 +1,82 @@
+"""Optimizer substrate: AdamW modes, schedules, gradient compression."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adam import AdamConfig, AdamW, clip_by_global_norm
+from repro.optim.compression import (ErrorFeedbackState, compress_int8,
+                                     decompress_int8, ef_compress_update)
+
+
+def _quadratic(dim=8, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((dim, dim)))
+    a = a @ a.T + dim * jnp.eye(dim)
+    b = jnp.asarray(rng.standard_normal(dim))
+    return lambda x: 0.5 * x @ a @ x - b @ x, a, b
+
+
+def test_adamw_converges_quadratic():
+    f, a, b = _quadratic()
+    opt = AdamW(AdamConfig(lr=5e-2))
+    x = {"x": jnp.zeros(8)}
+    state = opt.init(x)
+    for _ in range(400):
+        g = jax.grad(lambda p: f(p["x"]))(x)
+        x, state = opt.update(g, state, x)
+    target = jnp.linalg.solve(a, b)
+    np.testing.assert_allclose(np.asarray(x["x"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_bf16_moments_close_to_f32():
+    f, _, _ = _quadratic(seed=1)
+    results = []
+    for mdt in (jnp.float32, jnp.bfloat16):
+        opt = AdamW(AdamConfig(lr=5e-2, moment_dtype=mdt))
+        x = {"x": jnp.zeros(8)}
+        state = opt.init(x)
+        for _ in range(300):
+            g = jax.grad(lambda p: f(p["x"]))(x)
+            x, state = opt.update(g, state, x)
+        results.append(float(f(x["x"])))
+    assert abs(results[0] - results[1]) < 0.05 * (abs(results[0]) + 1)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0, "b": jnp.ones(2) * -10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                         for l in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+    assert float(norm) > 1.0
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+@settings(max_examples=25, deadline=None)
+def test_int8_roundtrip_bounded_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(64) * scale, jnp.float32)
+    q, s = compress_int8(x)
+    err = np.abs(np.asarray(decompress_int8(q, s) - x))
+    assert err.max() <= float(s) / 2 + 1e-6      # half-ulp of the quant grid
+
+
+def test_error_feedback_recovers_mean():
+    """EF accumulates what quantization drops: the long-run average of the
+    decompressed stream matches the true gradient (the convergence
+    mechanism behind the 4x all-reduce saving)."""
+    rng = np.random.default_rng(0)
+    true = {"g": jnp.asarray(rng.standard_normal(32), jnp.float32)}
+    ef = ErrorFeedbackState.init(true)
+    acc = jnp.zeros_like(true["g"])
+    steps = 200
+    for _ in range(steps):
+        out, ef = ef_compress_update(true, ef)
+        acc = acc + out["g"]
+    np.testing.assert_allclose(np.asarray(acc / steps), np.asarray(true["g"]),
+                               atol=2e-2)

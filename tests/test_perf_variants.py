@@ -1,0 +1,72 @@
+"""§Perf beyond-paper variants must be EXACT versus their baselines.
+
+Forward-debug policy (system methodology): each optimization is validated
+against the unoptimized implementation to machine-ish tolerance before its
+roofline delta is recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import xlstm as xl
+from repro.models.lm import get_model, make_batch
+
+
+def test_chunked_mlstm_equals_parallel_cell():
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    b, h, s, d = 2, 3, 24, 8
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, h, s, d))
+    v = jax.random.normal(ks[2], (b, h, s, d))
+    i_raw = jax.random.normal(ks[3], (b, h, s)) * 2
+    logf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, h, s)))
+
+    fcum = jnp.cumsum(logf, -1)
+    dmat = fcum[..., :, None] - fcum[..., None, :] + i_raw[..., None, :]
+    mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    dmat = jnp.where(mask[None, None], dmat, -jnp.inf)
+    m = dmat.max(-1)
+    w = jnp.exp(dmat - m[..., None])
+    cw = jnp.einsum("bhtd,bhsd->bhts", q, k) * w
+    ref = jnp.einsum("bhts,bhsv->bhtv", cw, v) / \
+        jnp.maximum(jnp.abs(cw.sum(-1)), jnp.exp(-m))[..., None]
+
+    for chunk in (4, 6, 12):
+        out = xl._mlstm_chunked(q, k, v, i_raw, logf, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_mlstm_full_model():
+    cfg = get_config("xlstm-125m").reduced()
+    cfg_c = dataclasses.replace(
+        cfg, xlstm=dataclasses.replace(cfg.xlstm, chunk=8))
+    m, mc = get_model(cfg), get_model(cfg_c)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 32, 2, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(float(m.loss(params, batch)),
+                               float(mc.loss(params, batch)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "gemma-2b"])  # untied + tied
+def test_chunked_ce_exact(arch):
+    cfg = get_config(arch).reduced()
+    cfg_c = dataclasses.replace(cfg, chunked_ce=8)
+    m, mc = get_model(cfg), get_model(cfg_c)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 32, 2, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(float(m.loss(params, batch)),
+                               float(mc.loss(params, batch)), rtol=1e-5)
+    g0 = jax.grad(m.loss)(params, batch)
+    g1 = jax.grad(mc.loss)(params, batch)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-4, atol=5e-6)

@@ -1,0 +1,154 @@
+"""Sampler structural invariants for all four methods (§3.3 + baselines).
+
+Every sampler emits the same static-shape MiniBatch format, so one set of
+invariants covers them:
+  * block shapes are run-constant (static padding),
+  * nbr_idx stays within the block's src axis,
+  * dst nodes are a prefix of the src array (self-representation contract),
+  * masked lanes have zero weight,
+  * GNS input layer draws only from the cache; top-up lanes are non-cached,
+  * GNS minibatches touch far fewer distinct input nodes than NS (Table 4),
+  * LazyGCN recycles identical batches within a period.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cache import CacheConfig
+from repro.core.minibatch import block_pad_sizes
+from repro.core.sampler import (GNSSampler, LadiesSampler, LazyGCNSampler,
+                                NeighborSampler, SamplerConfig, make_sampler)
+from repro.graph.datasets import get_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return get_dataset("tiny", seed=0)
+
+
+def _mk(ds, name, **kw):
+    cfg = SamplerConfig(fanouts=kw.pop("fanouts", (3, 4, 5)),
+                        batch_size=kw.pop("batch_size", 32),
+                        cache=CacheConfig(fraction=0.05, period=1),
+                        **kw)
+    s = make_sampler(name, ds.graph, cfg, ds.features, ds.labels,
+                     train_idx=ds.train_idx)
+    s.start_epoch(0, np.random.default_rng(0))
+    return s
+
+
+def _targets(ds, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.choice(ds.train_idx, size=n, replace=False).astype(np.int64)
+
+
+@pytest.mark.parametrize("name", ["ns", "gns", "ladies", "lazygcn"])
+def test_block_invariants(ds, name):
+    s = _mk(ds, name)
+    rng = np.random.default_rng(1)
+    shapes0 = None
+    for trial in range(3):
+        mb = s.sample(_targets(ds, 32, seed=trial), rng)
+        blocks = mb.device.blocks
+        assert len(blocks) == 3
+        shapes = [(b.nbr_idx.shape, b.num_src, b.num_dst) for b in blocks]
+        if shapes0 is None:
+            shapes0 = shapes
+        assert shapes == shapes0, "static shapes must not vary across batches"
+        # chain: src of block i+1 == dst count of block i
+        for i, b in enumerate(blocks):
+            assert b.nbr_idx.shape[0] == b.num_dst
+            assert b.nbr_idx.max() < b.num_src
+            assert b.nbr_idx.min() >= 0
+            # masked lanes => zero weight; real rows flagged by dst_mask
+            assert np.all(b.nbr_w[b.dst_mask == 0] == 0)
+            if i + 1 < len(blocks):
+                assert blocks[i + 1].num_src == b.num_dst * 0 + blocks[i + 1].num_src
+        # input feature arrays sized to block[0].num_src
+        assert mb.device.input_streamed.shape[0] == blocks[0].num_src
+        assert mb.device.input_cache_slots.shape[0] == blocks[0].num_src
+        assert mb.num_input <= blocks[0].num_src
+
+
+def test_ns_weights_are_means(ds):
+    s = _mk(ds, "ns")
+    mb = s.sample(_targets(ds, 32), np.random.default_rng(2))
+    for b in mb.device.blocks:
+        rows = b.dst_mask > 0
+        sums = b.nbr_w[rows].sum(axis=1)
+        valid = (b.nbr_w[rows] > 0).any(axis=1)
+        np.testing.assert_allclose(sums[valid], 1.0, rtol=1e-5)
+
+
+def test_gns_input_layer_cache_only(ds):
+    s = _mk(ds, "gns")
+    mb = s.sample(_targets(ds, 32), np.random.default_rng(3))
+    in_blk = mb.device.blocks[0]
+    # every input-layer sampled neighbor (excluding dst self rows) is cached
+    d = in_blk.num_dst
+    lanes = in_blk.nbr_w > 0
+    src_rows = np.unique(in_blk.nbr_idx[lanes])
+    ids = mb.input_node_ids[src_rows]
+    cached = s.cache.in_cache[ids]
+    # non-dst sources must all be cached (dst nodes can appear as their own
+    # neighbors' sources when they are in each other's neighbor lists)
+    non_dst = src_rows >= d
+    assert cached[non_dst].all()
+
+
+def test_gns_fewer_input_nodes_than_ns(ds):
+    """Paper Table 4: GNS minibatches touch far fewer distinct input nodes."""
+    ns = _mk(ds, "ns", fanouts=(5, 10, 15))
+    gns = _mk(ds, "gns", fanouts=(5, 10, 15))
+    rng = np.random.default_rng(4)
+    t = _targets(ds, 32)
+    n_ns = np.mean([ns.sample(t, rng).num_input for _ in range(5)])
+    n_gns = np.mean([gns.sample(t, rng).num_input for _ in range(5)])
+    assert n_gns < 0.7 * n_ns, (n_ns, n_gns)
+
+
+def test_gns_cached_fraction_counted(ds):
+    s = _mk(ds, "gns")
+    mb = s.sample(_targets(ds, 32), np.random.default_rng(5))
+    assert 0 < mb.num_cached <= mb.num_input
+    assert mb.bytes_streamed == (mb.num_input - mb.num_cached) * ds.feat_dim * 4
+
+
+def test_ladies_isolated_counted(ds):
+    s = _mk(ds, "ladies", layer_size=8)   # tiny layer -> isolated rows appear
+    mb = s.sample(_targets(ds, 32), np.random.default_rng(6))
+    assert mb.num_isolated >= 0
+    in_blk = mb.device.blocks[0]
+    rows = in_blk.dst_mask > 0
+    isolated = (np.abs(in_blk.nbr_w[rows]).sum(axis=1) == 0).sum()
+    assert mb.num_isolated == isolated
+
+
+def test_ladies_layer_size_bounds_new_nodes(ds):
+    s = _mk(ds, "ladies", layer_size=16)
+    mb = s.sample(_targets(ds, 32), np.random.default_rng(7))
+    # each layer adds at most layer_size new nodes over the previous
+    # (src = dst ++ sampled), so input node count <= batch + L*layer_size
+    assert mb.num_input <= 32 + 3 * 16
+
+
+def test_lazygcn_recycles(ds):
+    s = _mk(ds, "lazygcn", recycle_period=3, recycle_growth=1.0)
+    rng = np.random.default_rng(8)
+    t = _targets(ds, 32)
+    mbs = [s.sample(t, rng) for _ in range(3)]
+    # identical recycled structure within a period
+    b0 = mbs[0].device.blocks[0].nbr_idx
+    assert np.array_equal(b0, mbs[1].device.blocks[0].nbr_idx)
+    assert np.array_equal(b0, mbs[2].device.blocks[0].nbr_idx)
+    # recycled steps stream zero fresh bytes
+    assert mbs[1].bytes_streamed == 0 and mbs[2].bytes_streamed == 0
+    # fresh sample next period
+    mb3 = s.sample(t, rng)
+    assert not np.array_equal(b0, mb3.device.blocks[0].nbr_idx)
+
+
+def test_pad_sizes_chain():
+    sizes = block_pad_sizes(10, (3, 4, 5))
+    # output layer k=5: dst=10, src=60; middle k=4: dst=60, src=300;
+    # input k=3: dst=300, src=1200.  List is input-first.
+    assert sizes == [(300, 1200), (60, 300), (10, 60)]

@@ -1,0 +1,95 @@
+"""input_specs construction for all 40 (arch x shape) cells on a small mesh.
+
+The production 16x16/2x16x16 meshes are exercised by launch/dryrun.py (a
+separate process — device count is locked at first jax init).  Here a 1x1
+mesh over the CPU device checks that every cell's struct/sharding pytrees
+are well-formed and consistent, so spec bugs surface in seconds not in the
+hours-long dry-run sweep.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import input_specs
+from repro.launch.sharding import infer_logical_axes, spec_for
+from repro.models.lm import get_model
+
+CELLS = [(a, s) for a in list_archs() for s in SHAPES]
+
+
+@pytest.mark.parametrize("arch,shape_name", CELLS)
+def test_cell_specs_build(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        pytest.skip(why)
+    mesh = make_host_mesh(1, 1)
+    specs = input_specs(cfg, shape, mesh)
+    p_structs, p_sh = specs["params"]
+    assert (jax.tree_util.tree_structure(p_structs).num_leaves ==
+            jax.tree_util.tree_structure(p_sh).num_leaves)
+    if shape.kind in ("decode", "prefill"):
+        t_struct, _ = specs["tokens"]
+        if shape.kind == "decode":
+            assert t_struct.shape == (shape.global_batch, 1)
+        else:                         # prefill: the whole prompt
+            assert t_struct.shape[0] == shape.global_batch
+            assert 1 < t_struct.shape[1] <= shape.seq_len
+        s_structs, s_sh = specs["state"]
+        assert (jax.tree_util.tree_structure(s_structs).num_leaves ==
+                jax.tree_util.tree_structure(s_sh).num_leaves)
+        # SWA archs must hold a ring buffer, not the full 500k cache
+        if cfg.sliding_window and shape_name == "long_500k":
+            for kp, l in jax.tree_util.tree_flatten_with_path(s_structs)[0]:
+                path = "/".join(str(getattr(k, "key", k)) for k in kp)
+                if path.endswith("/k"):
+                    assert l.shape[-2] <= cfg.sliding_window
+    else:
+        b_structs, _ = specs["batch"]
+        accum = max(cfg.grad_accum, 1)
+        for l in jax.tree_util.tree_leaves(b_structs):
+            assert l.shape[0] == accum
+        total = sum(l.shape[1] for l in jax.tree_util.tree_leaves(b_structs)
+                    if l.shape) // len(jax.tree_util.tree_leaves(b_structs))
+        assert total == shape.global_batch // accum
+
+
+def test_param_rules_divisibility_fallback():
+    """Non-divisible dims must fall back to replication (production mesh
+    sizes stubbed — the pytest process only has 1 real device)."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    spec = spec_for(FakeMesh(), ("model", None), (28, 64))
+    assert spec == jax.sharding.PartitionSpec(None, None)
+    spec = spec_for(FakeMesh(), ("model", None), (32, 64))
+    assert spec == jax.sharding.PartitionSpec("model", None)
+    # batch spans (pod, data); 28 doesn't divide 16 -> replicated
+    spec = spec_for(FakeMesh(), ("batch", None), (28, 64))
+    assert spec == jax.sharding.PartitionSpec(None, None)
+
+
+def test_infer_logical_axes_right_aligned():
+    assert infer_logical_axes("layers/attn/wq", (12, 512, 512)) == \
+        (None, None, "model")
+    assert infer_logical_axes("layers/moe/experts_w2", (12, 8, 64, 512)) == \
+        (None, "expert", "model", None)
+    assert infer_logical_axes("embed", (1000, 64)) == ("model", None)
+
+
+def test_decode_state_total_bytes_sane():
+    """long_500k zamba2: 9 shared KV caches at 500k must stay < 64 GB total
+    (the seq-sharded layout then fits 256 chips comfortably)."""
+    cfg = get_config("zamba2-2.7b")
+    mesh = make_host_mesh(1, 1)
+    specs = input_specs(cfg, SHAPES["long_500k"], mesh)
+    s_structs, _ = specs["state"]
+    total = sum(np.prod(l.shape) * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(s_structs))
+    assert total < 64e9, f"{total/1e9:.1f} GB"
