@@ -26,12 +26,14 @@ CI_CACHE_FRACTION = 0.05
 def run_trainer(dataset: str, sampler: str, *, epochs: int = 2,
                 scale: float = 0.25, batch_size: int = 512,
                 cache_fraction: float = CI_CACHE_FRACTION, cache_period: int = 1,
+                cache_strategy: str = "auto", cache_async: bool = False,
                 layer_size: int = 512, fanouts=(5, 10, 15), seed: int = 0,
                 eval_batches: int = 8, max_batches=None):
     ds = get_dataset(dataset, scale=scale, seed=seed)
     scfg = SamplerConfig(
         batch_size=batch_size, fanouts=fanouts,
-        cache=CacheConfig(fraction=cache_fraction, period=cache_period),
+        cache=CacheConfig(fraction=cache_fraction, period=cache_period,
+                          strategy=cache_strategy, async_refresh=cache_async),
         layer_size=layer_size)
     tr = GNNTrainer(ds, sampler, sampler_cfg=scfg, seed=seed)
     t0 = time.perf_counter()

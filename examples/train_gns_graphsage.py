@@ -25,6 +25,8 @@ from repro.train.trainer import GNNTrainer
 
 
 def main():
+    from repro.featurestore import POLICIES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--sampler", default="gns",
                     choices=["gns", "ns", "ladies", "lazygcn"])
@@ -33,6 +35,11 @@ def main():
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--batch-size", type=int, default=1000)
     ap.add_argument("--cache-frac", type=float, default=0.01)
+    ap.add_argument("--cache-policy", default="auto",
+                    choices=["auto", *sorted(POLICIES)],
+                    help="cache-admission policy (featurestore registry)")
+    ap.add_argument("--async-refresh", action="store_true",
+                    help="double-buffered background cache refresh")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--prefetch", action="store_true", default=True)
     args = ap.parse_args()
@@ -42,7 +49,9 @@ def main():
           f"train={len(ds.train_idx):,} feat={ds.feat_dim}")
 
     scfg = SamplerConfig(batch_size=args.batch_size, fanouts=(5, 10, 15),
-                         cache=CacheConfig(fraction=args.cache_frac, period=1))
+                         cache=CacheConfig(fraction=args.cache_frac, period=1,
+                                           strategy=args.cache_policy,
+                                           async_refresh=args.async_refresh))
     tr = GNNTrainer(ds, args.sampler, sampler_cfg=scfg)
 
     steps_per_epoch = max(len(ds.train_idx) // args.batch_size, 1)
@@ -63,6 +72,11 @@ def main():
           f"isolated {rep.isolated_per_batch:.1f})")
     print("runtime breakdown (paper Fig. 2):")
     print(json.dumps(tr.meter.breakdown(), indent=2))
+    if tr.store is not None:
+        dev = tr.meter.tier("device")
+        print(f"feature store: policy={tr.store.policy.name} "
+              f"generations={tr.store.refreshes} swaps={tr.store.swaps} "
+              f"device hit-rate={dev.hit_rate:.3f}")
 
 
 if __name__ == "__main__":

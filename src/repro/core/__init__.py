@@ -8,7 +8,9 @@ Pieces map 1:1 onto the paper's sections:
 * :mod:`repro.core.importance`  — §3.4 importance coefficients (eq. 11–12)
 * :mod:`repro.core.minibatch`   — static-shape padded minibatch blocks (TPU
   adaptation of DGL's ragged blocks; see DESIGN.md §2)
-* :mod:`repro.core.device_cache`— device-resident feature cache + byte accounting
+* :mod:`repro.core.device_cache`— shim over :mod:`repro.featurestore` (the
+  multi-tier feature store: device table → pinned staging → host features,
+  pluggable cache policies, async double-buffered refresh)
 * :mod:`repro.core.pipeline`    — threaded prefetch (the paper's multiprocessing
   sampler, adapted to a 1-core container / per-host thread at pod scale)
 * :mod:`repro.core.variance`    — §3.5 empirical gradient-MSE / variance probes

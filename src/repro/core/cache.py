@@ -1,124 +1,27 @@
-"""§3.2 — Sample Cache.
+"""§3.2 — Sample Cache (compatibility shim).
 
-GNS periodically samples a global node set C (the *cache*) whose features are
-pinned in device memory.  Two probability constructions from the paper:
+The cache machinery was absorbed into :mod:`repro.featurestore`:
 
-* eq. (6): degree-proportional — used when most nodes are training nodes.
-      p_i = deg(i) / Σ_k deg(k)
-* eqs. (7)–(9): L-step random-walk mass from the training set — used when the
-  training set is a small fraction of V (e.g. ogbn-papers100M, 1% train).
-      P^0 = uniform on V_S;   P^ℓ = (D·A + I) P^{ℓ-1},  D = diag(fanout_ℓ/deg)
+* probability constructions (eq. 6, eqs. 7–9, reverse PageRank, adaptive)
+  live in :mod:`repro.featurestore.policies` behind the ``CachePolicy``
+  registry;
+* ``CacheConfig`` / ``CacheState`` / ``sample_cache`` / ``cache_probs`` live
+  in :mod:`repro.featurestore.store` next to the :class:`FeatureStore`
+  facade that owns cache generations at runtime.
 
-The cache is resampled every ``period`` epochs (paper Table 6: P ∈ {1,2,5,10};
-P ≤ 5 with |C| = 1%·|V| is accuracy-neutral).
+This module re-exports the original names so existing imports keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Sequence
+from repro.featurestore.policies import (degree_cache_probs,
+                                         random_walk_cache_probs,
+                                         reverse_pagerank_cache_probs,
+                                         uniform_cache_probs)
+from repro.featurestore.store import (CacheConfig, CacheState, cache_probs,
+                                      resolve_strategy, sample_cache)
 
-import numpy as np
-
-from repro.graph.csr import CSRGraph
-
-
-@dataclasses.dataclass(frozen=True)
-class CacheConfig:
-    fraction: float = 0.01          # |C| / |V|   (paper default 1%)
-    period: int = 1                 # refresh every `period` epochs (Table 6 P)
-    strategy: str = "auto"          # degree | random_walk | uniform | auto
-    train_frac_threshold: float = 0.5   # auto: degree if train_frac >= this
-    walk_fanouts: Sequence[int] = (15, 10, 5)  # per-layer fanouts for eq. (7)
-
-    def size(self, num_nodes: int) -> int:
-        return max(int(num_nodes * self.fraction), 1)
-
-
-def degree_cache_probs(g: CSRGraph) -> np.ndarray:
-    """eq. (6): p_i = deg(i) / Σ deg(k)."""
-    deg = g.degrees.astype(np.float64)
-    s = deg.sum()
-    if s == 0:
-        return np.full(g.num_nodes, 1.0 / g.num_nodes)
-    return deg / s
-
-
-def random_walk_cache_probs(g: CSRGraph, train_idx: np.ndarray,
-                            fanouts: Sequence[int]) -> np.ndarray:
-    """eqs. (7)–(9): L-step fanout-weighted walk mass from the training set.
-
-    P^ℓ = (D·A + I) P^{ℓ-1} with D = diag(fanout_ℓ / deg).  The product
-    fanout/deg is exactly the probability that a specific neighbor is drawn by
-    node-wise sampling with that layer's fanout, so P^L is the expected
-    visitation mass of node-wise sampling rooted at the training set.
-    """
-    n = g.num_nodes
-    p = np.zeros(n, dtype=np.float64)
-    p[train_idx] = 1.0 / max(len(train_idx), 1)
-    deg = np.maximum(g.degrees, 1).astype(np.float64)
-    src = np.repeat(np.arange(n, dtype=np.int64), g.degrees)  # edge sources
-    dst = g.indices.astype(np.int64)
-    for fanout in fanouts:
-        scale = np.minimum(fanout / deg, 1.0)                 # row weight of D·A
-        contrib = p[src] * scale[src]
-        nxt = p.copy()                                        # the +I term
-        np.add.at(nxt, dst, contrib)
-        p = nxt
-        s = p.sum()
-        if s > 0:
-            p /= s
-    return p
-
-
-def cache_probs(g: CSRGraph, cfg: CacheConfig,
-                train_idx: Optional[np.ndarray] = None) -> np.ndarray:
-    strategy = cfg.strategy
-    if strategy == "auto":
-        train_frac = 0.0 if train_idx is None else len(train_idx) / g.num_nodes
-        strategy = "degree" if train_frac >= cfg.train_frac_threshold else "random_walk"
-        if train_idx is None:
-            strategy = "degree"
-    if strategy == "degree":
-        return degree_cache_probs(g)
-    if strategy == "random_walk":
-        assert train_idx is not None, "random_walk strategy needs train_idx"
-        return random_walk_cache_probs(g, train_idx, cfg.walk_fanouts)
-    if strategy == "uniform":
-        return np.full(g.num_nodes, 1.0 / g.num_nodes)
-    raise ValueError(f"unknown cache strategy: {strategy}")
-
-
-@dataclasses.dataclass
-class CacheState:
-    """One sampled cache generation (versioned for async refresh at pod scale)."""
-    node_ids: np.ndarray        # int64 [|C|]  sorted
-    probs: np.ndarray           # float64 [V]  the distribution it was drawn from
-    in_cache: np.ndarray        # bool [V]
-    slot_of: np.ndarray         # int32 [V]  position in node_ids or -1
-    version: int = 0
-
-    @property
-    def size(self) -> int:
-        return len(self.node_ids)
-
-
-def sample_cache(g: CSRGraph, cfg: CacheConfig, rng: np.random.Generator,
-                 train_idx: Optional[np.ndarray] = None,
-                 probs: Optional[np.ndarray] = None,
-                 version: int = 0) -> CacheState:
-    """Draw the cache without replacement according to the §3.2 distribution."""
-    if probs is None:
-        probs = cache_probs(g, cfg, train_idx)
-    size = min(cfg.size(g.num_nodes), int((probs > 0).sum()))
-    # Efficient weighted sampling w/o replacement: Gumbel top-k on log p.
-    with np.errstate(divide="ignore"):
-        logp = np.log(probs)
-    gumbel = -np.log(-np.log(rng.random(g.num_nodes) + 1e-300) + 1e-300)
-    keys = np.where(np.isfinite(logp), logp + gumbel, -np.inf)
-    ids = np.sort(np.argpartition(keys, -size)[-size:].astype(np.int64))
-    in_cache = np.zeros(g.num_nodes, dtype=bool)
-    in_cache[ids] = True
-    slot_of = np.full(g.num_nodes, -1, dtype=np.int32)
-    slot_of[ids] = np.arange(size, dtype=np.int32)
-    return CacheState(node_ids=ids, probs=probs, in_cache=in_cache,
-                      slot_of=slot_of, version=version)
+__all__ = [
+    "CacheConfig", "CacheState", "cache_probs", "resolve_strategy",
+    "sample_cache", "degree_cache_probs", "random_walk_cache_probs",
+    "reverse_pagerank_cache_probs", "uniform_cache_probs",
+]

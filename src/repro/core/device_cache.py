@@ -1,19 +1,15 @@
-"""Device-resident feature cache + CPU↔device traffic accounting.
+"""Device feature cache (compatibility shim).
 
-The paper's central systems claim is that a small device-pinned cache removes
-most of the host→device feature traffic (Fig. 1: 60–80% of step time is data
-copy).  :class:`DeviceCache` owns the cached feature rows on device;
-:class:`TrafficMeter` accounts every byte that crosses the host boundary so
-the benchmark harness can reproduce the paper's breakdown (Fig. 2, Table 4).
+:class:`TrafficMeter` moved to :mod:`repro.featurestore.meter` (now with
+per-tier hit/miss/byte accounting); the device-table lifecycle moved into
+:class:`repro.featurestore.store.FeatureStore`, which pairs every uploaded
+table with the :class:`CacheState` generation it was built from.
 
-On a pod, the cache tensor is *sharded over the model axis* (row-wise); the
-single-device path here is the degenerate 1-shard case.  ``sharding`` may be
-any ``jax.sharding.Sharding`` — the dry-run passes a NamedSharding over the
-production mesh.
+:class:`DeviceCache` is kept for callers that only need the bare
+"upload these rows" behavior of the seed implementation.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Optional
 
@@ -21,49 +17,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import CacheState
+from repro.featurestore.meter import TierStats, TrafficMeter
+from repro.featurestore.store import CacheState
 
-
-@dataclasses.dataclass
-class TrafficMeter:
-    """Aggregate host↔device + host-memory traffic counters (bytes / seconds)."""
-    bytes_streamed: int = 0        # host -> device feature rows (PCIe analog)
-    bytes_sliced: int = 0          # host-memory gather (CPU bandwidth, step 2)
-    bytes_cache_fill: int = 0      # one-time cache refresh transfers
-    t_sample: float = 0.0
-    t_slice: float = 0.0
-    t_copy: float = 0.0
-    t_compute: float = 0.0
-    steps: int = 0
-
-    def add_batch(self, bytes_streamed: int):
-        self.bytes_streamed += bytes_streamed
-        self.bytes_sliced += bytes_streamed
-        self.steps += 1
-
-    def breakdown(self) -> dict:
-        total = self.t_sample + self.t_slice + self.t_copy + self.t_compute
-        return {
-            "sample_s": round(self.t_sample, 4),
-            "slice_s": round(self.t_slice, 4),
-            "copy_s": round(self.t_copy, 4),
-            "compute_s": round(self.t_compute, 4),
-            "total_s": round(total, 4),
-            "bytes_streamed": self.bytes_streamed,
-            "bytes_cache_fill": self.bytes_cache_fill,
-            "steps": self.steps,
-        }
+__all__ = ["DeviceCache", "TrafficMeter", "TierStats"]
 
 
 class DeviceCache:
     """Features of the cached nodes, pinned on device (§3.2).
 
-    ``refresh`` uploads the feature rows of a new :class:`CacheState`
-    generation; the trainer then assembles input-layer features as::
-
-        h0 = where(slot >= 0, cache_table[slot], streamed_rows)
-
-    inside the jitted step (see models/graphsage.py).
+    Superseded by :class:`repro.featurestore.store.FeatureStore` (which adds
+    tiering, policy plug-in, and async double-buffered refresh); retained as
+    the minimal single-table uploader.
     """
 
     def __init__(self, feat_dim: int, size: int,

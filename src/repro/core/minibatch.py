@@ -65,6 +65,12 @@ class MiniBatch:
     num_cached: int = 0            # of which served by the device cache
     bytes_streamed: int = 0        # host->device feature bytes this batch
     num_isolated: int = 0          # input-layer dst rows with no valid lane (Table 5)
+    cache_gen: object = None       # featurestore.Generation the slots index into
+                                   # (pairs slots with THEIR device table, so an
+                                   # async cache swap can never tear a batch;
+                                   # retention of a superseded generation's O(V)
+                                   # state is bounded by the prefetch depth — at
+                                   # most `depth` queued batches hold it)
 
 
 def block_pad_sizes(batch_size: int, fanouts: Sequence[int]) -> list[tuple[int, int]]:

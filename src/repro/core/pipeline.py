@@ -27,6 +27,12 @@ class EpochLoader:
 
     Drop-last semantics (static shapes want full batches; the paper's epoch
     is |V_s|/batch_size iterations, same convention).
+
+    When the sampler sits on a :class:`repro.featurestore.FeatureStore` with
+    an async refresh in flight, the loader polls ``swap_if_ready`` between
+    batches: a completed shadow generation is atomically published and the
+    sampler adopts it before the next ``sample`` call, so refresh cost
+    overlaps sampling/compute instead of stalling the step.
     """
 
     def __init__(self, sampler, train_idx: np.ndarray, seed: int = 0,
@@ -35,6 +41,13 @@ class EpochLoader:
         self.train_idx = np.asarray(train_idx, dtype=np.int64)
         self.seed = seed
         self.max_batches = max_batches
+
+    def _poll_store(self):
+        store = getattr(self.sampler, "store", None)
+        if store is not None and store.swap_if_ready():
+            adopt = getattr(self.sampler, "adopt_generation", None)
+            if adopt is not None:
+                adopt()
 
     def epoch(self, epoch: int) -> Iterator[MiniBatch]:
         rng = np.random.default_rng(self.seed + 7919 * epoch)
@@ -46,6 +59,7 @@ class EpochLoader:
         if self.max_batches is not None:
             n_batches = min(n_batches, self.max_batches)
         for i in range(n_batches):
+            self._poll_store()
             targets = self.train_idx[perm[i * b:(i + 1) * b]]
             yield self.sampler.sample(targets, rng)
 

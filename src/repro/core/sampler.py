@@ -32,10 +32,11 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.cache import CacheConfig, CacheState, sample_cache, cache_probs
-from repro.core.importance import importance_coefficients, solve_inclusion_lambda
+from repro.core.cache import CacheConfig, CacheState
+from repro.core.importance import importance_coefficients
 from repro.core.minibatch import (DeviceBatch, LayerBlock, MiniBatch,
                                   block_pad_sizes, make_block, pad_to)
+from repro.featurestore.store import FeatureStore, Generation
 from repro.graph.csr import CSRGraph
 
 
@@ -102,7 +103,8 @@ def _union_src(dst_ids: np.ndarray, nbrs: np.ndarray, mask: np.ndarray,
 def _assemble(blocks_topdown: list[LayerBlock], input_ids: np.ndarray,
               targets: np.ndarray, features: np.ndarray, labels: np.ndarray,
               pad_sizes: list[tuple[int, int]], batch_pad: int,
-              cache: Optional[CacheState], cache_feat_dim: int) -> MiniBatch:
+              store: Optional[FeatureStore] = None,
+              gen: Optional[Generation] = None) -> MiniBatch:
     """Pad, split input features into cache hits vs streamed rows, count bytes."""
     blocks = list(reversed(blocks_topdown))          # input-first
     s0 = pad_sizes[0][1]
@@ -111,16 +113,17 @@ def _assemble(blocks_topdown: list[LayerBlock], input_ids: np.ndarray,
     input_mask = np.zeros(s0, dtype=np.float32)
     input_mask[:n_in] = 1.0
 
-    if cache is not None:
-        slots = cache.slot_of[ids_p].astype(np.int32)
-        slots[n_in:] = -1
+    if store is not None and gen is not None:
+        # tier-resolved lookup: device-cache hits + metered host-gather misses
+        slots, streamed, num_cached, bytes_streamed = \
+            store.assemble_input(gen, ids_p, n_in)
     else:
         slots = np.full(s0, -1, dtype=np.int32)
-    miss = (slots < 0) & (input_mask > 0)
-    streamed = np.zeros((s0, features.shape[1]), dtype=np.float32)
-    streamed[miss] = features[ids_p[miss]]           # the CPU "slice" step (§2.2 step 2)
-    num_cached = int(((slots >= 0) & (input_mask > 0)).sum())
-    bytes_streamed = int(miss.sum()) * features.shape[1] * 4
+        miss = (slots < 0) & (input_mask > 0)
+        streamed = np.zeros((s0, features.shape[1]), dtype=np.float32)
+        streamed[miss] = features[ids_p[miss]]       # the CPU "slice" step (§2.2 step 2)
+        num_cached = 0
+        bytes_streamed = int(miss.sum()) * features.shape[1] * 4
 
     lbl = pad_to(labels[targets].astype(np.int32), batch_pad)
     lmask = np.zeros(batch_pad, dtype=np.float32)
@@ -135,7 +138,7 @@ def _assemble(blocks_topdown: list[LayerBlock], input_ids: np.ndarray,
                       labels=lbl, label_mask=lmask)
     return MiniBatch(device=dev, input_node_ids=ids_p, num_input=n_in,
                      num_cached=num_cached, bytes_streamed=bytes_streamed,
-                     num_isolated=isolated)
+                     num_isolated=isolated, cache_gen=gen)
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +174,7 @@ class NeighborSampler:
             blocks.append(make_block(idx, w, pad_dst, pad_src))
             ids = src_ids
         return _assemble(blocks, ids, targets, self.features, self.labels,
-                         self.pad_sizes, cfg.batch_size, None, 0)
+                         self.pad_sizes, cfg.batch_size)
 
 
 # ---------------------------------------------------------------------------
@@ -181,42 +184,81 @@ class NeighborSampler:
 class GNSSampler:
     """Cache-prioritized neighbor sampling with importance correction (§3).
 
-    Holds a versioned :class:`CacheState`; ``start_epoch`` refreshes it every
-    ``cache.period`` epochs (paper Table 6) and rebuilds the induced subgraph
-    S of cached neighbors (§3.3) once per refresh.
+    The cache lifecycle is delegated to a :class:`FeatureStore`: the store
+    owns the versioned generations (membership + staging + device table +
+    induced cached-neighbor subgraph), ``start_epoch`` triggers a refresh
+    every ``cache.period`` epochs (paper Table 6), and with
+    ``cache.async_refresh`` the next generation is built on a background
+    thread while sampling continues against the live one — the sampler adopts
+    the new generation at the next swap point (``adopt_generation``).
     """
 
     name = "gns"
 
     def __init__(self, graph: CSRGraph, cfg: SamplerConfig,
                  features: np.ndarray, labels: np.ndarray,
-                 train_idx: Optional[np.ndarray] = None):
+                 train_idx: Optional[np.ndarray] = None,
+                 store: Optional[FeatureStore] = None):
         self.g, self.cfg = graph, cfg
         self.features, self.labels = features, labels
         self.train_idx = train_idx
         self.pad_sizes = block_pad_sizes(cfg.batch_size, cfg.fanouts)
         self._stamp = _Stamp(graph.num_nodes)
-        self._probs = cache_probs(graph, cfg.cache, train_idx)  # one-time (§3.6)
         # calibrated inclusion rate for eq. (11) under w/o-replacement caches
-        # (see importance.solve_inclusion_lambda); "paper" mode uses eq. (11).
-        self._lam = (solve_inclusion_lambda(self._probs, cfg.cache.size(graph.num_nodes))
-                     if cfg.importance_mode == "ht" else None)
-        self.cache: Optional[CacheState] = None
-        self.cache_adj = None
+        # rides on each generation (store._solve_lambda); "paper" mode uses
+        # the raw eq. (11) approximation.
+        self.store = store if store is not None else FeatureStore(
+            features, graph, cfg.cache, train_idx=train_idx,
+            importance_mode=cfg.importance_mode, build_adjacency=True)
+        self.store.build_adjacency = True    # §3.3 induced subgraph per refresh
+        self._gen: Optional[Generation] = None
         self._epoch = -1
 
     # -- cache lifecycle ---------------------------------------------------
+    @property
+    def cache(self) -> Optional[CacheState]:
+        return self._gen.state if self._gen is not None else None
+
+    @property
+    def cache_adj(self):
+        return self._gen.cache_adj if self._gen is not None else None
+
+    @property
+    def _lam(self) -> Optional[float]:
+        return self._gen.lam if self._gen is not None else None
+
     def refresh_cache(self, rng: np.random.Generator, version: int = 0):
-        self.cache = sample_cache(self.g, self.cfg.cache, rng,
-                                  train_idx=self.train_idx, probs=self._probs,
-                                  version=version)
-        self.cache_adj = self.g.induced_cache_adjacency(self.cache.in_cache)
+        """Synchronous refresh + immediate adoption (seed-compatible API)."""
+        self.store.refresh(rng, version=version)
+        self.adopt_generation()
+
+    def adopt_generation(self) -> bool:
+        """Start sampling against the store's live generation (cheap: the
+        expensive scoring/gather/adjacency work happened at build time)."""
+        gen = self.store.generation
+        if gen is None or gen is self._gen:
+            return False
+        self._gen = gen
+        return True
+
+    def ensure_cache(self, rng: Optional[np.random.Generator] = None):
+        if self._gen is None:
+            self.refresh_cache(rng or np.random.default_rng(0), version=0)
 
     def start_epoch(self, epoch: int, rng: np.random.Generator):
-        if self.cache is None or epoch % self.cfg.cache.period == 0:
-            if epoch != self._epoch or self.cache is None:
+        due = self._gen is None or epoch % self.cfg.cache.period == 0
+        if due and (epoch != self._epoch or self._gen is None):
+            if self.cfg.cache.async_refresh and self._gen is not None:
+                # bounded staleness: if the previous refresh is still in
+                # flight when the next one comes due, absorb it first.
+                if self.store.refreshing or self.store.swap_if_ready():
+                    self.store.wait_refresh()
+                    self.adopt_generation()
+                self.store.begin_refresh(rng, version=epoch)
+            else:
                 self.refresh_cache(rng, version=epoch)
         self._epoch = epoch
+        self.adopt_generation()
 
     # -- sampling ------------------------------------------------------------
     def _sample_layer(self, ids: np.ndarray, k: int, rng: np.random.Generator,
@@ -302,8 +344,8 @@ class GNSSampler:
             blocks.append(make_block(idx, np.where(mask, w, 0.0), pad_dst, pad_src))
             ids = src_ids
         return _assemble(blocks, ids, targets, self.features, self.labels,
-                         self.pad_sizes, cfg.batch_size, self.cache,
-                         self.features.shape[1])
+                         self.pad_sizes, cfg.batch_size,
+                         store=self.store, gen=self._gen)
 
 
 # ---------------------------------------------------------------------------
@@ -395,7 +437,7 @@ class LadiesSampler:
             blocks.append(make_block(idx, w, pad_dst, pad_src))
             ids = src_ids
         return _assemble(blocks, ids, targets, self.features, self.labels,
-                         self.pad_sizes, cfg.batch_size, None, 0)
+                         self.pad_sizes, cfg.batch_size)
 
 
 # ---------------------------------------------------------------------------
@@ -451,7 +493,9 @@ SAMPLERS = {
 
 def make_sampler(name: str, graph: CSRGraph, cfg: SamplerConfig,
                  features: np.ndarray, labels: np.ndarray,
-                 train_idx: Optional[np.ndarray] = None):
+                 train_idx: Optional[np.ndarray] = None,
+                 store: Optional[FeatureStore] = None):
     if name == "gns":
-        return GNSSampler(graph, cfg, features, labels, train_idx=train_idx)
+        return GNSSampler(graph, cfg, features, labels, train_idx=train_idx,
+                          store=store)
     return SAMPLERS[name](graph, cfg, features, labels)

@@ -1,0 +1,29 @@
+"""Multi-tier feature store: device cache → pinned staging → host features.
+
+Public surface:
+
+* :class:`FeatureStore` — the facade (tier reads, refresh lifecycle,
+  double-buffered async refresh with atomic generation swap).
+* :class:`CachePolicy` + ``POLICIES`` / ``register_policy`` / ``make_policy``
+  — the pluggable cache-admission policy registry.
+* :class:`TrafficMeter` / :class:`TierStats` — per-tier traffic accounting.
+* ``CacheConfig`` / ``CacheState`` / ``sample_cache`` / ``cache_probs`` —
+  the §3.2 cache-sampling machinery (absorbed from ``repro.core.cache``).
+"""
+from repro.featurestore.meter import TierStats, TrafficMeter
+from repro.featurestore.policies import (CachePolicy, POLICIES, make_policy,
+                                         register_policy, degree_cache_probs,
+                                         random_walk_cache_probs,
+                                         reverse_pagerank_cache_probs,
+                                         uniform_cache_probs)
+from repro.featurestore.store import (CacheConfig, CacheState, FeatureStore,
+                                      Generation, cache_probs, sample_cache)
+
+__all__ = [
+    "FeatureStore", "Generation", "CacheConfig", "CacheState",
+    "cache_probs", "sample_cache",
+    "CachePolicy", "POLICIES", "make_policy", "register_policy",
+    "degree_cache_probs", "random_walk_cache_probs",
+    "reverse_pagerank_cache_probs", "uniform_cache_probs",
+    "TrafficMeter", "TierStats",
+]

@@ -1,0 +1,79 @@
+"""Traffic accounting for the multi-tier feature store.
+
+The paper's central systems claim is that a small device-pinned cache removes
+most of the host→device feature traffic (Fig. 1: 60–80% of step time is data
+copy).  :class:`TrafficMeter` accounts every byte that crosses a tier
+boundary so the benchmark harness can reproduce the paper's breakdown
+(Fig. 2, Table 4) — now per tier:
+
+* ``device``  — the device-resident cache table (tier 0)
+* ``staging`` — the pinned-host staging buffer mirroring the device table
+* ``host``    — the full host feature array (tier 2, the slow path)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class TierStats:
+    """Hit/miss/byte counters for one storage tier."""
+    name: str
+    hits: int = 0
+    misses: int = 0
+    bytes_read: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "bytes_read": self.bytes_read,
+                "hit_rate": round(self.hit_rate, 4)}
+
+
+@dataclasses.dataclass
+class TrafficMeter:
+    """Aggregate host↔device + host-memory traffic counters (bytes / seconds)."""
+    bytes_streamed: int = 0        # host -> device feature rows (PCIe analog)
+    bytes_sliced: int = 0          # host-memory gather (CPU bandwidth, step 2)
+    bytes_cache_fill: int = 0      # cache refresh transfers
+    t_sample: float = 0.0
+    t_slice: float = 0.0
+    t_copy: float = 0.0
+    t_compute: float = 0.0
+    t_refresh: float = 0.0         # background cache-generation build time
+    steps: int = 0
+    tiers: Dict[str, TierStats] = dataclasses.field(default_factory=dict)
+
+    def tier(self, name: str) -> TierStats:
+        """Per-tier counters, created on first touch."""
+        ts = self.tiers.get(name)
+        if ts is None:
+            ts = self.tiers[name] = TierStats(name)
+        return ts
+
+    def add_batch(self, bytes_streamed: int):
+        self.bytes_streamed += bytes_streamed
+        self.bytes_sliced += bytes_streamed
+        self.steps += 1
+
+    def breakdown(self) -> dict:
+        total = self.t_sample + self.t_slice + self.t_copy + self.t_compute
+        out = {
+            "sample_s": round(self.t_sample, 4),
+            "slice_s": round(self.t_slice, 4),
+            "copy_s": round(self.t_copy, 4),
+            "compute_s": round(self.t_compute, 4),
+            "total_s": round(total, 4),
+            "refresh_s": round(self.t_refresh, 4),
+            "bytes_streamed": self.bytes_streamed,
+            "bytes_cache_fill": self.bytes_cache_fill,
+            "steps": self.steps,
+        }
+        if self.tiers:
+            out["tiers"] = {k: v.as_dict() for k, v in self.tiers.items()}
+        return out

@@ -1,0 +1,449 @@
+"""Multi-tier feature store with pluggable cache policies + async refresh.
+
+Subsumes the seed's ``core/cache.py`` (§3.2 cache sampling) and
+``core/device_cache.py`` (device table upload) behind one facade with three
+storage tiers:
+
+  tier 0 — **device cache table** (``Generation.table``): |C| feature rows
+           pinned on the accelerator, read inside the jitted step via
+           ``h0 = where(slot >= 0, cache_table[slot], streamed)``.
+  tier 1 — **pinned-host staging buffer** (``Generation.staged``): the host
+           mirror the device table was uploaded from; serves host-side reads
+           of cached rows without touching the big feature array.
+  tier 2 — **host features** (``self.features``): the full [V, F] array;
+           every read is metered as streamed bytes (the paper's §2.2 step 2).
+
+Cache admission is delegated to a pluggable :class:`~.policies.CachePolicy`
+(degree / random_walk / reverse_pagerank / adaptive / uniform — see
+``policies.py``); the generation is drawn by Gumbel top-k without
+replacement, exactly as the seed did.
+
+**Double-buffered async refresh** (the paper's Table 6 staleness result makes
+this accuracy-neutral): ``begin_refresh`` builds the *next* generation on a
+background thread — policy scoring, Gumbel top-k draw, host gather into the
+shadow staging buffer, device upload, and (for GNS) the induced cache
+adjacency — while the train step keeps reading the live generation.
+``swap_if_ready`` atomically publishes the shadow between steps.  Readers
+always snapshot ``store.generation`` once per batch, so a batch's cache slots
+and the table they index can never come from different generations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.featurestore.meter import TrafficMeter
+from repro.featurestore.policies import CachePolicy, make_policy
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    fraction: float = 0.01          # |C| / |V|   (paper default 1%)
+    period: int = 1                 # refresh every `period` epochs (Table 6 P)
+    strategy: str = "auto"          # any registered policy name | auto
+    train_frac_threshold: float = 0.5   # auto: degree if train_frac >= this
+    walk_fanouts: Sequence[int] = (15, 10, 5)  # per-layer fanouts for eq. (7)
+    async_refresh: bool = False     # build next generation on a background thread
+
+    def size(self, num_nodes: int) -> int:
+        return max(int(num_nodes * self.fraction), 1)
+
+
+def resolve_strategy(cfg: CacheConfig, num_nodes: int,
+                     train_idx: Optional[np.ndarray]) -> str:
+    """'auto' -> degree for mostly-train graphs, random_walk for sparse V_S."""
+    strategy = cfg.strategy
+    if strategy == "auto":
+        train_frac = 0.0 if train_idx is None else len(train_idx) / num_nodes
+        strategy = "degree" if train_frac >= cfg.train_frac_threshold else "random_walk"
+        if train_idx is None:
+            strategy = "degree"
+    return strategy
+
+
+def cache_probs(g, cfg: CacheConfig,
+                train_idx: Optional[np.ndarray] = None) -> np.ndarray:
+    """One-shot §3.2 probabilities through the policy registry."""
+    strategy = resolve_strategy(cfg, g.num_nodes, train_idx)
+    policy = make_policy(strategy, walk_fanouts=cfg.walk_fanouts)
+    policy.bind(g, train_idx)
+    return policy.probs(g, train_idx)
+
+
+@dataclasses.dataclass
+class CacheState:
+    """One sampled cache generation (versioned for async refresh at pod scale)."""
+    node_ids: np.ndarray        # int64 [|C|]  sorted
+    probs: np.ndarray           # float64 [V]  the distribution it was drawn from
+    in_cache: np.ndarray        # bool [V]
+    slot_of: np.ndarray         # int32 [V]  position in node_ids or -1
+    version: int = 0
+
+    @property
+    def size(self) -> int:
+        return len(self.node_ids)
+
+
+def sample_cache(g, cfg: CacheConfig, rng: np.random.Generator,
+                 train_idx: Optional[np.ndarray] = None,
+                 probs: Optional[np.ndarray] = None,
+                 version: int = 0) -> CacheState:
+    """Draw the cache without replacement according to the §3.2 distribution."""
+    if probs is None:
+        probs = cache_probs(g, cfg, train_idx)
+    size = min(cfg.size(g.num_nodes), int((probs > 0).sum()))
+    # Efficient weighted sampling w/o replacement: Gumbel top-k on log p.
+    with np.errstate(divide="ignore"):
+        logp = np.log(probs)
+    gumbel = -np.log(-np.log(rng.random(g.num_nodes) + 1e-300) + 1e-300)
+    keys = np.where(np.isfinite(logp), logp + gumbel, -np.inf)
+    ids = np.sort(np.argpartition(keys, -size)[-size:].astype(np.int64))
+    in_cache = np.zeros(g.num_nodes, dtype=bool)
+    in_cache[ids] = True
+    slot_of = np.full(g.num_nodes, -1, dtype=np.int32)
+    slot_of[ids] = np.arange(size, dtype=np.int32)
+    return CacheState(node_ids=ids, probs=probs, in_cache=in_cache,
+                      slot_of=slot_of, version=version)
+
+
+@dataclasses.dataclass
+class Generation:
+    """One cache generation: membership + both storage tiers.
+
+    ``state`` and ``table`` are immutable for the generation's whole
+    lifetime (the device table is a fresh array per build), so a snapshot's
+    slots always match its table.  ``staged`` aliases one half of the
+    store's double buffer: when that half is recycled for a later build the
+    store flips ``retired`` first, and staging reads fall back to the host
+    tier — a stale handle can never serve another generation's rows.
+    """
+    state: CacheState
+    table: object               # jax.Array [size, F] — device tier
+    staged: np.ndarray          # f32 [size, F] pinned-host staging mirror
+    staged_idx: int             # which double-buffer half `staged` is
+    lam: Optional[float] = None  # calibrated inclusion λ (importance.py)
+    cache_adj: object = None    # induced cached-neighbor CSR (GNS §3.3)
+    retired: bool = False       # staging half recycled by a newer build
+
+    @property
+    def version(self) -> int:
+        return self.state.version
+
+    def retire(self) -> None:
+        """Mark stale and drop the O(V)/O(E_C) host references so queued
+        MiniBatches holding this generation pin only the device table and
+        the small membership id list, not ~GBs of per-node state at paper
+        scale.  The sampler adopts each new generation long before its
+        predecessor's staging half is recycled, so nothing reads these
+        fields from a retired generation (gather_rows falls back to the
+        host tier)."""
+        self.retired = True
+        self.cache_adj = None
+        self.state.probs = None
+        self.state.in_cache = None
+        self.state.slot_of = None
+
+
+class FeatureStore:
+    """Facade over the three feature tiers + the cache refresh lifecycle."""
+
+    def __init__(self, features: np.ndarray, graph, cfg: CacheConfig, *,
+                 policy: Optional[CachePolicy] = None,
+                 train_idx: Optional[np.ndarray] = None,
+                 sharding=None, dtype=None,
+                 meter: Optional[TrafficMeter] = None,
+                 importance_mode: Optional[str] = "ht",
+                 build_adjacency: bool = False,
+                 seed: int = 0):
+        self.features = features
+        self.graph = graph
+        self.cfg = cfg
+        self.train_idx = train_idx
+        if policy is None:
+            name = resolve_strategy(cfg, graph.num_nodes, train_idx)
+            policy = make_policy(name, walk_fanouts=cfg.walk_fanouts)
+        elif isinstance(policy, str):
+            policy = make_policy(policy, walk_fanouts=cfg.walk_fanouts)
+        self.policy = policy
+        self.policy.bind(graph, train_idx)
+        self.meter = meter if meter is not None else TrafficMeter()
+        self.sharding = sharding
+        self.dtype = dtype
+        self.importance_mode = importance_mode
+        self.build_adjacency = build_adjacency
+        self.size = cfg.size(graph.num_nodes)
+        self.feat_dim = features.shape[1]
+        self._row_bytes = self.feat_dim * 4
+
+        # double-buffered pinned-host staging (tier 1): live half + shadow half
+        self._staging = [np.zeros((self.size, self.feat_dim), np.float32)
+                         for _ in range(2)]
+        self._staging_owner: list = [None, None]   # Generation using each half
+        self._live: Optional[Generation] = None
+        self._shadow: Optional[Generation] = None
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._refresh_err: Optional[BaseException] = None
+        self._static_probs: Optional[np.ndarray] = None
+        self._lam_cache: Optional[tuple] = None
+        self._rng = np.random.default_rng(seed)
+        self.refreshes = 0
+        self.swaps = 0
+        self.record = True          # False: suspend meter + policy feedback
+                                    # (evaluation must not skew training
+                                    # metrics or the adaptive miss EMA)
+        self.refresh_delay = 0.0    # test hook: artificial build latency (s)
+
+    # ------------------------------------------------------------------
+    # generation access (readers snapshot once per batch)
+    # ------------------------------------------------------------------
+    @property
+    def generation(self) -> Optional[Generation]:
+        """The live generation.  Snapshot it once and use only the snapshot:
+        the (state, table) pair inside one Generation is immutable, so a
+        reader can never see slots from one version and rows from another."""
+        return self._live
+
+    @property
+    def state(self) -> Optional[CacheState]:
+        gen = self._live
+        return gen.state if gen is not None else None
+
+    @property
+    def version(self) -> int:
+        gen = self._live
+        return gen.version if gen is not None else -1
+
+    @property
+    def refreshing(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    # ------------------------------------------------------------------
+    # tier reads
+    # ------------------------------------------------------------------
+    def assemble_input(self, gen: Generation, ids_p: np.ndarray, n_in: int):
+        """Resolve padded input ids against one generation.
+
+        Returns (slots, streamed, num_cached, bytes_streamed).  Hits are
+        served by the device table (tier 0, counted but not copied); misses
+        are gathered from host features (tier 2) into the per-batch streamed
+        array and fed back to the policy.
+        """
+        slots = gen.state.slot_of[ids_p].astype(np.int32)
+        slots[n_in:] = -1
+        valid = np.zeros(len(ids_p), dtype=bool)
+        valid[:n_in] = True
+        miss = (slots < 0) & valid
+        hits = int(((slots >= 0) & valid).sum())
+        t0 = time.perf_counter()
+        streamed = np.zeros((len(ids_p), self.feat_dim), np.float32)
+        miss_ids = ids_p[miss]
+        if len(miss_ids):
+            streamed[miss] = self.features[miss_ids]
+        if self.record:
+            self.meter.t_slice += time.perf_counter() - t0
+            dev = self.meter.tier("device")
+            dev.hits += hits
+            dev.misses += len(miss_ids)
+            dev.bytes_read += hits * self._row_bytes
+            host = self.meter.tier("host")
+            host.hits += len(miss_ids)
+            host.bytes_read += len(miss_ids) * self._row_bytes
+            self.policy.observe(miss_ids)
+        return slots, streamed, hits, len(miss_ids) * self._row_bytes
+
+    def gather_rows(self, ids: np.ndarray,
+                    gen: Optional[Generation] = None,
+                    record: Optional[bool] = None) -> np.ndarray:
+        """Host-side row gather through the tier hierarchy.
+
+        Rows present in the generation are served from the pinned staging
+        buffer (tier 1); the rest fall through to the host features (tier 2).
+        This is the refresh path's row source (``_build`` seeds each new
+        generation from the live generation's staging mirror, so rows kept
+        across generations never touch the big feature array) and the
+        public API for host-side reads.  ``record=None`` inherits the
+        store's accounting flag.
+        """
+        if record is None:
+            record = self.record
+        ids = np.asarray(ids, dtype=np.int64)
+        rows = np.empty((len(ids), self.feat_dim), np.float32)
+        rest = np.ones(len(ids), dtype=bool)
+        if gen is None:
+            gen = self._live
+        # capture the slot map before the retired check: retire() drops it,
+        # and holding our own reference keeps the array alive mid-read
+        sl_map = gen.state.slot_of if gen is not None else None
+        if gen is not None and not gen.retired and sl_map is not None:
+            sl = sl_map[ids]
+            hit = sl >= 0
+            rows[hit] = gen.staged[sl[hit]]
+            if gen.retired:
+                # builder recycled this half mid-read (it flips the flag
+                # BEFORE writing): discard and fall through to the host tier
+                rest = np.ones(len(ids), dtype=bool)
+            else:
+                if record:
+                    st = self.meter.tier("staging")
+                    st.hits += int(hit.sum())
+                    st.misses += int((~hit).sum())
+                    st.bytes_read += int(hit.sum()) * self._row_bytes
+                rest = ~hit
+        n_rest = int(rest.sum())
+        if n_rest:
+            rows[rest] = self.features[ids[rest]]
+            if record:
+                host = self.meter.tier("host")
+                host.hits += n_rest
+                host.bytes_read += n_rest * self._row_bytes
+        return rows
+
+    def observe_misses(self, miss_ids: np.ndarray) -> None:
+        self.policy.observe(np.asarray(miss_ids, dtype=np.int64))
+
+    # ------------------------------------------------------------------
+    # refresh lifecycle
+    # ------------------------------------------------------------------
+    def _policy_probs(self) -> np.ndarray:
+        if not self.policy.stateful:
+            if self._static_probs is None:
+                self._static_probs = self.policy.probs(self.graph, self.train_idx)
+            return self._static_probs
+        return self.policy.probs(self.graph, self.train_idx)
+
+    def _solve_lambda(self, probs: np.ndarray) -> Optional[float]:
+        if self.importance_mode != "ht":
+            return None
+        if self._lam_cache is not None and self._lam_cache[0] is probs:
+            return self._lam_cache[1]
+        from repro.core.importance import solve_inclusion_lambda
+        lam = solve_inclusion_lambda(probs, self.size)
+        self._lam_cache = (probs, lam)
+        return lam
+
+    def _build(self, rng: np.random.Generator, version: int,
+               staged_idx: int) -> Generation:
+        """Build one full generation: score → draw → gather → upload."""
+        import jax
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        probs = self._policy_probs()
+        state = sample_cache(self.graph, self.cfg, rng,
+                             train_idx=self.train_idx, probs=probs,
+                             version=version)
+        # recycle this staging half: retire its previous owner BEFORE writing
+        # so stale snapshots fall back to the host tier instead of reading
+        # another generation's rows (see gather_rows)
+        prev = self._staging_owner[staged_idx]
+        if prev is not None:
+            prev.retire()
+        buf = self._staging[staged_idx]
+        n = state.size
+        # seed the new generation through the tier hierarchy: rows that
+        # survive from the live generation come out of its staging mirror
+        # (tier 1, cheap sequential reads), only the delta touches the big
+        # feature array — unmetered (bytes_cache_fill is the refresh metric)
+        buf[:n] = self.gather_rows(state.node_ids, gen=self._live,
+                                   record=False)
+        if n < self.size:
+            buf[n:] = 0.0
+        if self.refresh_delay:
+            time.sleep(self.refresh_delay)            # test hook
+        # jnp.array (copy=True) — asarray zero-copies aligned host buffers on
+        # CPU, which would alias the table to the recycled staging half and
+        # mutate an older generation's "immutable" device tier on reuse
+        tbl = jnp.array(buf, dtype=self.dtype or jnp.float32)
+        if self.sharding is not None:
+            tbl = jax.device_put(tbl, self.sharding)
+        lam = self._solve_lambda(probs)
+        adj = (self.graph.induced_cache_adjacency(state.in_cache)
+               if self.build_adjacency else None)
+        gen = Generation(state=state, table=tbl, staged=buf,
+                         staged_idx=staged_idx, lam=lam, cache_adj=adj)
+        self._staging_owner[staged_idx] = gen
+        self.meter.bytes_cache_fill += n * self._row_bytes
+        self.meter.t_refresh += time.perf_counter() - t0
+        self.refreshes += 1
+        return gen
+
+    def _free_staging_idx(self) -> int:
+        live = self._live
+        return 1 - live.staged_idx if live is not None else 0
+
+    def refresh(self, rng: Optional[np.random.Generator] = None,
+                version: int = 0) -> Generation:
+        """Synchronous refresh: build and immediately publish as live."""
+        if rng is None:
+            rng = self._rng
+        if self.refreshing or self._shadow is not None:
+            # absorb any in-flight async build first — two concurrent builds
+            # would interleave writes into the same staging half
+            self.wait_refresh()
+        gen = self._build(rng, version, self._free_staging_idx())
+        with self._lock:
+            self._live = gen
+            self._shadow = None
+            self.swaps += 1
+        return gen
+
+    def begin_refresh(self, rng: Optional[np.random.Generator] = None,
+                      version: int = 0) -> bool:
+        """Kick an async build of the next generation (shadow).  Returns False
+        if a refresh is already in flight or awaiting swap."""
+        if self.refreshing or self._shadow is not None:
+            return False
+        # derive an independent child rng NOW (in the caller's thread) so the
+        # caller's stream is never mutated concurrently by the builder
+        seed = (rng if rng is not None else self._rng).integers(0, 2**63 - 1)
+        child = np.random.default_rng(seed)
+        staged_idx = self._free_staging_idx()
+
+        def _run():
+            try:
+                gen = self._build(child, version, staged_idx)
+                with self._lock:
+                    self._shadow = gen
+            except BaseException as e:   # surfaced at the next swap point
+                self._refresh_err = e
+
+        self._thread = threading.Thread(target=_run, daemon=True,
+                                        name="featurestore-refresh")
+        self._thread.start()
+        return True
+
+    def swap_if_ready(self) -> bool:
+        """Atomically publish a completed shadow generation.  Called between
+        train steps — never concurrently with a reader holding a snapshot."""
+        if self._refresh_err is not None:
+            err, self._refresh_err = self._refresh_err, None
+            raise err
+        with self._lock:
+            if self._shadow is None:
+                return False
+            self._live, self._shadow = self._shadow, None
+            self.swaps += 1
+            return True
+
+    def wait_refresh(self, timeout: Optional[float] = None) -> bool:
+        """Block until an in-flight refresh finishes, then swap it in."""
+        t = self._thread
+        if t is not None:
+            t.join(timeout)
+        return self.swap_if_ready()
+
+    # ------------------------------------------------------------------
+    # pod-scale shape helpers (used by launch/dryrun_gnn.py)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def padded_rows(num_nodes: int, fraction: float, multiple: int = 1) -> int:
+        """Device-table row count, padded so `multiple` shards divide evenly."""
+        rows = max(int(num_nodes * fraction), 1)
+        rows += (-rows) % max(multiple, 1)
+        return rows

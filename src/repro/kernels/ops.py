@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.cache_lookup import cache_lookup_agg_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gather_agg import gather_agg_pallas
 
@@ -46,6 +47,21 @@ def gather_agg(feat: jax.Array, idx: jax.Array, w: jax.Array,
     while d % bd:
         bd -= 1
     return gather_agg_pallas(feat, idx, w, block_d=bd, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_d"))
+def cache_lookup_agg(cache_table: jax.Array, streamed: jax.Array,
+                     slots: jax.Array, idx: jax.Array, w: jax.Array,
+                     impl: str = "pallas", block_d: int = 512) -> jax.Array:
+    """Fused GNS input layer: cache/streamed select + gather-agg.  [B,D] f32."""
+    if impl == "reference":
+        return ref.cache_lookup_agg_ref(cache_table, streamed, slots, idx, w)
+    d = cache_table.shape[1]
+    bd = min(block_d, d)
+    while d % bd:
+        bd -= 1
+    return cache_lookup_agg_pallas(cache_table, streamed, slots, idx, w,
+                                   block_d=bd, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=(

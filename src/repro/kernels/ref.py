@@ -13,6 +13,32 @@ def gather_agg_ref(feat: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.einsum("bk,bkd->bd", w.astype(jnp.float32), gathered)
 
 
+def cache_lookup_agg_ref(cache_table: jax.Array, streamed: jax.Array,
+                         slots: jax.Array, idx: jax.Array,
+                         w: jax.Array) -> jax.Array:
+    """Fused cache-lookup + first-layer aggregation oracle.
+
+    out[b] = Σ_k w[b,k] · h0[idx[b,k]] with
+    h0[r] = slots[r] >= 0 ? cache_table[slots[r]] : streamed[r].
+
+    Accumulates sequentially over k in f32 — the same association order as
+    the Pallas kernel's K-innermost grid — so interpret-mode parity is
+    *bitwise* whenever the per-step products are exactly representable
+    (XLA:CPU contracts mul+add to FMA, which only differs from separate
+    rounding when the product is inexact), and within 1 ulp otherwise.
+    """
+    s = jnp.take(slots.astype(jnp.int32), idx, axis=0)            # [B, K]
+    hit_rows = jnp.take(cache_table, jnp.clip(s, 0), axis=0)      # [B, K, D]
+    miss_rows = jnp.take(streamed, idx, axis=0)                   # [B, K, D]
+    rows = jnp.where((s >= 0)[..., None], hit_rows,
+                     miss_rows).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    out = jnp.zeros((idx.shape[0], cache_table.shape[1]), jnp.float32)
+    for k in range(idx.shape[1]):        # static K; matches kernel accum order
+        out = out + wf[:, k:k + 1] * rows[:, k]
+    return out
+
+
 def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
             causal: bool = True, window: Optional[int] = None,
             scale: Optional[float] = None,

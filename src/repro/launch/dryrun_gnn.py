@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.minibatch import DeviceBatch, LayerBlock, block_pad_sizes
+from repro.featurestore import FeatureStore
 from repro.launch import sharding as shlib
 from repro.launch.mesh import make_production_mesh
 from repro.models import graphsage
@@ -92,8 +93,10 @@ def run(multi_pod: bool = False) -> dict:
     mcfg = graphsage.SageConfig(feat_dim=FEAT_DIM, hidden_dim=256,
                                 num_classes=NUM_CLASSES, num_layers=3)
     opt = AdamW(AdamConfig(lr=3e-3))
-    cache_rows = int(NUM_NODES * CACHE_FRAC)
-    cache_rows += (-cache_rows) % mesh.shape["model"]   # pad to shard evenly
+    # device-tier shape via the feature-store facade (pads rows so the
+    # 'model'-axis shards divide evenly — the pod-scale cache tier)
+    cache_rows = FeatureStore.padded_rows(NUM_NODES, CACHE_FRAC,
+                                          multiple=mesh.shape["model"])
 
     from jax.sharding import NamedSharding, PartitionSpec as P
     p_structs = jax.eval_shape(

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.kernels import ref as kref
-from repro.launch.sharding import axis_size, constrain, constrain_hard
+from repro.launch.sharding import (axis_size, constrain, constrain_hard,
+                                   shard_map_compat)
 from repro.models.common import apply_rope, dense_init, rms_norm
 
 
@@ -156,7 +157,7 @@ def sharded_attention(q, k, v, *, causal, window, impl,
         return _attend(q, k, v, causal=causal, window=window, impl=impl,
                        q_pos=q_pos, kv_pos=kv_pos)
 
-    fn = jax.shard_map(body, mesh=mesh, check_vma=False, **io)
+    fn = shard_map_compat(body, mesh=mesh, **io)
     return fn(q, k, v, q_pos, kv_pos)
 
 

@@ -38,6 +38,9 @@ class SageConfig:
     num_classes: int = 32
     num_layers: int = 3
     aggregate_impl: str = "reference"  # "reference" | "pallas"
+    input_impl: str = "where"          # "where" | "fused"  (fused = Pallas
+                                       # cache-lookup + layer-0 gather in one
+                                       # pass; h0 is never materialized)
 
 
 def reference_aggregate(h_src: jnp.ndarray, nbr_idx: jnp.ndarray,
@@ -68,23 +71,42 @@ def init_params(rng: jax.Array, cfg: SageConfig) -> dict:
     return params
 
 
-def assemble_input(batch: DeviceBatch, cache_table: jnp.ndarray) -> jnp.ndarray:
-    """h0 from cache hits + streamed misses (the GNS data path)."""
+def assemble_input(batch: DeviceBatch, cache_table: jnp.ndarray,
+                   prefix: Optional[int] = None) -> jnp.ndarray:
+    """h0 from cache hits + streamed misses (the GNS data path).
+
+    ``prefix`` statically truncates to the first N rows — the fused input
+    path only needs the destination self-rows, not the full padded h0.
+    """
     slots = batch.input_cache_slots
+    streamed = batch.input_streamed
+    mask = batch.input_mask
+    if prefix is not None:
+        slots, streamed, mask = slots[:prefix], streamed[:prefix], mask[:prefix]
     hit = slots >= 0
     cached_rows = jnp.take(cache_table, jnp.clip(slots, 0), axis=0)
-    h0 = jnp.where(hit[:, None], cached_rows, batch.input_streamed)
-    return h0 * batch.input_mask[:, None]
+    h0 = jnp.where(hit[:, None], cached_rows, streamed)
+    return h0 * mask[:, None]
 
 
 def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
             cfg: SageConfig) -> jnp.ndarray:
     """Returns logits [B_padded, num_classes]."""
     agg = _get_aggregate(cfg.aggregate_impl)
-    h = assemble_input(batch, cache_table)
+    fused = cfg.input_impl == "fused"
+    h = None if fused else assemble_input(batch, cache_table)
     for i, (blk, layer) in enumerate(zip(batch.blocks, params["layers"])):
-        h_dst = h[: blk.num_dst]
-        a = agg(h, blk.nbr_idx, blk.nbr_w)
+        if i == 0 and fused:
+            # one Pallas pass: cache/streamed select + layer-0 gather-agg;
+            # self rows come from a statically-sliced prefix assembly.
+            from repro.kernels.ops import cache_lookup_agg
+            a = cache_lookup_agg(cache_table, batch.input_streamed,
+                                 batch.input_cache_slots,
+                                 blk.nbr_idx, blk.nbr_w)
+            h_dst = assemble_input(batch, cache_table, prefix=blk.num_dst)
+        else:
+            h_dst = h[: blk.num_dst]
+            a = agg(h, blk.nbr_idx, blk.nbr_w)
         z = jnp.concatenate([h_dst, a], axis=-1) @ layer["w"] + layer["b"]
         h = jax.nn.relu(z) if i < len(batch.blocks) - 1 else z
         h = h * blk.dst_mask[:, None]

@@ -24,9 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import CacheConfig
-from repro.core.device_cache import DeviceCache, TrafficMeter
 from repro.core.pipeline import EpochLoader, Prefetcher
 from repro.core.sampler import GNSSampler, SamplerConfig, make_sampler
+from repro.featurestore import FeatureStore, TrafficMeter
 from repro.graph.datasets import GraphDataset
 from repro.models import graphsage
 from repro.optim.adam import AdamConfig, AdamW
@@ -54,21 +54,23 @@ class GNNTrainer:
         self.scfg = sampler_cfg or SamplerConfig(batch_size=256)
         self.mcfg = model_cfg or graphsage.SageConfig(
             feat_dim=ds.feat_dim, num_classes=ds.num_classes)
+        self.meter = TrafficMeter()
+        if sampler_name == "gns":
+            # the facade owns all three feature tiers + the refresh lifecycle
+            self.store = FeatureStore(
+                ds.features, ds.graph, self.scfg.cache, train_idx=ds.train_idx,
+                meter=self.meter, importance_mode=self.scfg.importance_mode,
+                build_adjacency=True, seed=seed)
+        else:
+            self.store = None
         self.sampler = make_sampler(sampler_name, ds.graph, self.scfg,
                                     ds.features, ds.labels,
-                                    train_idx=ds.train_idx)
-        self.meter = TrafficMeter()
+                                    train_idx=ds.train_idx, store=self.store)
         self.params = graphsage.init_params(jax.random.PRNGKey(seed), self.mcfg)
         self.opt = AdamW(adam_cfg or AdamConfig(lr=3e-3))
         self.opt_state = self.opt.init(self.params)
         self.seed = seed
-
-        if sampler_name == "gns":
-            cache_size = self.scfg.cache.size(ds.graph.num_nodes)
-            self.device_cache = DeviceCache(ds.feat_dim, cache_size)
-        else:
-            self.device_cache = None
-            self._dummy_cache = graphsage.dummy_cache_table(ds.feat_dim)
+        self._dummy_cache = graphsage.dummy_cache_table(ds.feat_dim)
 
         mcfg = self.mcfg
 
@@ -87,19 +89,18 @@ class GNNTrainer:
         self._eval_step = eval_step
 
     # ------------------------------------------------------------------
-    def _cache_table(self):
-        if self.device_cache is not None:
-            return self.device_cache.table
-        return self._dummy_cache
+    def _cache_table(self, mb=None):
+        """The device table the batch's slots index into.
 
-    def _sync_cache(self):
-        """Upload cache rows if the sampler refreshed its cache generation."""
-        if self.device_cache is None:
-            return
-        s = self.sampler
-        if isinstance(s, GNSSampler) and s.cache is not None:
-            if self.device_cache.version != s.cache.version:
-                self.device_cache.refresh(s.cache, self.ds.features, self.meter)
+        Each MiniBatch carries the :class:`Generation` it was assembled
+        against, so even when an async refresh swaps the live generation
+        between sampling and stepping, the step reads the table matching the
+        batch's slot map — a swap can never tear a batch.
+        """
+        gen = getattr(mb, "cache_gen", None) if mb is not None else None
+        if gen is not None:
+            return gen.table
+        return self._dummy_cache
 
     def run_batch(self, mb) -> tuple[float, float]:
         m = self.meter
@@ -109,7 +110,7 @@ class GNNTrainer:
         m.add_batch(mb.bytes_streamed)
         t0 = time.perf_counter()
         self.params, self.opt_state, loss, acc = self._train_step(
-            self.params, self.opt_state, dev_batch, self._cache_table())
+            self.params, self.opt_state, dev_batch, self._cache_table(mb))
         loss = float(loss)
         m.t_compute += time.perf_counter() - t0
         return loss, float(acc)
@@ -129,12 +130,8 @@ class GNNTrainer:
                 it = Prefetcher(it, depth=2)
             else:
                 it = self._timed(it)
-            first = True
             ep_losses = []
             for mb in it:
-                if first:
-                    self._sync_cache()
-                    first = False
                 loss, _ = self.run_batch(mb)
                 ep_losses.append(loss)
                 n_inputs += mb.num_input
@@ -152,15 +149,27 @@ class GNNTrainer:
         return report
 
     def _timed(self, it):
-        """Wrap a batch iterator, attributing wall time to meter.t_sample."""
+        """Wrap a batch iterator, attributing wall time to meter.t_sample.
+
+        The store self-reports the host gather inside ``sample`` to
+        meter.t_slice and (sync-mode) cache builds inside ``start_epoch``
+        to meter.t_refresh; subtract both deltas so each second lands in
+        exactly one bucket.  Clamped at zero: an async build finishing
+        during a short window could otherwise over-subtract.
+        """
         it = iter(it)
         while True:
             t0 = time.perf_counter()
+            slice0 = self.meter.t_slice
+            refresh0 = self.meter.t_refresh
             try:
                 mb = next(it)
             except StopIteration:
                 return
-            self.meter.t_sample += time.perf_counter() - t0
+            elapsed = time.perf_counter() - t0
+            self.meter.t_sample += max(
+                elapsed - (self.meter.t_slice - slice0)
+                - (self.meter.t_refresh - refresh0), 0.0)
             yield mb
 
     def evaluate(self, idx: np.ndarray, num_batches: int = 8) -> float:
@@ -170,14 +179,22 @@ class GNNTrainer:
         if len(idx) < b:  # pad by wrapping; mask handles duplicates' weight
             idx = np.concatenate([idx, idx[: b - len(idx)]])
         rng = np.random.default_rng(1234)
-        self._sync_cache()
+        if isinstance(self.sampler, GNSSampler):
+            self.sampler.ensure_cache(rng)
+        if self.store is not None:
+            self.store.record = False   # eval must not skew training metrics
+                                        # or the adaptive policy's miss EMA
         correct, total = 0.0, 0.0
-        for i in range(num_batches):
-            lo = (i * b) % (len(idx) - b + 1)
-            targets = idx[lo:lo + b]
-            mb = self.sampler.sample(targets, rng)
-            _, acc = self._eval_step(self.params, jax.device_put(mb.device),
-                                     self._cache_table())
-            correct += float(acc)
-            total += 1.0
+        try:
+            for i in range(num_batches):
+                lo = (i * b) % (len(idx) - b + 1)
+                targets = idx[lo:lo + b]
+                mb = self.sampler.sample(targets, rng)
+                _, acc = self._eval_step(self.params, jax.device_put(mb.device),
+                                         self._cache_table(mb))
+                correct += float(acc)
+                total += 1.0
+        finally:
+            if self.store is not None:
+                self.store.record = True
         return correct / max(total, 1.0)

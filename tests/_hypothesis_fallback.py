@@ -1,0 +1,86 @@
+"""Tiny stand-in for ``hypothesis`` when it isn't installed.
+
+The tier-1 suite must run in bare environments (CI containers without the
+``test`` extra).  This shim implements just the surface the property tests
+use — ``given`` / ``settings`` / ``strategies.integers|floats|lists`` — by
+drawing a fixed number of seeded pseudo-random examples per test.  It keeps
+the property tests as randomized smoke coverage; install ``hypothesis``
+(``pip install repro[test]``) for real shrinking/replay.
+
+Usage (see tests/test_kernels.py)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                      # pragma: no cover
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+_MAX_EXAMPLES_CAP = 25      # keep the fallback suite fast
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class st:                                    # mimics `strategies` module
+    @staticmethod
+    def integers(min_value, max_value) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = 20, **_ignored):
+    """Order-independent with ``given``: stamps whichever callable it wraps."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*pos_strategies, **strategies):
+    def deco(fn):
+        if pos_strategies:
+            # hypothesis maps positional strategies to the rightmost params
+            params = list(inspect.signature(fn).parameters)
+            names = params[len(params) - len(pos_strategies):]
+            merged = dict(zip(names, pos_strategies), **strategies)
+        else:
+            merged = strategies
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 20))
+            n = min(n, _MAX_EXAMPLES_CAP)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in merged.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn params from pytest's fixture resolution (hypothesis
+        # does the same): expose only the remaining (fixture) parameters
+        remaining = [p for name, p in inspect.signature(fn).parameters.items()
+                     if name not in merged]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,0 +1,125 @@
+"""Fused cache-lookup + first-layer-gather kernel vs the ref.py oracle.
+
+Bitwise parity on CPU interpret mode uses integer-valued f32 inputs: the
+kernel's accumulation order matches the reference exactly, and with exactly
+representable products the backend's mul+add→FMA contraction is rounding-
+neutral, so equality is bit-for-bit.  Continuous-float sweeps cover the
+same paths at 1-ulp tolerance.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.cache_lookup import cache_lookup_agg_pallas
+from repro.kernels.ops import cache_lookup_agg
+
+
+def _case(rng, c, s0, d, b, k, exact=False, miss_frac=0.5):
+    if exact:
+        cache = rng.integers(-128, 129, (c, d)).astype(np.float32)
+        streamed = rng.integers(-128, 129, (s0, d)).astype(np.float32)
+        w = rng.integers(-8, 9, (b, k)).astype(np.float32)
+    else:
+        cache = rng.normal(size=(c, d)).astype(np.float32)
+        streamed = rng.normal(size=(s0, d)).astype(np.float32)
+        w = rng.normal(size=(b, k)).astype(np.float32)
+    slots = np.full(s0, -1, np.int32)
+    n_hit = min(c, int(s0 * (1 - miss_frac)))
+    slots[rng.choice(s0, n_hit, replace=False)] = rng.permutation(c)[:n_hit]
+    idx = rng.integers(0, s0, (b, k)).astype(np.int32)
+    # streamed rows are zero where cached (as the store assembles them)
+    streamed[slots >= 0] = 0.0 if not exact else streamed[slots >= 0] * 0
+    return (jnp.asarray(cache), jnp.asarray(streamed), jnp.asarray(slots),
+            jnp.asarray(idx), jnp.asarray(w))
+
+
+@pytest.mark.parametrize("c,s0,d,b,k,block_d", [
+    (16, 64, 32, 8, 4, 16),
+    (50, 200, 64, 16, 8, 64),
+    (30, 100, 48, 7, 5, 48),     # d not a power of two
+])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_cache_lookup_bitwise_parity(c, s0, d, b, k, block_d, seed):
+    rng = np.random.default_rng(seed)
+    args = _case(rng, c, s0, d, b, k, exact=True)
+    out = cache_lookup_agg_pallas(*args, block_d=block_d, interpret=True)
+    expect = ref.cache_lookup_agg_ref(*args)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("miss_frac", [0.0, 0.5, 1.0])
+def test_cache_lookup_float_parity(miss_frac):
+    rng = np.random.default_rng(3)
+    args = _case(rng, 40, 150, 32, 12, 6, exact=False, miss_frac=miss_frac)
+    out = cache_lookup_agg_pallas(*args, block_d=32, interpret=True)
+    expect = ref.cache_lookup_agg_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cache_lookup_zero_weight_lanes_ignore_index():
+    """Padded lanes (w=0) must not contribute, whatever their index/slot."""
+    cache = jnp.asarray(np.full((10, 8), 1e30), jnp.float32)
+    streamed = jnp.asarray(np.full((20, 8), -1e30), jnp.float32)
+    slots = jnp.asarray(np.r_[np.arange(10), np.full(10, -1)], jnp.int32)
+    idx = jnp.zeros((4, 3), jnp.int32)
+    w = jnp.zeros((4, 3), jnp.float32)
+    out = cache_lookup_agg_pallas(cache, streamed, slots, idx, w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_cache_lookup_all_miss_matches_gather_agg():
+    """With an empty cache the fused kernel degenerates to gather_agg over
+    the streamed rows."""
+    rng = np.random.default_rng(4)
+    cache = jnp.zeros((5, 16), jnp.float32)
+    streamed = jnp.asarray(rng.normal(size=(60, 16)), jnp.float32)
+    slots = jnp.full((60,), -1, jnp.int32)
+    idx = jnp.asarray(rng.integers(0, 60, (9, 4)), jnp.int32)
+    w = jnp.asarray(rng.random((9, 4)), jnp.float32)
+    out = cache_lookup_agg_pallas(cache, streamed, slots, idx, w, interpret=True)
+    expect = ref.gather_agg_ref(streamed, idx, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ops_wrapper_dispatch():
+    rng = np.random.default_rng(5)
+    args = _case(rng, 20, 80, 24, 6, 4)
+    out_k = cache_lookup_agg(*args, impl="pallas")
+    out_r = cache_lookup_agg(*args, impl="reference")
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_graphsage_fused_input_matches_reference():
+    """input_impl='fused' forward == reference forward on a real GNS batch."""
+    from repro.core.sampler import SamplerConfig, make_sampler
+    from repro.core.cache import CacheConfig
+    from repro.graph.datasets import get_dataset
+    from repro.models import graphsage
+
+    ds = get_dataset("tiny", seed=0)
+    cfg = SamplerConfig(fanouts=(3, 4, 5), batch_size=8,
+                        cache=CacheConfig(fraction=0.2))
+    s = make_sampler("gns", ds.graph, cfg, ds.features, ds.labels,
+                     train_idx=ds.train_idx)
+    rng = np.random.default_rng(0)
+    s.start_epoch(0, rng)
+    mb = s.sample(rng.choice(ds.train_idx, 8, replace=False).astype(np.int64),
+                  rng)
+    assert mb.num_cached > 0            # exercise the cache-hit lane
+
+    mcfg = graphsage.SageConfig(feat_dim=ds.feat_dim, hidden_dim=16,
+                                num_classes=ds.num_classes)
+    params = graphsage.init_params(jax.random.PRNGKey(0), mcfg)
+    table = mb.cache_gen.table
+    ref_logits = graphsage.forward(params, mb.device, table, mcfg)
+    fused_cfg = dataclasses.replace(mcfg, input_impl="fused")
+    fused_logits = graphsage.forward(params, mb.device, table, fused_cfg)
+    np.testing.assert_allclose(np.asarray(fused_logits),
+                               np.asarray(ref_logits), rtol=1e-4, atol=1e-4)

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # bare env: seeded fallback shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.device_cache import TrafficMeter
 from repro.data.tokens import SyntheticCorpus, TokenPipeline

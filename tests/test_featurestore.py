@@ -1,0 +1,322 @@
+"""Multi-tier feature store: policies, tier accounting, async double-buffer."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cache import CacheConfig
+from repro.core.pipeline import EpochLoader
+from repro.core.sampler import GNSSampler, SamplerConfig
+from repro.featurestore import (FeatureStore, POLICIES, make_policy,
+                                register_policy, CachePolicy)
+from repro.featurestore.policies import (degree_cache_probs,
+                                         reverse_pagerank_cache_probs)
+from repro.graph.generate import powerlaw_graph
+
+
+@pytest.fixture(scope="module")
+def g():
+    return powerlaw_graph(3000, avg_degree=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def feats(g):
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((g.num_nodes, 16)).astype(np.float32)
+
+
+def _store(g, feats, strategy="degree", fraction=0.05, train_idx=None, **kw):
+    cfg = CacheConfig(fraction=fraction, strategy=strategy, **kw)
+    return FeatureStore(feats, g, cfg, train_idx=train_idx)
+
+
+# ---------------------------------------------------------------------------
+# policy registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_required_policies():
+    for name in ("degree", "random_walk", "uniform", "reverse_pagerank",
+                 "adaptive"):
+        assert name in POLICIES
+    assert len(POLICIES) >= 4
+
+
+def test_make_policy_unknown_raises():
+    with pytest.raises(ValueError, match="unknown cache policy"):
+        make_policy("nope")
+
+
+def test_register_custom_policy(g):
+    @register_policy
+    class _Fixed(CachePolicy):
+        name = "_test_fixed"
+
+        def scores(self, graph, train_idx=None):
+            s = np.zeros(graph.num_nodes)
+            s[:10] = 1.0
+            return s
+
+    try:
+        p = make_policy("_test_fixed")
+        probs = p.probs(g)
+        assert probs[:10].sum() == pytest.approx(1.0)
+        assert (probs[10:] == 0).all()
+    finally:
+        del POLICIES["_test_fixed"]
+
+
+def test_reverse_pagerank_concentrates_near_train(g):
+    rng = np.random.default_rng(1)
+    train = rng.choice(g.num_nodes, size=40, replace=False)
+    p = reverse_pagerank_cache_probs(g, train, iters=10)
+    assert p.sum() == pytest.approx(1.0)
+    hood = np.array(sorted({v for t in train for v in [t, *g.neighbors(t)]}))
+    assert p[hood].sum() > 3 * len(hood) / g.num_nodes
+
+
+def test_adaptive_policy_tracks_misses(g):
+    p = make_policy("adaptive")
+    p.bind(g)
+    hot = np.arange(50, 80)
+    for _ in range(5):
+        p.observe(hot)
+    probs = p.probs(g)
+    # observed nodes hold most of the mass once feedback accumulates
+    assert probs[hot].sum() > 0.5
+    # cold start equals the degree prior
+    p2 = make_policy("adaptive")
+    p2.bind(g)
+    np.testing.assert_allclose(p2.probs(g), degree_cache_probs(g))
+
+
+# ---------------------------------------------------------------------------
+# tiers
+# ---------------------------------------------------------------------------
+
+def test_generation_pairs_state_and_table(g, feats):
+    store = _store(g, feats)
+    gen = store.refresh(np.random.default_rng(0), version=3)
+    assert gen.version == 3 and store.version == 3
+    n = gen.state.size
+    np.testing.assert_array_equal(np.asarray(gen.table)[:n],
+                                  feats[gen.state.node_ids])
+    np.testing.assert_array_equal(gen.staged[:n], feats[gen.state.node_ids])
+
+
+def test_assemble_input_tier_accounting(g, feats):
+    store = _store(g, feats)
+    gen = store.refresh(np.random.default_rng(0))
+    ids = np.arange(200, dtype=np.int64)
+    ids_p = np.concatenate([ids, np.zeros(56, np.int64)])
+    slots, streamed, hits, bts = store.assemble_input(gen, ids_p, len(ids))
+    misses = (slots[:200] < 0).sum()
+    assert hits + misses == 200
+    assert bts == misses * feats.shape[1] * 4
+    assert store.meter.tier("device").hits == hits
+    assert store.meter.tier("device").misses == misses
+    assert store.meter.tier("host").bytes_read == bts
+    # streamed rows hold exactly the missed features, hits stay zero
+    miss_mask = (slots < 0) & (np.arange(256) < 200)
+    np.testing.assert_array_equal(streamed[miss_mask], feats[ids_p[miss_mask]])
+    hit_mask = slots >= 0
+    assert (streamed[hit_mask] == 0).all()
+    # padded tail is never resolved against the cache
+    assert (slots[200:] == -1).all()
+
+
+def test_stale_generation_staging_retired(g, feats):
+    """A generation handle held across two refreshes must never serve
+    another generation's rows from the recycled staging buffer — the store
+    retires the half and falls back to the host tier."""
+    store = _store(g, feats, fraction=0.03)
+    old = store.refresh(np.random.default_rng(0), version=0)
+    store.refresh(np.random.default_rng(1), version=1)    # uses other half
+    assert not old.retired
+    store.refresh(np.random.default_rng(2), version=2)    # recycles old's half
+    assert old.retired
+    ids = old.state.node_ids[:8]
+    rows = store.gather_rows(ids, gen=old)
+    np.testing.assert_array_equal(rows, feats[ids])       # host tier, correct
+    # the retired gen's device table is untouched (fresh array per build)
+    np.testing.assert_array_equal(np.asarray(old.table)[:4],
+                                  feats[old.state.node_ids[:4]])
+
+
+def test_gather_rows_staging_tier(g, feats):
+    store = _store(g, feats)
+    gen = store.refresh(np.random.default_rng(0))
+    cached_ids = gen.state.node_ids[:10]
+    other_ids = np.where(~gen.state.in_cache)[0][:10]
+    rows = store.gather_rows(np.concatenate([cached_ids, other_ids]), gen)
+    np.testing.assert_array_equal(rows[:10], feats[cached_ids])
+    np.testing.assert_array_equal(rows[10:], feats[other_ids])
+    assert store.meter.tier("staging").hits == 10
+    assert store.meter.tier("staging").misses == 10
+    assert store.meter.tier("host").hits == 10
+
+
+# ---------------------------------------------------------------------------
+# async double-buffered refresh
+# ---------------------------------------------------------------------------
+
+def test_async_refresh_steps_proceed_and_no_torn_reads(g, feats):
+    """Training-analog steps keep running against the live generation while a
+    slow refresh builds the shadow; a snapshot is never torn (its table always
+    matches its own state), and the swap lands only at the swap point."""
+    store = _store(g, feats, fraction=0.03)
+    store.refresh(np.random.default_rng(0), version=0)
+    store.refresh_delay = 0.3                 # slow background build
+    assert store.begin_refresh(np.random.default_rng(1), version=1)
+    assert not store.begin_refresh(np.random.default_rng(2), version=9)  # busy
+
+    steps = 0
+    t0 = time.perf_counter()
+    while store.refreshing and time.perf_counter() - t0 < 5.0:
+        gen = store.generation          # the one atomic read a step performs
+        assert gen.version == 0         # shadow never leaks before the swap
+        n = gen.state.size
+        np.testing.assert_array_equal(np.asarray(gen.table)[:4],
+                                      feats[gen.state.node_ids[:4]])
+        assert n <= store.size
+        steps += 1
+    assert steps >= 3                   # steps ran *during* the refresh
+    assert store.wait_refresh(timeout=5.0)
+    assert store.version == 1
+    gen = store.generation
+    np.testing.assert_array_equal(np.asarray(gen.table)[:4],
+                                  feats[gen.state.node_ids[:4]])
+    assert store.swaps == 2 and store.refreshes == 2
+
+
+def test_async_refresh_hammered_snapshots_consistent(g, feats):
+    """A reader thread hammering snapshots across many swap cycles never sees
+    a (state, table) pair from two different generations."""
+    store = _store(g, feats, fraction=0.02)
+    store.refresh(np.random.default_rng(0), version=0)
+    stop = threading.Event()
+    torn = []
+
+    def reader():
+        while not stop.is_set():
+            gen = store.generation
+            tbl = np.asarray(gen.table)[:2]
+            if not (tbl == store.features[gen.state.node_ids[:2]]).all():
+                torn.append(gen.version)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for v in range(1, 6):
+            store.begin_refresh(np.random.default_rng(v), version=v)
+            store.wait_refresh(timeout=5.0)
+    finally:
+        stop.set()
+        t.join(5.0)
+    assert store.version == 5
+    assert not torn
+
+
+def test_async_refresh_error_surfaces_at_swap(g, feats):
+    store = _store(g, feats)
+    store.refresh(np.random.default_rng(0))
+
+    def boom(*a, **kw):
+        raise RuntimeError("policy exploded")
+
+    store.policy.probs = boom
+    store._static_probs = None
+    store.begin_refresh(np.random.default_rng(1), version=1)
+    store._thread.join(5.0)
+    with pytest.raises(RuntimeError, match="policy exploded"):
+        store.swap_if_ready()
+
+
+def test_gns_sampler_async_epoch_loop(g, feats):
+    """End-to-end: async-refresh GNS sampler adopts the new generation at a
+    batch boundary, and every minibatch carries the generation its slots
+    index into."""
+    labels = np.zeros(g.num_nodes, np.int32)
+    train = np.arange(0, 1500, dtype=np.int64)
+    cfg = SamplerConfig(fanouts=(3, 4), batch_size=64,
+                        cache=CacheConfig(fraction=0.05, period=1,
+                                          async_refresh=True))
+    s = GNSSampler(g, cfg, feats, labels, train_idx=train)
+    loader = EpochLoader(s, train, seed=0, max_batches=4)
+    seen_versions = set()
+    for ep in range(3):
+        for mb in loader.epoch(ep):
+            gen = mb.cache_gen
+            assert gen is not None
+            seen_versions.add(gen.version)
+            # slots resolve against THIS generation's slot map
+            real = mb.input_node_ids[:mb.num_input]
+            np.testing.assert_array_equal(
+                mb.device.input_cache_slots[:mb.num_input],
+                gen.state.slot_of[real])
+        # drain any in-flight refresh so the test is deterministic
+        s.store.wait_refresh(timeout=5.0)
+        s.adopt_generation()
+    assert len(seen_versions) >= 2          # refreshes actually happened
+    assert s.store.refreshes >= 2
+
+
+def test_sync_refresh_absorbs_inflight_async_build(g, feats):
+    """refresh() during an async build must not race it into the same
+    staging half — it waits, swaps, then builds on the freed half."""
+    store = _store(g, feats, fraction=0.03)
+    store.refresh(np.random.default_rng(0), version=0)
+    store.refresh_delay = 0.2
+    assert store.begin_refresh(np.random.default_rng(1), version=1)
+    store.refresh_delay = 0.0
+    gen = store.refresh(np.random.default_rng(2), version=2)   # absorbs v1
+    assert gen.version == 2 and store.version == 2
+    assert store.refreshes == 3                 # v1 completed, not clobbered
+    n = gen.state.size
+    np.testing.assert_array_equal(np.asarray(gen.table)[:n],
+                                  feats[gen.state.node_ids])
+
+
+def test_record_flag_suspends_metering_and_feedback(g, feats):
+    """Eval-path lookups (store.record=False) touch neither the meter nor
+    the adaptive policy's miss EMA."""
+    store = _store(g, feats, strategy="adaptive")
+    gen = store.refresh(np.random.default_rng(0))
+    ids_p = np.arange(100, dtype=np.int64)
+    store.record = False
+    slots, streamed, hits, bts = store.assemble_input(gen, ids_p, 100)
+    assert bts > 0                              # batch-level bytes still reported
+    assert not store.meter.tiers                # no tier counters created
+    assert store.policy._ema.sum() == 0         # no miss feedback
+    store.record = True
+    store.assemble_input(gen, ids_p, 100)
+    assert store.meter.tier("device").hits + store.meter.tier("device").misses == 100
+    assert store.policy._ema.sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# policy quality: smarter admission >= degree on a power-law graph
+# ---------------------------------------------------------------------------
+
+def _hit_rate(g, feats, strategy, epochs=3, seed=0):
+    labels = np.zeros(g.num_nodes, np.int32)
+    train = np.random.default_rng(7).choice(
+        g.num_nodes, size=600, replace=False).astype(np.int64)
+    cfg = SamplerConfig(fanouts=(3, 5), batch_size=100,
+                        cache=CacheConfig(fraction=0.05, period=1,
+                                          strategy=strategy))
+    s = GNSSampler(g, cfg, feats, labels, train_idx=np.sort(train))
+    loader = EpochLoader(s, np.sort(train), seed=seed, max_batches=6)
+    cached = inputs = 0
+    for ep in range(epochs):
+        for mb in loader.epoch(ep):
+            cached += mb.num_cached
+            inputs += mb.num_input
+    return cached / max(inputs, 1)
+
+
+def test_adaptive_policy_beats_degree_hit_rate(g, feats):
+    hr_deg = _hit_rate(g, feats, "degree")
+    hr_ada = _hit_rate(g, feats, "adaptive")
+    # cold-start epoch is degree-identical; feedback epochs only improve it
+    assert hr_ada >= hr_deg * 0.95, (hr_ada, hr_deg)

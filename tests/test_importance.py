@@ -6,7 +6,11 @@ This is exactly eq. (5)/(B.15) — the property Theorem 1's proof rests on.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # bare env: seeded fallback shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.cache import CacheConfig
 from repro.core.importance import cache_hit_prob, importance_coefficients
