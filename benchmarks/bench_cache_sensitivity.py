@@ -1,7 +1,10 @@
 """Paper Table 6: GNS F1 vs cache size x refresh period P — plus a cache
 *policy* sweep (degree / random_walk / reverse_pagerank / adaptive / uniform)
 reporting per-policy hit-rate and bytes_streamed on a synthetic power-law
-graph (the regime where admission policy matters: hub coverage)."""
+graph (the regime where admission policy matters: hub coverage) — plus the
+shard-aware refresh upload measurement (``run_sharded_upload``): per-
+generation device-upload bytes with the table row-sharded over an n-device
+mesh vs the replicated baseline (expected ratio 1/n)."""
 from __future__ import annotations
 
 import numpy as np
@@ -11,6 +14,9 @@ from benchmarks.common import emit, run_trainer
 FIELDS = ["cache_fraction", "period", "f1"]
 POLICY_FIELDS = ["policy", "hit_rate", "bytes_streamed", "bytes_cache_fill",
                  "input_nodes_per_batch"]
+SHARD_FIELDS = ["n_devices", "n_shards", "cache_rows",
+                "upload_bytes_per_gen_sharded",
+                "upload_bytes_per_gen_replicated", "upload_ratio"]
 
 POLICY_SWEEP = ["degree", "random_walk", "reverse_pagerank", "adaptive",
                 "uniform"]
@@ -80,6 +86,58 @@ def run_policies(fast: bool = True, nodes: int = 6000, avg_degree: int = 10,
     return emit("cache_policy_sweep", rows, POLICY_FIELDS)
 
 
+def run_sharded_upload(fast: bool = True, nodes: int = 6000,
+                       feat_dim: int = 64, cache_fraction: float = 0.05,
+                       refreshes: int = 3, seed: int = 0) -> list:
+    """Per-generation refresh upload bytes: shard-aware vs replicated.
+
+    Builds two feature stores over every device this process exposes (run
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to mock an
+    N-device mesh): one with the generation table row-sharded over a 1-D
+    mesh — each device receives only its own rows — and one replicating the
+    table to every device (the pre-sharding behavior).  The acceptance
+    number is ``upload_ratio`` ~ 1/n_devices.
+    """
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.core.cache import CacheConfig
+    from repro.featurestore import FeatureStore
+    from repro.graph.generate import powerlaw_graph
+
+    if not fast:
+        nodes, refreshes = 30_000, 5
+    devs = jax.devices()
+    mesh = Mesh(np.asarray(devs), ("data",))
+    g = powerlaw_graph(nodes, avg_degree=10, seed=seed)
+    rng = np.random.default_rng(seed)
+    feats = rng.standard_normal((g.num_nodes, feat_dim)).astype(np.float32)
+    # identical shard-padded table rows for BOTH stores, so the emitted
+    # ratio is exactly 1/n even when n does not divide the raw |C|
+    cfg = CacheConfig(fraction=cache_fraction, shards=len(devs))
+
+    def refresh_bytes(store):
+        for v in range(refreshes):
+            store.refresh(np.random.default_rng(seed + v), version=v)
+        return store.meter.bytes_cache_upload // refreshes
+
+    sharded = FeatureStore(feats, g, cfg, mesh=mesh, shard_axis="data")
+    replicated = FeatureStore(feats, g, cfg,
+                              sharding=NamedSharding(mesh, P()))
+    up_sh = refresh_bytes(sharded)
+    up_re = refresh_bytes(replicated)
+    rows = [{
+        "n_devices": len(devs),
+        "n_shards": sharded.n_shards,
+        "cache_rows": sharded.size,
+        "upload_bytes_per_gen_sharded": up_sh,
+        "upload_bytes_per_gen_replicated": up_re,
+        "upload_ratio": up_sh / max(up_re, 1),
+    }]
+    return emit("sharded_upload", rows, SHARD_FIELDS)
+
+
 if __name__ == "__main__":
+    run_sharded_upload(fast=True)
     run_policies(fast=True)
     run(fast=True)

@@ -32,6 +32,8 @@ final inverse weight is clamped to keep variance bounded.
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 
@@ -48,13 +50,22 @@ def cache_hit_prob(p: np.ndarray, cache_size: int,
     inflation on power-law hubs — see tests/test_importance.py).
     """
     p = np.asarray(p, dtype=np.float64)
+    if lam is not None and not (np.isfinite(lam) and lam > 0):
+        # degenerate calibration (failed bracket, inf/nan, non-positive):
+        # the λ path would return inclusion probabilities that don't sum to
+        # |C| — fall back to the independence approximation instead.
+        warnings.warn(
+            f"cache_hit_prob: degenerate lam={lam!r}; falling back to the "
+            "independence approximation (eq. 11)", RuntimeWarning)
+        lam = None
     if lam is None:
         return -np.expm1(cache_size * np.log1p(-np.minimum(p, 1.0 - 1e-12)))
     return -np.expm1(-lam * p)
 
 
 def solve_inclusion_lambda(probs: np.ndarray, cache_size: int,
-                           tol: float = 1e-6, max_iter: int = 200) -> float:
+                           tol: float = 1e-6,
+                           max_iter: int = 200) -> float | None:
     """Calibrate λ so that Σ_i (1 - exp(-λ p_i)) = |C|.
 
     This is the classic inclusion-probability approximation for weighted
@@ -64,10 +75,28 @@ def solve_inclusion_lambda(probs: np.ndarray, cache_size: int,
     must be upweighted).  One-time cost per cache distribution — the GNS
     distribution is global and static (§3.6), so this is amortized like the
     distribution itself.
+
+    Degenerate inputs return ``None`` with a warning, which callers
+    (``cache_hit_prob(lam=None)``) treat as "use the independence
+    approximation": a cache at least as large as the positive-probability
+    support (every such node is included w.p. 1, λ* = ∞), an all-zero
+    probability vector, or a bracket that fails to close numerically.
     """
     p = np.asarray(probs, dtype=np.float64)
     p = p[p > 0]
-    m = float(min(cache_size, len(p)))
+    if len(p) == 0:
+        warnings.warn("solve_inclusion_lambda: all-zero probability vector; "
+                      "falling back to the independence approximation",
+                      RuntimeWarning)
+        return None
+    if cache_size >= len(p):
+        warnings.warn(
+            f"solve_inclusion_lambda: cache_size={cache_size} >= "
+            f"{len(p)} positive-probability nodes — every node is cached "
+            "(λ* = ∞); falling back to the independence approximation",
+            RuntimeWarning)
+        return None
+    m = float(cache_size)
 
     def total(lam: float) -> float:
         return float(-np.expm1(-lam * p).sum())
@@ -78,6 +107,12 @@ def solve_inclusion_lambda(probs: np.ndarray, cache_size: int,
         if total(hi) >= m * (1 - 1e-12):
             break
         hi *= 2.0
+    else:
+        warnings.warn(
+            "solve_inclusion_lambda: bisection failed to bracket "
+            f"(cache_size={cache_size}, support={len(p)}); falling back to "
+            "the independence approximation", RuntimeWarning)
+        return None
     for _ in range(max_iter):
         mid = 0.5 * (lo + hi)
         if total(mid) < m:

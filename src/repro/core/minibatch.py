@@ -66,11 +66,18 @@ class MiniBatch:
     bytes_streamed: int = 0        # host->device feature bytes this batch
     num_isolated: int = 0          # input-layer dst rows with no valid lane (Table 5)
     cache_gen: object = None       # featurestore.Generation the slots index into
-                                   # (pairs slots with THEIR device table, so an
-                                   # async cache swap can never tear a batch;
-                                   # retention of a superseded generation's O(V)
-                                   # state is bounded by the prefetch depth — at
-                                   # most `depth` queued batches hold it)
+                                   # (pairs slots with THEIR device table — on a
+                                   # sharded mesh, with their per-device table
+                                   # shards — so an async cache swap can never
+                                   # tear a batch; retention of a superseded
+                                   # generation's O(V) state is bounded by the
+                                   # prefetch depth — at most `depth` queued
+                                   # batches hold it)
+
+    @property
+    def cache_version(self) -> int:
+        """Version of the generation the slots resolve against (-1 = none)."""
+        return self.cache_gen.version if self.cache_gen is not None else -1
 
 
 def block_pad_sizes(batch_size: int, fanouts: Sequence[int]) -> list[tuple[int, int]]:

@@ -43,6 +43,17 @@ class EpochLoader:
         self.max_batches = max_batches
 
     def _poll_store(self):
+        """Swap point: publish a completed shadow generation, then have the
+        sampler adopt it BEFORE the next ``sample`` call.
+
+        Ordering matters for the swap-race contract (see
+        ``GNSSampler.adopt_generation``): the swap and the adoption both
+        happen here, between batches, on the sampling thread — never while a
+        batch is being assembled — so a single batch's slot map, weights and
+        cache adjacency all come from one generation.  Already-queued batches
+        keep their own ``cache_gen`` (and its immutable device table /
+        per-device shards); only future batches see the new generation.
+        """
         store = getattr(self.sampler, "store", None)
         if store is not None and store.swap_if_ready():
             adopt = getattr(self.sampler, "adopt_generation", None)

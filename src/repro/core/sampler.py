@@ -234,10 +234,22 @@ class GNSSampler:
 
     def adopt_generation(self) -> bool:
         """Start sampling against the store's live generation (cheap: the
-        expensive scoring/gather/adjacency work happened at build time)."""
+        expensive scoring/gather/adjacency work happened at build time).
+
+        Swap-race contract (audited for the sharded path in
+        tests/test_sharded_store.py): adoption only moves FORWARD — every
+        batch sampled before this call keeps the generation object it was
+        assembled against (``MiniBatch.cache_gen``), whose state/table pair
+        (and, sharded, its per-device table shards) is immutable for the
+        generation's lifetime, so a batch sampled against generation *g*
+        can never resolve slots against *g+1* shard tables.
+        """
         gen = self.store.generation
         if gen is None or gen is self._gen:
             return False
+        assert self._gen is None or gen.version >= self._gen.version, (
+            "generation adoption must be monotonic",
+            gen.version, self._gen.version)
         self._gen = gen
         return True
 

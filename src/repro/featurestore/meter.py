@@ -40,7 +40,12 @@ class TrafficMeter:
     """Aggregate host↔device + host-memory traffic counters (bytes / seconds)."""
     bytes_streamed: int = 0        # host -> device feature rows (PCIe analog)
     bytes_sliced: int = 0          # host-memory gather (CPU bandwidth, step 2)
-    bytes_cache_fill: int = 0      # cache refresh transfers
+    bytes_cache_fill: int = 0      # cache refresh host-side gather (|C| rows)
+    bytes_cache_upload: int = 0    # cache refresh host->device transfer: sum of
+                                   # bytes actually landed on each device — a
+                                   # shard-aware upload pays table/n_shards per
+                                   # device, a replicated one pays the full table
+    uploads: int = 0               # device-table uploads (one per generation)
     t_sample: float = 0.0
     t_slice: float = 0.0
     t_copy: float = 0.0
@@ -72,6 +77,8 @@ class TrafficMeter:
             "refresh_s": round(self.t_refresh, 4),
             "bytes_streamed": self.bytes_streamed,
             "bytes_cache_fill": self.bytes_cache_fill,
+            "bytes_cache_upload": self.bytes_cache_upload,
+            "uploads": self.uploads,
             "steps": self.steps,
         }
         if self.tiers:

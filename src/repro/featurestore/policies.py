@@ -14,9 +14,11 @@ Shipped policies:
   (*Graph Neural Network Training with Data Tiering*, arXiv:2111.05894):
   importance flows backward along edges with the per-source visit probability
   min(fanout/deg, 1), restarted at the training set.
-* ``adaptive``         — EMA of observed cache-miss frequencies (top-up
-  misses fed back through ``observe``); converges onto the realized working
-  set, degree prior for cold start.
+* ``adaptive``         — EMA of observed request frequencies (the full
+  requested-id traffic — hits AND misses — fed back through ``observe``);
+  converges onto the realized working set, degree prior for cold start.
+  Feeding only misses starves the EMA of nodes once they become hits, so
+  they decay, get evicted, miss again — oscillating churn.
 
 Registering a new policy::
 
@@ -114,7 +116,7 @@ def uniform_cache_probs(g) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 class CachePolicy:
-    """Scores nodes for cache admission; stateful policies learn from misses."""
+    """Scores nodes for cache admission; stateful policies learn from traffic."""
 
     name: str = "base"
     stateful: bool = False      # True -> scores change between refreshes
@@ -122,8 +124,9 @@ class CachePolicy:
     def bind(self, graph, train_idx: Optional[np.ndarray] = None) -> None:
         """Attach to a graph (allocate per-node state).  Idempotent."""
 
-    def observe(self, miss_ids: np.ndarray) -> None:
-        """Feed back node ids that missed the cache (no-op unless stateful)."""
+    def observe(self, ids: np.ndarray) -> None:
+        """Feed back the node ids requested from the cache this batch — the
+        full traffic, hits and misses alike (no-op unless stateful)."""
 
     def scores(self, graph, train_idx: Optional[np.ndarray] = None) -> np.ndarray:
         raise NotImplementedError
@@ -199,13 +202,17 @@ class ReversePageRankPolicy(CachePolicy):
 
 @register_policy
 class AdaptivePolicy(CachePolicy):
-    """EMA of observed top-up misses, degree prior for cold start.
+    """EMA of observed request traffic, degree prior for cold start.
 
-    ``observe`` is called with the node ids that missed the device cache; the
-    per-node EMA decays by ``decay`` at every refresh, so the scores track the
-    recent working set.  With no observations yet the policy degenerates to
-    the degree policy (prior mass ``prior_weight``), so the first generation
-    matches the paper's eq. (6) cache.
+    ``observe`` is called with every node id requested from the device cache
+    — hits as well as misses (the store feeds the full batch traffic).  The
+    per-node EMA decays by ``decay`` at every refresh, so the scores track
+    the recent working set.  Observing only misses would starve cached nodes
+    of feedback: their EMA decays to the prior, they get evicted, miss, get
+    readmitted — churn that the regression test in tests/test_featurestore.py
+    pins down.  With no observations yet the policy degenerates to the degree
+    policy (prior mass ``prior_weight``), so the first generation matches the
+    paper's eq. (6) cache.
     """
 
     name = "adaptive"
@@ -227,11 +234,11 @@ class AdaptivePolicy(CachePolicy):
                 self._ema = np.zeros(graph.num_nodes, dtype=np.float64)
                 self._prior = degree_cache_probs(graph)
 
-    def observe(self, miss_ids: np.ndarray) -> None:
-        if self._ema is None or len(miss_ids) == 0:
+    def observe(self, ids: np.ndarray) -> None:
+        if self._ema is None or len(ids) == 0:
             return
         with self._lock:
-            np.add.at(self._ema, np.asarray(miss_ids, dtype=np.int64), 1.0)
+            np.add.at(self._ema, np.asarray(ids, dtype=np.int64), 1.0)
 
     def scores(self, graph, train_idx=None) -> np.ndarray:
         self.bind(graph, train_idx)

@@ -26,6 +26,15 @@ adjacency — while the train step keeps reading the live generation.
 ``swap_if_ready`` atomically publishes the shadow between steps.  Readers
 always snapshot ``store.generation`` once per batch, so a batch's cache slots
 and the table they index can never come from different generations.
+
+**Shard-aware generations** (production mesh): with ``mesh`` + ``shard_axis``
+the device table is row-partitioned into ``mesh.shape[shard_axis]``
+contiguous blocks (padded via :attr:`CacheConfig.shards` so they divide
+evenly), global cache slots map to (shard, local row) by
+``divmod(slot, rows_per_shard)`` (:class:`CacheState`), and the refresh
+uploads only each device's own shard — 1/n_shards of the replicated
+transfer (``TrafficMeter.bytes_cache_upload``; see
+benchmarks/bench_cache_sensitivity.run_sharded_upload).
 """
 from __future__ import annotations
 
@@ -48,9 +57,14 @@ class CacheConfig:
     train_frac_threshold: float = 0.5   # auto: degree if train_frac >= this
     walk_fanouts: Sequence[int] = (15, 10, 5)  # per-layer fanouts for eq. (7)
     async_refresh: bool = False     # build next generation on a background thread
+    shards: int = 1                 # device-table row shards (mesh cache axis);
+                                    # the table is padded so shards divide evenly
 
     def size(self, num_nodes: int) -> int:
-        return max(int(num_nodes * self.fraction), 1)
+        """Device-table rows: |C| padded so `shards` rows-per-shard are equal."""
+        rows = max(int(num_nodes * self.fraction), 1)
+        rows += (-rows) % max(self.shards, 1)
+        return rows
 
 
 def resolve_strategy(cfg: CacheConfig, num_nodes: int,
@@ -76,26 +90,68 @@ def cache_probs(g, cfg: CacheConfig,
 
 @dataclasses.dataclass
 class CacheState:
-    """One sampled cache generation (versioned for async refresh at pod scale)."""
+    """One sampled cache generation (versioned for async refresh at pod scale).
+
+    **Shard-aware slot layout**: the device table holds ``table_rows`` rows
+    partitioned into ``n_shards`` equal *contiguous* blocks — exactly how a
+    ``NamedSharding(mesh, P(axis, None))`` splits the row dimension — so a
+    global cache slot ``s`` lives on shard ``s // rows_per_shard`` at local
+    row ``s % rows_per_shard``.  Samplers and the host-side tiers keep using
+    global slots; only the device upload and the fused lookup kernel need the
+    (shard, local row) view, via :meth:`shard_of` / :meth:`local_row`.
+    """
     node_ids: np.ndarray        # int64 [|C|]  sorted
     probs: np.ndarray           # float64 [V]  the distribution it was drawn from
     in_cache: np.ndarray        # bool [V]
     slot_of: np.ndarray         # int32 [V]  position in node_ids or -1
     version: int = 0
+    n_shards: int = 1           # contiguous row shards of the device table
+    table_rows: int = 0         # padded device-table rows (0 = len(node_ids))
 
     @property
     def size(self) -> int:
         return len(self.node_ids)
 
+    @property
+    def rows_per_shard(self) -> int:
+        rows = self.table_rows if self.table_rows else len(self.node_ids)
+        return max(rows // max(self.n_shards, 1), 1)
+
+    def shard_of(self, slots: np.ndarray) -> np.ndarray:
+        """Shard index per global slot (negative slots stay negative)."""
+        slots = np.asarray(slots)
+        return np.where(slots >= 0, slots // self.rows_per_shard, -1)
+
+    def local_row(self, slots: np.ndarray) -> np.ndarray:
+        """Row within the owning shard per global slot (-1 for misses)."""
+        slots = np.asarray(slots)
+        return np.where(slots >= 0, slots % self.rows_per_shard, -1)
+
 
 def sample_cache(g, cfg: CacheConfig, rng: np.random.Generator,
                  train_idx: Optional[np.ndarray] = None,
                  probs: Optional[np.ndarray] = None,
-                 version: int = 0) -> CacheState:
-    """Draw the cache without replacement according to the §3.2 distribution."""
+                 version: int = 0,
+                 n_shards: Optional[int] = None,
+                 table_rows: Optional[int] = None) -> CacheState:
+    """Draw the cache without replacement according to the §3.2 distribution.
+
+    ``n_shards`` / ``table_rows`` fix the shard layout of the device table
+    the drawn ids will be uploaded into (defaults: the config's shard count
+    and padded row count).  Fewer ids than rows is fine — the tail rows are
+    zero-padded and no slot ever points at them.
+    """
     if probs is None:
         probs = cache_probs(g, cfg, train_idx)
-    size = min(cfg.size(g.num_nodes), int((probs > 0).sum()))
+    if table_rows is None:
+        table_rows = cfg.size(g.num_nodes)
+    if n_shards is None:
+        n_shards = max(cfg.shards, 1)
+    assert table_rows % max(n_shards, 1) == 0, (
+        f"table_rows={table_rows} must divide n_shards={n_shards} — pad via "
+        f"CacheConfig(shards=...) / FeatureStore.padded_rows, otherwise "
+        f"shard_of/local_row misroute the tail slots")
+    size = min(table_rows, int((probs > 0).sum()))
     # Efficient weighted sampling w/o replacement: Gumbel top-k on log p.
     with np.errstate(divide="ignore"):
         logp = np.log(probs)
@@ -107,7 +163,8 @@ def sample_cache(g, cfg: CacheConfig, rng: np.random.Generator,
     slot_of = np.full(g.num_nodes, -1, dtype=np.int32)
     slot_of[ids] = np.arange(size, dtype=np.int32)
     return CacheState(node_ids=ids, probs=probs, in_cache=in_cache,
-                      slot_of=slot_of, version=version)
+                      slot_of=slot_of, version=version,
+                      n_shards=n_shards, table_rows=table_rows)
 
 
 @dataclasses.dataclass
@@ -155,12 +212,31 @@ class FeatureStore:
                  policy: Optional[CachePolicy] = None,
                  train_idx: Optional[np.ndarray] = None,
                  sharding=None, dtype=None,
+                 mesh=None, shard_axis: Optional[str] = None,
                  meter: Optional[TrafficMeter] = None,
                  importance_mode: Optional[str] = "ht",
                  build_adjacency: bool = False,
                  seed: int = 0):
+        """``mesh`` + ``shard_axis`` turn on shard-aware generations: the
+        device table is row-partitioned into ``mesh.shape[shard_axis]``
+        contiguous blocks and each refresh uploads only each device's own
+        shard (tables replicate along the remaining mesh axes).  The legacy
+        ``sharding`` argument still accepts an explicit ``jax.sharding``
+        for a plain ``device_put`` upload (replicated baseline)."""
         self.features = features
         self.graph = graph
+        self.mesh = mesh
+        if mesh is not None and shard_axis is None:
+            # one home for the axis rule (lazy: featurestore stays jax-free
+            # at import time)
+            from repro.launch.mesh import cache_shard_axis
+            shard_axis = cache_shard_axis(mesh)
+        self.shard_axis = shard_axis
+        n_shards = (mesh.shape[shard_axis] if mesh is not None
+                    else max(cfg.shards, 1))
+        if n_shards != cfg.shards:
+            cfg = dataclasses.replace(cfg, shards=n_shards)
+        self.n_shards = n_shards
         self.cfg = cfg
         self.train_idx = train_idx
         if policy is None:
@@ -195,7 +271,7 @@ class FeatureStore:
         self.swaps = 0
         self.record = True          # False: suspend meter + policy feedback
                                     # (evaluation must not skew training
-                                    # metrics or the adaptive miss EMA)
+                                    # metrics or the adaptive traffic EMA)
         self.refresh_delay = 0.0    # test hook: artificial build latency (s)
 
     # ------------------------------------------------------------------
@@ -254,7 +330,12 @@ class FeatureStore:
             host = self.meter.tier("host")
             host.hits += len(miss_ids)
             host.bytes_read += len(miss_ids) * self._row_bytes
-            self.policy.observe(miss_ids)
+            # feed the FULL requested-id traffic (hits AND misses) to the
+            # policy: a miss-only feed starves the EMA of nodes once they
+            # become hits, so their scores decay until eviction and they
+            # oscillate in and out of the cache (ROADMAP follow-up; see
+            # AdaptivePolicy and the churn regression test).
+            self.policy.observe(ids_p[:n_in])
         return slots, streamed, hits, len(miss_ids) * self._row_bytes
 
     def gather_rows(self, ids: np.ndarray,
@@ -304,9 +385,6 @@ class FeatureStore:
                 host.bytes_read += n_rest * self._row_bytes
         return rows
 
-    def observe_misses(self, miss_ids: np.ndarray) -> None:
-        self.policy.observe(np.asarray(miss_ids, dtype=np.int64))
-
     # ------------------------------------------------------------------
     # refresh lifecycle
     # ------------------------------------------------------------------
@@ -330,9 +408,6 @@ class FeatureStore:
     def _build(self, rng: np.random.Generator, version: int,
                staged_idx: int) -> Generation:
         """Build one full generation: score → draw → gather → upload."""
-        import jax
-        import jax.numpy as jnp
-
         t0 = time.perf_counter()
         probs = self._policy_probs()
         state = sample_cache(self.graph, self.cfg, rng,
@@ -356,12 +431,7 @@ class FeatureStore:
             buf[n:] = 0.0
         if self.refresh_delay:
             time.sleep(self.refresh_delay)            # test hook
-        # jnp.array (copy=True) — asarray zero-copies aligned host buffers on
-        # CPU, which would alias the table to the recycled staging half and
-        # mutate an older generation's "immutable" device tier on reuse
-        tbl = jnp.array(buf, dtype=self.dtype or jnp.float32)
-        if self.sharding is not None:
-            tbl = jax.device_put(tbl, self.sharding)
+        tbl = self._upload(buf)
         lam = self._solve_lambda(probs)
         adj = (self.graph.induced_cache_adjacency(state.in_cache)
                if self.build_adjacency else None)
@@ -372,6 +442,51 @@ class FeatureStore:
         self.meter.t_refresh += time.perf_counter() - t0
         self.refreshes += 1
         return gen
+
+    def _upload(self, buf: np.ndarray):
+        """Staging half -> device table (tier 0), metering the transfer.
+
+        Shard-aware path (``mesh`` + ``shard_axis``): the table is
+        row-partitioned over the cache axis and each device receives ONLY its
+        own shard via ``make_array_from_callback`` — per generation that is
+        ``table_bytes · ndev / n_shards`` on the wire instead of the
+        replicated ``table_bytes · ndev``.  The callback hands jax a fresh
+        contiguous copy of each shard slice (never a view of the staging
+        half), and the upload is synchronized before the generation is
+        published, so recycling the staging buffer for a later build can
+        never mutate this generation's device tier (see the swap-race audit
+        in tests/test_sharded_store.py).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        dtype = self.dtype or jnp.float32
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            src = np.asarray(buf, dtype=np.dtype(dtype))
+            sh = NamedSharding(self.mesh, P(self.shard_axis, None))
+            # explicit per-shard copy: a contiguous row-slice of `src` is a
+            # VIEW of the staging half, and device_put may zero-copy aligned
+            # host buffers on CPU — either would alias the "immutable" device
+            # tier to a buffer a later build recycles
+            tbl = jax.make_array_from_callback(
+                buf.shape, sh, lambda index: np.array(src[index], copy=True))
+            tbl.block_until_ready()
+        else:
+            # jnp.array (copy=True) — asarray zero-copies aligned host buffers
+            # on CPU, which would alias the table to the recycled staging half
+            # and mutate an older generation's "immutable" device tier on reuse
+            tbl = jnp.array(buf, dtype=dtype)
+            if self.sharding is not None:
+                tbl = jax.device_put(tbl, self.sharding)
+                tbl.block_until_ready()
+        try:
+            upload = sum(int(s.data.nbytes) for s in tbl.addressable_shards)
+        except Exception:                    # non-jax table stub in tests
+            upload = int(getattr(tbl, "nbytes", 0))
+        self.meter.bytes_cache_upload += upload
+        self.meter.uploads += 1
+        return tbl
 
     def _free_staging_idx(self) -> int:
         live = self._live
@@ -443,7 +558,7 @@ class FeatureStore:
     # ------------------------------------------------------------------
     @staticmethod
     def padded_rows(num_nodes: int, fraction: float, multiple: int = 1) -> int:
-        """Device-table row count, padded so `multiple` shards divide evenly."""
-        rows = max(int(num_nodes * fraction), 1)
-        rows += (-rows) % max(multiple, 1)
-        return rows
+        """Device-table row count, padded so `multiple` shards divide evenly
+        (shape-only callers like launch/dryrun_gnn.py; delegates to
+        ``CacheConfig.size`` so the padding rule has one home)."""
+        return CacheConfig(fraction=fraction, shards=multiple).size(num_nodes)

@@ -22,6 +22,16 @@ Cost per output row: K·block_d·4B from each source stream (the dead lane's
 DMA is the price of branch-free pipelining) vs. the unfused path's extra
 S0·F·4B h0 round-trip through HBM; for the paper's shapes (S0 ≈ 176k per
 batch vs B·K = 16k lanes) the fused path moves strictly fewer bytes.
+
+**Sharded tables** (production mesh): when the cache table is row-partitioned
+into contiguous shards over the mesh's cache axis, each device runs the SAME
+kernel against its local shard with a shard-local view of the slot map:
+global slots owned by the shard become local rows (``shard_slot_map``),
+every other lane's weight is zeroed (``shard_lane_weights`` — misses are
+contributed by shard 0 only, from the replicated streamed buffer), and the
+per-shard partials are psum-ed over the cache axis.  The decomposition only
+inserts zero terms and regroups the fixed-order sum, so integer-exact inputs
+stay bitwise identical to the single-device kernel.
 """
 from __future__ import annotations
 
@@ -108,3 +118,67 @@ def cache_lookup_agg_pallas(cache_table: jax.Array, streamed: jax.Array,
     )
     return fn(idx.astype(jnp.int32), lane_slots,
               w.astype(jnp.float32), cache_table, streamed)
+
+
+# ---------------------------------------------------------------------------
+# shard-local views (global slot -> (shard, local row), contiguous blocks)
+# ---------------------------------------------------------------------------
+
+def shard_slot_map(slots: jax.Array, shard, rows_per_shard: int) -> jax.Array:
+    """Global slot map -> this shard's local rows; everything else -> -1.
+
+    Shard ``s`` owns the contiguous global slots [s·rps, (s+1)·rps) — the
+    same row blocks a ``NamedSharding(mesh, P(axis, None))`` places on device
+    ``s`` along the cache axis.  ``shard`` may be a traced scalar
+    (``jax.lax.axis_index`` inside shard_map) or a Python int (tests).
+    """
+    slots = slots.astype(jnp.int32)
+    lo = shard * rows_per_shard
+    owned = (slots >= lo) & (slots < lo + rows_per_shard)
+    return jnp.where(owned, slots - lo, -1)
+
+
+def shard_lane_weights(w: jax.Array, lane_slots: jax.Array, shard,
+                       rows_per_shard: int) -> jax.Array:
+    """Zero every lane this shard does not contribute.
+
+    A lane is contributed by exactly one shard: cache hits by the shard
+    owning the slot, misses (slot < 0, served from the replicated streamed
+    buffer) by shard 0.  Summing the per-shard partials therefore recovers
+    the single-device result — with only zero terms added, so integer-exact
+    inputs reproduce it bitwise.
+    """
+    lo = shard * rows_per_shard
+    owned = (lane_slots >= lo) & (lane_slots < lo + rows_per_shard)
+    miss = lane_slots < 0
+    contribute = owned | (miss & (shard == 0))
+    return jnp.where(contribute, w.astype(jnp.float32), 0.0)
+
+
+def cache_lookup_agg_shard_partial(local_table: jax.Array,
+                                   streamed: jax.Array, slots: jax.Array,
+                                   idx: jax.Array, w: jax.Array, shard,
+                                   rows_per_shard: int,
+                                   block_d: int = 2048,
+                                   interpret: bool = False,
+                                   use_kernel: bool = True) -> jax.Array:
+    """One shard's partial of the fused lookup: kernel on the LOCAL table.
+
+    Used as the ``shard_map`` body over the cache axis (``shard`` =
+    ``axis_index``) and, shard-by-shard in a Python loop, by the parity
+    tests that validate the slot mapping without a multi-device mesh.
+    ``use_kernel=False`` runs the pure-jnp oracle instead of the Pallas
+    kernel (the dry-run path: interpret-mode Pallas at pod-scale grids is
+    not lowerable economically from a CPU host).
+    """
+    idx = idx.astype(jnp.int32)
+    lane_slots = jnp.take(slots.astype(jnp.int32), idx, axis=0)
+    local_slots = shard_slot_map(slots, shard, rows_per_shard)
+    w_eff = shard_lane_weights(w, lane_slots, shard, rows_per_shard)
+    if not use_kernel:
+        from repro.kernels import ref
+        return ref.cache_lookup_agg_ref(local_table, streamed, local_slots,
+                                        idx, w_eff)
+    return cache_lookup_agg_pallas(local_table, streamed, local_slots, idx,
+                                   w_eff, block_d=block_d,
+                                   interpret=interpret)

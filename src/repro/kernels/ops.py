@@ -15,6 +15,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.cache_lookup import cache_lookup_agg_pallas
@@ -49,19 +50,188 @@ def gather_agg(feat: jax.Array, idx: jax.Array, w: jax.Array,
     return gather_agg_pallas(feat, idx, w, block_d=bd, interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "block_d"))
+def _dp_spec(mesh, shard_axis):
+    """(dp axes, batch PartitionSpec entry) for the fused op's shard_map.
+
+    The batch operands ride whatever logical-batch axes the mesh has, minus
+    the cache axis (a 1-D benchmark mesh sharded over its only axis leaves
+    the batch replicated).  Uses ``sharding.batch_axes`` so the axis-role
+    rule lives in one place.
+    """
+    from repro.launch.sharding import batch_axes
+
+    dp = tuple(a for a in batch_axes(mesh) if a != shard_axis)
+    return dp, (dp if len(dp) > 1 else (dp[0] if dp else None))
+
+
+def _fused_forward(cache_table, streamed, slots, idx, w,
+                   impl, block_d, mesh, shard_axis):
+    """Forward of the fused input op; shard_map over the cache axis if given.
+
+    Sharded contract (the production regime): the table is row-partitioned
+    into contiguous shards over ``shard_axis``; batch operands ride the DP
+    axes (each data-parallel group resolves its OWN minibatch, so inside the
+    body ``idx``/``slots`` are group-local); each shard contributes the lanes
+    it owns (misses ride shard 0's replicated streamed buffer) and the
+    partials are psum-ed over the cache axis — see
+    ``kernels.cache_lookup.shard_lane_weights`` for why the regrouped sum is
+    exact.
+    """
+    from repro.kernels.cache_lookup import cache_lookup_agg_shard_partial
+
+    use_kernel = impl != "reference"
+    if mesh is not None and shard_axis in mesh.axis_names:
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.sharding import shard_map_compat
+
+        n = mesh.shape[shard_axis]
+        rows = cache_table.shape[0]
+        assert rows % n == 0, (
+            f"cache table rows {rows} must divide the cache axis "
+            f"{shard_axis}={n} (pad via CacheConfig.shards / padded_rows)")
+        rps = rows // n
+        _, bspec = _dp_spec(mesh, shard_axis)
+
+        def body(tbl, st, sl, ix, ww):
+            shard = jax.lax.axis_index(shard_axis)
+            part = cache_lookup_agg_shard_partial(
+                tbl, st, sl, ix, ww, shard, rps, block_d=block_d,
+                interpret=_interpret(), use_kernel=use_kernel)
+            return jax.lax.psum(part, shard_axis)
+
+        fn = shard_map_compat(
+            body, mesh=mesh,
+            in_specs=(P(shard_axis, None), P(bspec, None), P(bspec),
+                      P(bspec, None), P(bspec, None)),
+            out_specs=P(bspec, None))
+        return fn(cache_table, streamed, slots, idx, w)
+    if not use_kernel:
+        return ref.cache_lookup_agg_ref(cache_table, streamed, slots, idx, w)
+    return cache_lookup_agg_pallas(cache_table, streamed, slots, idx, w,
+                                   block_d=block_d, interpret=_interpret())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _fused(cache_table, streamed, slots, idx, w, impl, block_d, mesh,
+           shard_axis):
+    return _fused_forward(cache_table, streamed, slots, idx, w,
+                          impl, block_d, mesh, shard_axis)
+
+
+def _fused_fwd(cache_table, streamed, slots, idx, w, impl, block_d, mesh,
+               shard_axis):
+    out = _fused_forward(cache_table, streamed, slots, idx, w,
+                         impl, block_d, mesh, shard_axis)
+    return out, (cache_table, streamed, slots, idx, w)
+
+
+def _fused_bwd(impl, block_d, mesh, shard_axis, res, g):
+    """Hand-written VJP in plain jnp: Pallas kernels carry no AD rules.
+
+    The sharded path MUST mirror the forward's shard_map rather than run
+    global-array math: inside the forward each DP group's ``idx``/``slots``
+    are group-local, so a global ``take``/scatter would resolve group g>0's
+    lanes against group 0's rows.  The backward therefore shard_maps with
+    the same specs — each cache shard owns its lanes' table gradient
+    (psum-ed over the DP axes, since every group writes the same table),
+    streamed/weight gradients stay group-local, and the per-lane h0 needed
+    for dw is psum-ed over the cache axis exactly like the forward output.
+    """
+    cache_table, streamed, slots, idx, w = res
+    f0 = jax.dtypes.float0
+    zslots = np.zeros(slots.shape, f0)
+    zidx = np.zeros(idx.shape, f0)
+
+    if mesh is not None and shard_axis in mesh.axis_names:
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.sharding import shard_map_compat
+
+        n = mesh.shape[shard_axis]
+        rps = cache_table.shape[0] // n
+        dp, bspec = _dp_spec(mesh, shard_axis)
+
+        def body(tbl, st, sl, ix, ww, gg):
+            from repro.kernels.cache_lookup import (shard_lane_weights,
+                                                    shard_slot_map)
+
+            shard = jax.lax.axis_index(shard_axis)
+            gg = gg.astype(jnp.float32)
+            lane_slots = jnp.take(sl.astype(jnp.int32), ix, axis=0)  # [b, k]
+            # the lane-claim rule (owner for hits, shard 0 for misses) and
+            # the local-row mapping come from the SAME helpers the forward
+            # kernel uses — forward and backward cannot desync
+            lane_local = shard_slot_map(lane_slots, shard, rps)
+            own = lane_local >= 0
+            miss = lane_slots < 0
+            claim = shard_lane_weights(jnp.ones_like(lane_slots, jnp.float32),
+                                       lane_slots, shard, rps)       # 0/1
+            rows_own = jnp.take(tbl, jnp.maximum(lane_local, 0), axis=0)
+            rows_miss = jnp.take(st, ix, axis=0)
+            # each lane's h0 comes from exactly one shard (the claim mask) —
+            # the psum below reassembles it, like the forward
+            h0_part = jnp.where(own[..., None],
+                                rows_own.astype(jnp.float32),
+                                rows_miss.astype(jnp.float32)) * claim[..., None]
+            dw = jax.lax.psum(jnp.einsum("bd,bkd->bk", gg, h0_part),
+                              shard_axis).astype(ww.dtype)
+            dlane = ww.astype(jnp.float32)[..., None] * gg[:, None, :]
+            dcache = jnp.zeros((rps, tbl.shape[1]), tbl.dtype).at[
+                jnp.maximum(lane_local, 0)].add(
+                jnp.where(own[..., None], dlane, 0.0).astype(tbl.dtype))
+            if dp:
+                dcache = jax.lax.psum(dcache, dp)
+            # miss lanes are shard-independent: every shard computes the
+            # identical (replicated-over-cache-axis) streamed gradient
+            dstreamed = jnp.zeros(st.shape, st.dtype).at[ix].add(
+                jnp.where(miss[..., None], dlane, 0.0).astype(st.dtype))
+            return dcache, dstreamed, dw
+
+        fn = shard_map_compat(
+            body, mesh=mesh,
+            in_specs=(P(shard_axis, None), P(bspec, None), P(bspec),
+                      P(bspec, None), P(bspec, None), P(bspec, None)),
+            out_specs=(P(shard_axis, None), P(bspec, None), P(bspec, None)))
+        dcache, dstreamed, dw = fn(cache_table, streamed, slots, idx, w, g)
+        return dcache, dstreamed, zslots, zidx, dw
+
+    g = g.astype(jnp.float32)
+    lane_slots = jnp.take(slots.astype(jnp.int32), idx, axis=0)     # [B, K]
+    hit = (lane_slots >= 0)[..., None]
+    rows_hit = jnp.take(cache_table, jnp.clip(lane_slots, 0), axis=0)
+    rows_miss = jnp.take(streamed, idx, axis=0)
+    h0 = jnp.where(hit, rows_hit, rows_miss).astype(jnp.float32)    # [B, K, D]
+    dw = jnp.einsum("bd,bkd->bk", g, h0).astype(w.dtype)
+    dlane = w.astype(jnp.float32)[..., None] * g[:, None, :]        # [B, K, D]
+    dcache = jnp.zeros(cache_table.shape, cache_table.dtype).at[
+        jnp.clip(lane_slots, 0)].add(
+        jnp.where(hit, dlane, 0.0).astype(cache_table.dtype))
+    dstreamed = jnp.zeros(streamed.shape, streamed.dtype).at[idx].add(
+        jnp.where(hit, 0.0, dlane).astype(streamed.dtype))
+    return dcache, dstreamed, zslots, zidx, dw
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("impl", "block_d", "mesh", "shard_axis"))
 def cache_lookup_agg(cache_table: jax.Array, streamed: jax.Array,
                      slots: jax.Array, idx: jax.Array, w: jax.Array,
-                     impl: str = "pallas", block_d: int = 512) -> jax.Array:
-    """Fused GNS input layer: cache/streamed select + gather-agg.  [B,D] f32."""
-    if impl == "reference":
-        return ref.cache_lookup_agg_ref(cache_table, streamed, slots, idx, w)
+                     impl: str = "pallas", block_d: int = 512,
+                     mesh=None, shard_axis: Optional[str] = None) -> jax.Array:
+    """Fused GNS input layer: cache/streamed select + gather-agg.  [B,D] f32.
+
+    Differentiable (custom VJP) so the train step's backward flows into the
+    cache table / streamed rows / weights.  Pass ``mesh`` + ``shard_axis``
+    (both static) to run the shard-aware path: per-device kernel on the
+    local table shard, psum over the cache axis.
+    """
     d = cache_table.shape[1]
     bd = min(block_d, d)
     while d % bd:
         bd -= 1
-    return cache_lookup_agg_pallas(cache_table, streamed, slots, idx, w,
-                                   block_d=bd, interpret=_interpret())
+    return _fused(cache_table, streamed, slots.astype(jnp.int32),
+                  idx.astype(jnp.int32), w, impl, bd, mesh, shard_axis)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -10,11 +10,20 @@ blocks + importance-weighted aggregation — lowered on the 16x16 (and
 2x16x16) production mesh at ogbn-papers100M dimensions:
 
   * cache table [|C| = 1% of 111M = 1.11M rows, 128 feats] — row-sharded
-    over 'model' (the pod-scale cache the paper's single T4 cannot hold);
+    over the cache axis ('model'; the pod-scale cache the paper's single T4
+    cannot hold), refreshed by SHARD-AWARE upload (each device receives only
+    its own rows — table/n_shards per chip instead of the full table);
   * minibatch: batch 1000, fanouts (15,10,5) => padded input layer of
     176k nodes/batch, sharded over 'data' (one minibatch per data group is
     the paper's multi-GPU regime);
+  * input path: the REAL one — ``SageConfig(input_impl="fused")``, the fused
+    cache-lookup + layer-0 gather op shard_mapped over the cache axis
+    (reference backend: interpret-mode Pallas at these grids cannot be
+    lowered economically from a CPU host — same policy as kernels/ops.py);
   * train step = forward + backward + AdamW on the 3-layer GraphSAGE.
+
+``run(mesh=...)`` accepts a reduced host mesh + scaled-down dims so CI can
+lower the identical path on 4 mocked devices (tests/test_sharded_store.py).
 
 Emits the same roofline record as the LM cells ->
 benchmarks/results/dryrun/gnn-graphsage__train_1k__<mesh>.json
@@ -31,7 +40,7 @@ import numpy as np
 from repro.core.minibatch import DeviceBatch, LayerBlock, block_pad_sizes
 from repro.featurestore import FeatureStore
 from repro.launch import sharding as shlib
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import cache_shard_axis, make_production_mesh
 from repro.models import graphsage
 from repro.optim.adam import AdamConfig, AdamW
 from repro.roofline.analysis import collective_bytes_from_hlo, roofline_terms
@@ -46,13 +55,14 @@ BATCH = 1024     # paper uses 1000; padded to divide the 16-wide data axis
 FANOUTS = (15, 10, 5)        # input-first (paper: 15,10,5 top-down)
 
 
-def batch_structs(mesh):
+def batch_structs(mesh, batch: int = BATCH, fanouts=FANOUTS,
+                  feat_dim: int = FEAT_DIM):
     """ShapeDtypeStruct DeviceBatch + shardings (batch dims on 'data')."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    pads = block_pad_sizes(BATCH, FANOUTS)
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    dp = dp if len(dp) > 1 else dp[0]
+    pads = block_pad_sizes(batch, fanouts)
+    dp = shlib.batch_axes(mesh)     # () on a 1-D cache-only mesh -> replicate
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
 
     def sd(shape, dtype):
         return jax.ShapeDtypeStruct(shape, dtype)
@@ -62,7 +72,7 @@ def batch_structs(mesh):
 
     blocks, blocks_sh = [], []
     for li, (d, s) in enumerate(pads):
-        k = FANOUTS[li]
+        k = fanouts[li]
         blocks.append(LayerBlock(
             nbr_idx=sd((d, k), jnp.int32), nbr_w=sd((d, k), jnp.float32),
             dst_mask=sd((d,), jnp.float32), num_src=s, num_dst=d))
@@ -70,13 +80,13 @@ def batch_structs(mesh):
             nbr_idx=sh(dp, None), nbr_w=sh(dp, None), dst_mask=sh(dp),
             num_src=s, num_dst=d))
     s0 = pads[0][1]
-    batch = DeviceBatch(
+    batch_struct = DeviceBatch(
         blocks=tuple(blocks),
         input_cache_slots=sd((s0,), jnp.int32),
-        input_streamed=sd((s0, FEAT_DIM), jnp.float32),
+        input_streamed=sd((s0, feat_dim), jnp.float32),
         input_mask=sd((s0,), jnp.float32),
-        labels=sd((BATCH,), jnp.int32),
-        label_mask=sd((BATCH,), jnp.float32))
+        labels=sd((batch,), jnp.int32),
+        label_mask=sd((batch,), jnp.float32))
     batch_sh = DeviceBatch(
         blocks=tuple(blocks_sh),
         input_cache_slots=sh(dp),
@@ -84,19 +94,34 @@ def batch_structs(mesh):
         input_mask=sh(dp),
         labels=sh(dp),
         label_mask=sh(dp))
-    return batch, batch_sh
+    return batch_struct, batch_sh
 
 
-def run(multi_pod: bool = False) -> dict:
-    mesh = make_production_mesh(multi_pod=multi_pod)
+def run(multi_pod: bool = False, *, mesh=None, num_nodes: int = NUM_NODES,
+        feat_dim: int = FEAT_DIM, num_classes: int = NUM_CLASSES,
+        cache_frac: float = CACHE_FRAC, batch: int = BATCH,
+        fanouts=FANOUTS, hidden_dim: int = 256,
+        input_impl: str = "fused") -> dict:
+    """Lower + compile the GNS train step; ``mesh=None`` = production mesh.
+
+    The reduced-dims path (explicit ``mesh`` + small shapes) is the CI
+    lane: the same lowering on a mocked multi-device host mesh.
+    """
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
-    mcfg = graphsage.SageConfig(feat_dim=FEAT_DIM, hidden_dim=256,
-                                num_classes=NUM_CLASSES, num_layers=3)
+    cache_axis = cache_shard_axis(mesh)
+    mcfg = graphsage.SageConfig(feat_dim=feat_dim, hidden_dim=hidden_dim,
+                                num_classes=num_classes, num_layers=len(fanouts),
+                                input_impl=input_impl,
+                                input_kernel="reference",
+                                cache_shard_axis=cache_axis)
     opt = AdamW(AdamConfig(lr=3e-3))
     # device-tier shape via the feature-store facade (pads rows so the
-    # 'model'-axis shards divide evenly — the pod-scale cache tier)
-    cache_rows = FeatureStore.padded_rows(NUM_NODES, CACHE_FRAC,
-                                          multiple=mesh.shape["model"])
+    # cache-axis shards divide evenly — the pod-scale cache tier)
+    n_shards = mesh.shape[cache_axis]
+    cache_rows = FeatureStore.padded_rows(num_nodes, cache_frac,
+                                          multiple=n_shards)
 
     from jax.sharding import NamedSharding, PartitionSpec as P
     p_structs = jax.eval_shape(
@@ -105,9 +130,9 @@ def run(multi_pod: bool = False) -> dict:
         lambda _: NamedSharding(mesh, P()), p_structs)     # tiny -> replicated
     o_structs = jax.eval_shape(opt.init, p_structs)
     o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
-    cache_struct = jax.ShapeDtypeStruct((cache_rows, FEAT_DIM), jnp.float32)
-    cache_sh = NamedSharding(mesh, P("model", None))       # row-sharded cache
-    b_structs, b_sh = batch_structs(mesh)
+    cache_struct = jax.ShapeDtypeStruct((cache_rows, feat_dim), jnp.float32)
+    cache_sh = NamedSharding(mesh, P(cache_axis, None))    # row-sharded cache
+    b_structs, b_sh = batch_structs(mesh, batch, fanouts, feat_dim)
 
     def train_step(params, opt_state, batch, cache_table):
         (loss, acc), grads = jax.value_and_grad(
@@ -139,16 +164,23 @@ def run(multi_pod: bool = False) -> dict:
     n_params = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(p_structs))
     flops = float(cost.get("flops", 0.0))
     byt = float(cost.get("bytes accessed", 0.0))
-    shape = ShapeSpec("train_1k", 1, BATCH, "train")   # D = BATCH target nodes
+    shape = ShapeSpec("train_1k", 1, batch, "train")   # D = batch target nodes
     terms = roofline_terms(flops, byt, coll, _gnn_cfg_stub(), shape, chips,
                            n_active=float(n_params))
+    table_bytes = cache_rows * feat_dim * 4
     rec = {
         "arch": "gnn-graphsage-gns", "shape": "train_1k",
-        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "chips": chips,
         "status": "ok", "kind": "train",
+        "input_impl": mcfg.input_impl, "cache_shard_axis": cache_axis,
         "params_total": float(n_params),
         "cache_rows": cache_rows,
-        "cache_bytes_per_chip": cache_rows * FEAT_DIM * 4 / mesh.shape["model"],
+        "cache_bytes_per_chip": table_bytes / n_shards,
+        # per-generation refresh transfer: shard-aware upload vs replicating
+        # the full table to every chip (the paper-scale saving this PR lands)
+        "upload_bytes_per_gen_sharded": table_bytes * chips // n_shards,
+        "upload_bytes_per_gen_replicated": table_bytes * chips,
         "memory_analysis": mem_d,
         "cost_flops_per_device": flops, "cost_bytes_per_device": byt,
         "roofline": terms.as_dict(), "compile_s": round(t_compile, 2),
@@ -173,10 +205,12 @@ def main():
         name = f"gnn-graphsage__train_1k__{'multi' if mp else 'single'}.json"
         (outdir / name).write_text(json.dumps(rec, indent=1))
         r = rec["roofline"]
-        print(f"[gnn {'2x16x16' if mp else '16x16'}] dominant={r['dominant']} "
+        print(f"[gnn {rec['mesh']}] dominant={r['dominant']} "
               f"compute={r['compute_s']:.5f}s memory={r['memory_s']:.5f}s "
               f"collective={r['collective_s']:.5f}s "
               f"cache/chip={rec['cache_bytes_per_chip']/1e6:.1f}MB "
+              f"upload/gen={rec['upload_bytes_per_gen_sharded']/1e9:.2f}GB "
+              f"(vs {rec['upload_bytes_per_gen_replicated']/1e9:.2f}GB repl.) "
               f"(compile {rec['compile_s']}s)")
     return failures
 

@@ -37,3 +37,14 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def cache_shard_axis(mesh: jax.sharding.Mesh) -> str:
+    """Mesh axis carrying the feature-store cache shards.
+
+    The cache table rides the 'model' axis (TP / EP / cache-sharding share
+    it, see the layout note above): DP groups each consume their own
+    minibatch, so the row shards must live across an axis every DP group
+    spans.  Falls back to the first axis on meshes without 'model'
+    (1-D benchmark meshes)."""
+    return "model" if "model" in mesh.axis_names else mesh.axis_names[0]

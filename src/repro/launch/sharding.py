@@ -73,6 +73,8 @@ _LOGICAL_TO_PHYSICAL = {
     "expert": ("model",),
     "seq": ("data",),
     "attn_sq": ("model",),     # seq-sharded attention (heads % tp != 0 path)
+    "cache": ("model",),       # feature-store device-table rows (GNS cache
+                               # sharding rides the TP axis — mesh.py §roles)
     "pod": ("pod",),
     "data": ("data",),
 }

@@ -41,6 +41,14 @@ class SageConfig:
     input_impl: str = "where"          # "where" | "fused"  (fused = Pallas
                                        # cache-lookup + layer-0 gather in one
                                        # pass; h0 is never materialized)
+    input_kernel: str = "pallas"       # fused-op backend: "pallas" | "reference"
+                                       # (the pod dry-run lowers "reference" —
+                                       # interpret-mode grids at paper scale
+                                       # are uncompilable from a CPU host)
+    cache_shard_axis: Optional[str] = None
+                                       # mesh axis the cache table is row-
+                                       # sharded over; with a mesh in scope
+                                       # the fused op runs per-shard + psum
 
 
 def reference_aggregate(h_src: jnp.ndarray, nbr_idx: jnp.ndarray,
@@ -98,11 +106,20 @@ def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
     for i, (blk, layer) in enumerate(zip(batch.blocks, params["layers"])):
         if i == 0 and fused:
             # one Pallas pass: cache/streamed select + layer-0 gather-agg;
-            # self rows come from a statically-sliced prefix assembly.
+            # self rows come from a statically-sliced prefix assembly.  On a
+            # mesh with the cache table row-sharded over cfg.cache_shard_axis
+            # each device runs the kernel on its own shard (psum'd partials).
             from repro.kernels.ops import cache_lookup_agg
+            from repro.launch.sharding import current_mesh
+            mesh = current_mesh()
+            axis = cfg.cache_shard_axis
+            if mesh is None or axis not in getattr(mesh, "axis_names", ()):
+                mesh = axis = None
             a = cache_lookup_agg(cache_table, batch.input_streamed,
                                  batch.input_cache_slots,
-                                 blk.nbr_idx, blk.nbr_w)
+                                 blk.nbr_idx, blk.nbr_w,
+                                 impl=cfg.input_kernel,
+                                 mesh=mesh, shard_axis=axis)
             h_dst = assemble_input(batch, cache_table, prefix=blk.num_dst)
         else:
             h_dst = h[: blk.num_dst]

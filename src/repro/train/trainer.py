@@ -28,6 +28,7 @@ from repro.core.pipeline import EpochLoader, Prefetcher
 from repro.core.sampler import GNSSampler, SamplerConfig, make_sampler
 from repro.featurestore import FeatureStore, TrafficMeter
 from repro.graph.datasets import GraphDataset
+from repro.launch import sharding as shlib
 from repro.models import graphsage
 from repro.optim.adam import AdamConfig, AdamW
 
@@ -48,9 +49,20 @@ class GNNTrainer:
                  sampler_cfg: Optional[SamplerConfig] = None,
                  model_cfg: Optional[graphsage.SageConfig] = None,
                  adam_cfg: Optional[AdamConfig] = None,
+                 mesh=None, cache_shard_axis: Optional[str] = None,
                  seed: int = 0):
+        """``mesh`` (+ optional ``cache_shard_axis``) makes the feature
+        store shard-aware: each refresh uploads only each device's own
+        shard of the generation table instead of replicating it.  The
+        train/eval steps then run under that mesh scope, and a fused model
+        config inherits the store's shard axis, so the input layer reads the
+        table via the per-shard kernel + psum instead of an XLA all-gather
+        of the whole table every step (pair the mesh with
+        ``SageConfig(input_impl="fused")`` — the "where" input path cannot
+        exploit the sharded layout)."""
         self.ds = ds
         self.sampler_name = sampler_name
+        self.mesh = mesh
         self.scfg = sampler_cfg or SamplerConfig(batch_size=256)
         self.mcfg = model_cfg or graphsage.SageConfig(
             feat_dim=ds.feat_dim, num_classes=ds.num_classes)
@@ -59,10 +71,17 @@ class GNNTrainer:
             # the facade owns all three feature tiers + the refresh lifecycle
             self.store = FeatureStore(
                 ds.features, ds.graph, self.scfg.cache, train_idx=ds.train_idx,
+                mesh=mesh, shard_axis=cache_shard_axis,
                 meter=self.meter, importance_mode=self.scfg.importance_mode,
                 build_adjacency=True, seed=seed)
         else:
             self.store = None
+        if (self.store is not None and mesh is not None
+                and self.mcfg.input_impl == "fused"
+                and self.mcfg.cache_shard_axis is None):
+            # fused steps must psum over the SAME axis the upload shards on
+            self.mcfg = dataclasses.replace(
+                self.mcfg, cache_shard_axis=self.store.shard_axis)
         self.sampler = make_sampler(sampler_name, ds.graph, self.scfg,
                                     ds.features, ds.labels,
                                     train_idx=ds.train_idx, store=self.store)
@@ -109,8 +128,9 @@ class GNNTrainer:
         m.t_copy += time.perf_counter() - t0
         m.add_batch(mb.bytes_streamed)
         t0 = time.perf_counter()
-        self.params, self.opt_state, loss, acc = self._train_step(
-            self.params, self.opt_state, dev_batch, self._cache_table(mb))
+        with shlib.use_mesh(self.mesh):     # no-op scope when mesh is None
+            self.params, self.opt_state, loss, acc = self._train_step(
+                self.params, self.opt_state, dev_batch, self._cache_table(mb))
         loss = float(loss)
         m.t_compute += time.perf_counter() - t0
         return loss, float(acc)
@@ -190,8 +210,10 @@ class GNNTrainer:
                 lo = (i * b) % (len(idx) - b + 1)
                 targets = idx[lo:lo + b]
                 mb = self.sampler.sample(targets, rng)
-                _, acc = self._eval_step(self.params, jax.device_put(mb.device),
-                                         self._cache_table(mb))
+                with shlib.use_mesh(self.mesh):
+                    _, acc = self._eval_step(self.params,
+                                             jax.device_put(mb.device),
+                                             self._cache_table(mb))
                 correct += float(acc)
                 total += 1.0
         finally:

@@ -75,6 +75,37 @@ def test_reverse_pagerank_concentrates_near_train(g):
     assert p[hood].sum() > 3 * len(hood) / g.num_nodes
 
 
+def test_adaptive_observe_sees_hits_working_set_stable(g, feats):
+    """Churn regression (ROADMAP follow-up): nodes that become cache hits
+    must keep feeding the adaptive EMA.  With miss-only feedback a stable
+    working set stops being observed once cached, its EMA decays below the
+    degree prior, it is evicted, misses again — oscillating churn.  With
+    full-traffic feedback the hot set stays cached across refreshes.
+    """
+    from repro.core.minibatch import pad_to
+
+    # a hot working set of LOW-degree nodes: the degree prior alone would
+    # never keep them cached, so retention isolates the EMA feedback path
+    hot = np.argsort(g.degrees)[:60].astype(np.int64)
+    # fast decay: miss-only feedback would churn within a few refreshes
+    policy = make_policy("adaptive", decay=0.3)
+    cfg = CacheConfig(fraction=0.05, strategy="adaptive")
+    store = FeatureStore(feats, g, cfg, policy=policy)
+    rng = np.random.default_rng(0)
+    store.refresh(rng, version=0)
+    ids_p = pad_to(hot, 64)
+    retention = []
+    for v in range(1, 9):
+        for _ in range(3):          # the epoch's traffic: all requests hot
+            store.assemble_input(store.generation, ids_p, len(hot))
+        store.refresh(rng, version=v)
+        retention.append(store.state.in_cache[hot].mean())
+    # after the first feedback-informed refresh the hot set must be cached
+    # and STAY cached (no oscillation), refresh after refresh
+    assert all(r >= 0.9 for r in retention[1:]), retention
+    assert retention[-1] >= 0.95, retention
+
+
 def test_adaptive_policy_tracks_misses(g):
     p = make_policy("adaptive")
     p.bind(g)

@@ -13,7 +13,8 @@ except ImportError:                          # bare env: seeded fallback shim
     from _hypothesis_fallback import given, settings, st
 
 from repro.core.cache import CacheConfig
-from repro.core.importance import cache_hit_prob, importance_coefficients
+from repro.core.importance import (cache_hit_prob, importance_coefficients,
+                                   solve_inclusion_lambda)
 from repro.core.sampler import GNSSampler, SamplerConfig
 from repro.core.variance import full_neighbor_mean, sampled_mean_once
 from repro.graph.generate import powerlaw_graph
@@ -30,6 +31,61 @@ def test_cache_hit_prob_limits():
     assert pc[1] == pytest.approx(1e-7, rel=1e-3)   # ~ |C|*p for tiny p
     assert pc[2] > 1 - 1e-12                         # saturates
     assert np.all((0 <= pc) & (pc <= 1))
+
+
+def test_solve_lambda_calibrates_to_cache_size():
+    """Non-degenerate case: Σ_i (1 - exp(-λ p_i)) == |C| at the solution."""
+    rng = np.random.default_rng(0)
+    p = rng.pareto(1.5, size=5000) + 1e-6
+    p /= p.sum()
+    for c in (10, 100, 1000):
+        lam = solve_inclusion_lambda(p, c)
+        assert lam is not None and lam >= c
+        total = cache_hit_prob(p, c, lam=lam).sum()
+        assert total == pytest.approx(c, rel=1e-4)
+
+
+def test_solve_lambda_degenerate_cache_covers_support():
+    """|C| >= positive support: every node is included w.p. 1 (λ* = ∞) —
+    must warn and fall back to the independence approximation, not fail to
+    bracket."""
+    p = np.full(50, 1.0 / 50)
+    for c in (50, 51, 500):
+        with pytest.warns(RuntimeWarning, match="positive-probability nodes"):
+            assert solve_inclusion_lambda(p, c) is None
+
+
+def test_solve_lambda_all_zero_probs():
+    with pytest.warns(RuntimeWarning, match="all-zero"):
+        assert solve_inclusion_lambda(np.zeros(100), 10) is None
+
+
+def test_cache_hit_prob_degenerate_lam_falls_back():
+    """A degenerate λ (inf / nan / <= 0) must warn and return the
+    independence-approximation probabilities, which stay in [0, 1]."""
+    p = np.array([0.0, 1e-4, 0.5])
+    expect = cache_hit_prob(p, 20)                # independence path
+    for bad in (np.inf, np.nan, 0.0, -3.0):
+        with pytest.warns(RuntimeWarning, match="degenerate lam"):
+            got = cache_hit_prob(p, 20, lam=bad)
+        np.testing.assert_array_equal(got, expect)
+        assert np.all((0 <= got) & (got <= 1))
+
+
+def test_store_lambda_degenerate_cache_still_refreshes():
+    """End-to-end: a FeatureStore whose cache covers the whole graph must
+    refresh cleanly (λ falls back to None -> eq. 11 weights)."""
+    import warnings as _w
+    from repro.featurestore import FeatureStore
+    g = powerlaw_graph(300, avg_degree=6, seed=0)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 8)).astype(np.float32)
+    store = FeatureStore(feats, g, CacheConfig(fraction=1.0))
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)
+        gen = store.refresh(np.random.default_rng(0))
+    assert gen.lam is None
+    assert gen.state.in_cache.all()
 
 
 @given(p=st.floats(1e-12, 0.99), c=st.integers(1, 10_000))
