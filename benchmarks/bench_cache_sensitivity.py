@@ -4,7 +4,11 @@ reporting per-policy hit-rate and bytes_streamed on a synthetic power-law
 graph (the regime where admission policy matters: hub coverage) — plus the
 shard-aware refresh upload measurement (``run_sharded_upload``): per-
 generation device-upload bytes with the table row-sharded over an n-device
-mesh vs the replicated baseline (expected ratio 1/n)."""
+mesh vs the replicated baseline (expected ratio 1/n) — plus the
+locality-placement measurement (``run_locality``): cross-shard lookup
+traffic under skewed per-DP-group demand, contiguous blocks vs the
+locality-aware placement map (acceptance: local-hit fraction > 0.5 with
+bitwise-identical gathers)."""
 from __future__ import annotations
 
 import numpy as np
@@ -17,6 +21,10 @@ POLICY_FIELDS = ["policy", "hit_rate", "bytes_streamed", "bytes_cache_fill",
 SHARD_FIELDS = ["n_devices", "n_shards", "cache_rows",
                 "upload_bytes_per_gen_sharded",
                 "upload_bytes_per_gen_replicated", "upload_ratio"]
+LOCALITY_FIELDS = ["placement", "n_shards", "n_groups", "local_hit_fraction",
+                   "lanes_local", "lanes_remote", "bytes_cross_shard",
+                   "hit_rate", "fast_path_batches", "total_batches",
+                   "bitwise_equal_vs_contiguous"]
 
 POLICY_SWEEP = ["degree", "random_walk", "reverse_pagerank", "adaptive",
                 "uniform"]
@@ -137,7 +145,106 @@ def run_sharded_upload(fast: bool = True, nodes: int = 6000,
     return emit("sharded_upload", rows, SHARD_FIELDS)
 
 
+def run_locality(fast: bool = True, nodes: int = 6000, feat_dim: int = 32,
+                 n_shards: int = 4, n_groups: int = 4,
+                 cache_fraction: float = 0.05, epochs: int = 2,
+                 batch: int = 96, seed: int = 0) -> list:
+    """Cross-shard lookup traffic: contiguous blocks vs locality placement.
+
+    Skewed per-DP-group demand (each group mostly requests its own hot node
+    set, the regime of Data Tiering, arXiv:2111.05894) drives two stores
+    that draw IDENTICAL cache generations (same stateless policy, same
+    seeds) and differ only in shard placement.  Measured per placement:
+
+    * ``local_hit_fraction`` — cache hits served by the requesting group's
+      home shard (meter ``lanes_local/remote``); contiguous lands near
+      1/n_shards, locality must clear 0.5 (the PR acceptance number);
+    * ``fast_path_batches`` — batches whose hits were ALL local, i.e. would
+      take the fused kernel's psum-free fast path;
+    * ``bitwise_equal_vs_contiguous`` — the assembled h0 rows (device-table
+      gather + streamed) of every measured batch agree bit-for-bit between
+      the two placements, so the permutation is traffic-only.
+    """
+    from repro.featurestore import CacheConfig, FeatureStore
+    from repro.graph.generate import powerlaw_graph
+
+    if not fast:
+        nodes, epochs = 30_000, 4
+    g = powerlaw_graph(nodes, avg_degree=10, seed=seed)
+    rng = np.random.default_rng(seed)
+    feats = rng.integers(-64, 65, (g.num_nodes, feat_dim)).astype(np.float32)
+
+    def build(placement):
+        cfg = CacheConfig(fraction=cache_fraction, shards=n_shards,
+                          strategy="degree", placement=placement)
+        return FeatureStore(feats, g, cfg, importance_mode=None)
+
+    stores = {p: build(p) for p in ("contiguous", "locality")}
+    for st in stores.values():
+        st.refresh(np.random.default_rng(seed + 1), version=0)
+    any_gen = next(iter(stores.values())).generation
+    # each group's hot set: a disjoint subset of the (shared) cached ids,
+    # small enough to fit its home shard's capacity, SCATTERED across the
+    # slot space — under contiguous placement a group's hot slots therefore
+    # spread over all shards (local fraction ~ 1/n_shards), which is exactly
+    # the cross-shard traffic the locality placement removes
+    per = min(any_gen.state.rows_per_shard - 2,
+              any_gen.state.size // n_groups)
+    cached_ids = np.random.default_rng(seed + 3).permutation(
+        any_gen.state.node_ids)
+    hot = {grp: cached_ids[grp * per:(grp + 1) * per] for grp in range(n_groups)}
+
+    def epoch_traffic(st, measure=False):
+        """One epoch of skewed traffic; optionally collect (batch, h0)."""
+        out = []
+        r = np.random.default_rng(seed + 7)
+        gen = st.generation
+        for grp in range(n_groups):
+            for _ in range(4):
+                own = r.choice(hot[grp], min(batch * 3 // 4, len(hot[grp])),
+                               replace=False)
+                rand = r.choice(g.num_nodes, batch - len(own), replace=False)
+                ids = np.concatenate([own, rand.astype(np.int64)])
+                slots, streamed, hits, _, local = st.assemble_input(
+                    gen, ids, len(ids), group=grp)
+                if measure:
+                    tbl = np.asarray(gen.table)
+                    h0 = np.where(slots[:, None] >= 0,
+                                  tbl[np.clip(slots, 0, None)], streamed)
+                    out.append((h0, local))
+        return out
+
+    results, h0s = {}, {}
+    for name, st in stores.items():
+        epoch_traffic(st)                       # learn the demand
+        st.meter.lanes_local = st.meter.lanes_remote = 0
+        st.meter.bytes_cross_shard = 0
+        st.refresh(np.random.default_rng(seed + 2), version=1)
+        measured = []                           # every post-refresh epoch
+        for _ in range(max(epochs - 1, 1)):
+            measured.extend(epoch_traffic(st, measure=True))
+        m = st.meter
+        dev = m.tier("device")
+        h0s[name] = [h for h, _ in measured]
+        results[name] = {
+            "placement": name, "n_shards": n_shards, "n_groups": n_groups,
+            "local_hit_fraction": round(m.local_hit_fraction, 4),
+            "lanes_local": m.lanes_local, "lanes_remote": m.lanes_remote,
+            "bytes_cross_shard": m.bytes_cross_shard,
+            "hit_rate": round(dev.hit_rate, 4),
+            "fast_path_batches": sum(l is not None for _, l in measured),
+            "total_batches": len(measured),
+        }
+    # both stores drew the same generations -> identical resolved rows
+    bitwise = all(
+        (a == b).all() for a, b in zip(h0s["contiguous"], h0s["locality"]))
+    for rec in results.values():
+        rec["bitwise_equal_vs_contiguous"] = bitwise
+    return emit("locality_placement", list(results.values()), LOCALITY_FIELDS)
+
+
 if __name__ == "__main__":
     run_sharded_upload(fast=True)
+    run_locality(fast=True)
     run_policies(fast=True)
     run(fast=True)

@@ -73,6 +73,11 @@ class MiniBatch:
                                    # generation's O(V) state is bounded by the
                                    # prefetch depth — at most `depth` queued
                                    # batches hold it)
+    local_shard: object = None     # int when EVERY cache hit of this batch
+                                   # resolves on the requesting DP group's
+                                   # home shard (locality-aware placement) —
+                                   # gates the fused kernel's psum-free fast
+                                   # path; None = cross-shard psum required
 
     @property
     def cache_version(self) -> int:

@@ -10,6 +10,15 @@ can specify a timeout; on timeout it *reuses the previous cache version /
 last batch* rather than blocking the whole data-parallel step — exploiting
 the paper's own Table 6 result that stale caches (refresh period P ≤ 5) are
 accuracy-neutral.
+
+The same contract covers slow shard **uploads** (PR 3): ``swap_if_ready``
+only ever publishes a *completed* build (upload included), so the between-
+batches poll below never blocks on one; and with
+``CacheConfig(refresh_timeout_s=...)`` the epoch-boundary absorb in
+``GNSSampler.start_epoch`` gives a straggling upload a bounded grace window
+and then keeps training on the old generation instead of stalling the
+producer (which would in turn trip the Prefetcher's batch-reuse path
+downstream).
 """
 from __future__ import annotations
 

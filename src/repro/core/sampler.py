@@ -114,8 +114,10 @@ def _assemble(blocks_topdown: list[LayerBlock], input_ids: np.ndarray,
     input_mask[:n_in] = 1.0
 
     if store is not None and gen is not None:
-        # tier-resolved lookup: device-cache hits + metered host-gather misses
-        slots, streamed, num_cached, bytes_streamed = \
+        # tier-resolved lookup: device-cache hits + metered host-gather
+        # misses; slots are DEVICE rows (placement-permuted), and
+        # local_shard gates the fused kernel's psum-free fast path
+        slots, streamed, num_cached, bytes_streamed, local_shard = \
             store.assemble_input(gen, ids_p, n_in)
     else:
         slots = np.full(s0, -1, dtype=np.int32)
@@ -124,6 +126,7 @@ def _assemble(blocks_topdown: list[LayerBlock], input_ids: np.ndarray,
         streamed[miss] = features[ids_p[miss]]       # the CPU "slice" step (§2.2 step 2)
         num_cached = 0
         bytes_streamed = int(miss.sum()) * features.shape[1] * 4
+        local_shard = None
 
     lbl = pad_to(labels[targets].astype(np.int32), batch_pad)
     lmask = np.zeros(batch_pad, dtype=np.float32)
@@ -138,7 +141,8 @@ def _assemble(blocks_topdown: list[LayerBlock], input_ids: np.ndarray,
                       labels=lbl, label_mask=lmask)
     return MiniBatch(device=dev, input_node_ids=ids_p, num_input=n_in,
                      num_cached=num_cached, bytes_streamed=bytes_streamed,
-                     num_isolated=isolated, cache_gen=gen)
+                     num_isolated=isolated, cache_gen=gen,
+                     local_shard=local_shard)
 
 
 # ---------------------------------------------------------------------------
@@ -262,11 +266,19 @@ class GNSSampler:
         if due and (epoch != self._epoch or self._gen is None):
             if self.cfg.cache.async_refresh and self._gen is not None:
                 # bounded staleness: if the previous refresh is still in
-                # flight when the next one comes due, absorb it first.
+                # flight when the next one comes due, absorb it first — but
+                # only up to ``refresh_timeout_s``: a straggling build (e.g.
+                # a slow shard *upload*, the pipeline's straggler contract
+                # extended in PR 3) must not stall the epoch, so on timeout
+                # we keep consuming the old generation (paper Table 6:
+                # stale caches are accuracy-neutral) and retry the absorb at
+                # the next due point.
                 if self.store.refreshing or self.store.swap_if_ready():
-                    self.store.wait_refresh()
+                    self.store.wait_refresh(
+                        timeout=self.cfg.cache.refresh_timeout_s)
                     self.adopt_generation()
-                self.store.begin_refresh(rng, version=epoch)
+                if not self.store.refreshing:
+                    self.store.begin_refresh(rng, version=epoch)
             else:
                 self.refresh_cache(rng, version=epoch)
         self._epoch = epoch

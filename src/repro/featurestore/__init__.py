@@ -9,8 +9,13 @@ Public surface:
 * :class:`TrafficMeter` / :class:`TierStats` — per-tier traffic accounting.
 * ``CacheConfig`` / ``CacheState`` / ``sample_cache`` / ``cache_probs`` —
   the §3.2 cache-sampling machinery (absorbed from ``repro.core.cache``).
+* :class:`PlacementMap` + ``solve_placement`` / ``identity_placement`` /
+  ``home_shard`` — locality-aware slot -> (shard, local row) placement from
+  observed per-DP-group traffic (``CacheConfig(placement="locality")``).
 """
 from repro.featurestore.meter import TierStats, TrafficMeter
+from repro.featurestore.placement import (PlacementMap, home_shard,
+                                          identity_placement, solve_placement)
 from repro.featurestore.policies import (CachePolicy, POLICIES, make_policy,
                                          register_policy, degree_cache_probs,
                                          random_walk_cache_probs,
@@ -26,4 +31,5 @@ __all__ = [
     "degree_cache_probs", "random_walk_cache_probs",
     "reverse_pagerank_cache_probs", "uniform_cache_probs",
     "TrafficMeter", "TierStats",
+    "PlacementMap", "home_shard", "identity_placement", "solve_placement",
 ]

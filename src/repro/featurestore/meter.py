@@ -9,11 +9,21 @@ boundary so the benchmark harness can reproduce the paper's breakdown
 * ``device``  — the device-resident cache table (tier 0)
 * ``staging`` — the pinned-host staging buffer mirroring the device table
 * ``host``    — the full host feature array (tier 2, the slow path)
+
+Locality accounting (PR 3): the meter additionally grows **per-DP-group
+request histograms** (``observe_group`` — node-id request counts per group,
+the input to ``featurestore.placement.solve_placement``) and counts each
+cache hit as *local* or *remote* depending on whether the row's shard is the
+requesting group's home shard (``lanes_local`` / ``lanes_remote`` /
+``local_hit_fraction``) — the cross-shard lookup traffic the locality-aware
+placement minimizes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -46,6 +56,12 @@ class TrafficMeter:
                                    # shard-aware upload pays table/n_shards per
                                    # device, a replicated one pays the full table
     uploads: int = 0               # device-table uploads (one per generation)
+    lanes_local: int = 0           # cache hits served by the requesting
+                                   # group's home shard (no cache-axis hop)
+    lanes_remote: int = 0          # cache hits resolved on another shard
+                                   # (cross-shard traffic the placement
+                                   # solver exists to remove)
+    bytes_cross_shard: int = 0     # remote-hit rows x row bytes
     t_sample: float = 0.0
     t_slice: float = 0.0
     t_copy: float = 0.0
@@ -53,6 +69,8 @@ class TrafficMeter:
     t_refresh: float = 0.0         # background cache-generation build time
     steps: int = 0
     tiers: Dict[str, TierStats] = dataclasses.field(default_factory=dict)
+    group_hist: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+                                   # DP group -> per-node request counts
 
     def tier(self, name: str) -> TierStats:
         """Per-tier counters, created on first touch."""
@@ -60,6 +78,41 @@ class TrafficMeter:
         if ts is None:
             ts = self.tiers[name] = TierStats(name)
         return ts
+
+    @property
+    def local_hit_fraction(self) -> float:
+        """Fraction of cache hits the requesting group's home shard served."""
+        total = self.lanes_local + self.lanes_remote
+        return self.lanes_local / total if total else 0.0
+
+    def observe_group(self, group: int, ids: np.ndarray,
+                      num_nodes: int) -> None:
+        """Accumulate one DP group's requested node ids (hits AND misses —
+        the placement solver wants the demand, not the current hit set)."""
+        if len(ids) == 0:
+            return
+        hist = self.group_hist.get(group)
+        if hist is None or len(hist) != num_nodes:
+            hist = self.group_hist[group] = np.zeros(num_nodes, np.float64)
+        np.add.at(hist, np.asarray(ids, dtype=np.int64), 1.0)
+
+    def group_slot_traffic(self, node_ids: np.ndarray,
+                           table_rows: int) -> Optional[np.ndarray]:
+        """Histograms restricted to one generation's membership, padded to
+        the device-table rows — the [n_groups, table_rows] input of
+        ``placement.solve_placement`` (None until any traffic is seen).
+        Padding slots (``len(node_ids) <= slot < table_rows``) carry zero
+        counts, so the solver parks them on whatever capacity is left."""
+        if not self.group_hist:
+            return None
+        groups = sorted(self.group_hist)
+        out = np.zeros((len(groups), table_rows), np.float64)
+        for gi, g in enumerate(groups):
+            out[gi, :len(node_ids)] = self.group_hist[g][node_ids]
+        return out
+
+    def group_ids(self) -> list:
+        return sorted(self.group_hist)
 
     def add_batch(self, bytes_streamed: int):
         self.bytes_streamed += bytes_streamed
@@ -80,6 +133,10 @@ class TrafficMeter:
             "bytes_cache_upload": self.bytes_cache_upload,
             "uploads": self.uploads,
             "steps": self.steps,
+            "lanes_local": self.lanes_local,
+            "lanes_remote": self.lanes_remote,
+            "local_hit_fraction": round(self.local_hit_fraction, 4),
+            "bytes_cross_shard": self.bytes_cross_shard,
         }
         if self.tiers:
             out["tiers"] = {k: v.as_dict() for k, v in self.tiers.items()}

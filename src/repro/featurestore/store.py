@@ -29,12 +29,23 @@ and the table they index can never come from different generations.
 
 **Shard-aware generations** (production mesh): with ``mesh`` + ``shard_axis``
 the device table is row-partitioned into ``mesh.shape[shard_axis]``
-contiguous blocks (padded via :attr:`CacheConfig.shards` so they divide
-evenly), global cache slots map to (shard, local row) by
-``divmod(slot, rows_per_shard)`` (:class:`CacheState`), and the refresh
-uploads only each device's own shard — 1/n_shards of the replicated
+blocks (padded via :attr:`CacheConfig.shards` so they divide evenly) and the
+refresh uploads only each device's own shard — 1/n_shards of the replicated
 transfer (``TrafficMeter.bytes_cache_upload``; see
 benchmarks/bench_cache_sensitivity.run_sharded_upload).
+
+**Locality-aware placement** (``CacheConfig(placement="locality")``): instead
+of PR 2's arithmetic ``divmod(slot, rows_per_shard)`` blocks, each generation
+carries an explicit slot -> (shard, local row) permutation
+(:class:`CacheState.placement`, solved by
+``featurestore.placement.solve_placement`` from the meter's per-DP-group
+request histograms) that co-locates every cached row with the home shard of
+the group that requests it most.  The staging tier stays in *logical* slot
+order (host reads are placement-blind); only the device upload permutes into
+device-row order, and ``assemble_input`` hands lookups **device rows**, so
+the fused kernel keeps its contiguous per-shard view.  With
+``placement="contiguous"`` (the default, and before any traffic is observed)
+the permutation is the identity — bit-for-bit the PR 2 layout.
 """
 from __future__ import annotations
 
@@ -46,6 +57,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.featurestore.meter import TrafficMeter
+from repro.featurestore.placement import (PlacementMap, home_shard,
+                                          identity_placement, solve_placement)
 from repro.featurestore.policies import CachePolicy, make_policy
 
 
@@ -59,6 +72,14 @@ class CacheConfig:
     async_refresh: bool = False     # build next generation on a background thread
     shards: int = 1                 # device-table row shards (mesh cache axis);
                                     # the table is padded so shards divide evenly
+    placement: str = "contiguous"   # "contiguous" (PR 2 blocks, reproducible)
+                                    # | "locality" (per-generation permutation
+                                    # from observed per-DP-group traffic)
+    refresh_timeout_s: Optional[float] = None
+                                    # straggler bound for absorbing an
+                                    # in-flight refresh (slow shard uploads):
+                                    # None blocks as before; a float keeps
+                                    # training on the old generation instead
 
     def size(self, num_nodes: int) -> int:
         """Device-table rows: |C| padded so `shards` rows-per-shard are equal."""
@@ -93,20 +114,27 @@ class CacheState:
     """One sampled cache generation (versioned for async refresh at pod scale).
 
     **Shard-aware slot layout**: the device table holds ``table_rows`` rows
-    partitioned into ``n_shards`` equal *contiguous* blocks — exactly how a
-    ``NamedSharding(mesh, P(axis, None))`` splits the row dimension — so a
-    global cache slot ``s`` lives on shard ``s // rows_per_shard`` at local
-    row ``s % rows_per_shard``.  Samplers and the host-side tiers keep using
-    global slots; only the device upload and the fused lookup kernel need the
-    (shard, local row) view, via :meth:`shard_of` / :meth:`local_row`.
+    partitioned into ``n_shards`` equal blocks — exactly how a
+    ``NamedSharding(mesh, P(axis, None))`` splits the row dimension.  With
+    ``placement=None`` (contiguous, the PR 2 layout) a global cache slot
+    ``s`` lives on shard ``s // rows_per_shard`` at local row
+    ``s % rows_per_shard``; a locality-aware generation instead carries an
+    explicit :class:`~repro.featurestore.placement.PlacementMap` permutation.
+    Samplers and the host-side tiers keep using *logical* slots; the device
+    upload and anything handed to the device go through :meth:`device_rows`
+    (identity when contiguous), and :meth:`shard_of` / :meth:`local_row`
+    resolve the owning shard either way.
     """
     node_ids: np.ndarray        # int64 [|C|]  sorted
     probs: np.ndarray           # float64 [V]  the distribution it was drawn from
     in_cache: np.ndarray        # bool [V]
     slot_of: np.ndarray         # int32 [V]  position in node_ids or -1
     version: int = 0
-    n_shards: int = 1           # contiguous row shards of the device table
+    n_shards: int = 1           # row shards of the device table
     table_rows: int = 0         # padded device-table rows (0 = len(node_ids))
+    placement: Optional[PlacementMap] = None
+                                # slot -> (shard, local row) permutation;
+                                # None = contiguous blocks (identity)
 
     @property
     def size(self) -> int:
@@ -117,15 +145,30 @@ class CacheState:
         rows = self.table_rows if self.table_rows else len(self.node_ids)
         return max(rows // max(self.n_shards, 1), 1)
 
+    def device_rows(self, slots: np.ndarray) -> np.ndarray:
+        """Logical slots -> device-table rows (negatives pass through).
+
+        The device tier is laid out in *device-row* order: row
+        ``shard * rows_per_shard + local_row``.  Contiguous generations are
+        the identity; locality generations apply the placement permutation.
+        Everything shipped to the device (``input_cache_slots``, the fused
+        kernel's slot map) carries device rows, so the kernel's contiguous
+        ``divmod`` stays valid whatever the placement.
+        """
+        slots = np.asarray(slots)
+        if self.placement is None:
+            return slots
+        return self.placement.device_rows(slots)
+
     def shard_of(self, slots: np.ndarray) -> np.ndarray:
         """Shard index per global slot (negative slots stay negative)."""
-        slots = np.asarray(slots)
-        return np.where(slots >= 0, slots // self.rows_per_shard, -1)
+        dev = self.device_rows(slots)
+        return np.where(dev >= 0, dev // self.rows_per_shard, -1)
 
     def local_row(self, slots: np.ndarray) -> np.ndarray:
         """Row within the owning shard per global slot (-1 for misses)."""
-        slots = np.asarray(slots)
-        return np.where(slots >= 0, slots % self.rows_per_shard, -1)
+        dev = self.device_rows(slots)
+        return np.where(dev >= 0, dev % self.rows_per_shard, -1)
 
 
 def sample_cache(g, cfg: CacheConfig, rng: np.random.Generator,
@@ -216,6 +259,7 @@ class FeatureStore:
                  meter: Optional[TrafficMeter] = None,
                  importance_mode: Optional[str] = "ht",
                  build_adjacency: bool = False,
+                 dp_group: int = 0,
                  seed: int = 0):
         """``mesh`` + ``shard_axis`` turn on shard-aware generations: the
         device table is row-partitioned into ``mesh.shape[shard_axis]``
@@ -254,6 +298,9 @@ class FeatureStore:
         self.size = cfg.size(graph.num_nodes)
         self.feat_dim = features.shape[1]
         self._row_bytes = self.feat_dim * 4
+        self.dp_group = dp_group    # DP group this store's batches belong to
+                                    # (assemble_input default; locality
+                                    # histograms and home-shard metering)
 
         # double-buffered pinned-host staging (tier 1): live half + shadow half
         self._staging = [np.zeros((self.size, self.feat_dim), np.float32)
@@ -273,6 +320,9 @@ class FeatureStore:
                                     # (evaluation must not skew training
                                     # metrics or the adaptive traffic EMA)
         self.refresh_delay = 0.0    # test hook: artificial build latency (s)
+        self.upload_delay = 0.0     # test hook: artificial shard-upload
+                                    # latency (s) — the straggler the
+                                    # refresh_timeout_s path must absorb
 
     # ------------------------------------------------------------------
     # generation access (readers snapshot once per batch)
@@ -302,15 +352,28 @@ class FeatureStore:
     # ------------------------------------------------------------------
     # tier reads
     # ------------------------------------------------------------------
-    def assemble_input(self, gen: Generation, ids_p: np.ndarray, n_in: int):
+    def assemble_input(self, gen: Generation, ids_p: np.ndarray, n_in: int,
+                       group: Optional[int] = None):
         """Resolve padded input ids against one generation.
 
-        Returns (slots, streamed, num_cached, bytes_streamed).  Hits are
-        served by the device table (tier 0, counted but not copied); misses
-        are gathered from host features (tier 2) into the per-batch streamed
-        array and fed back to the policy.
+        Returns ``(slots, streamed, num_cached, bytes_streamed,
+        local_shard)``.  ``slots`` are **device rows** (the table is laid
+        out in device-row order — identical to logical slots for contiguous
+        generations); hits are served by the device table (tier 0, counted
+        but not copied); misses are gathered from host features (tier 2)
+        into the per-batch streamed array and fed back to the policy.
+
+        ``local_shard`` is the requesting group's home shard when EVERY hit
+        row of this batch lives on it (else None) — the host-side gate for
+        the fused kernel's psum-free fast path (``kernels.ops
+        .cache_lookup_agg(local_shard=...)``): the contract that all hit
+        lanes resolve locally is established here, where the slot map is
+        built, and nowhere else.
         """
-        slots = gen.state.slot_of[ids_p].astype(np.int32)
+        if group is None:
+            group = self.dp_group
+        state = gen.state
+        slots = state.device_rows(state.slot_of[ids_p]).astype(np.int32)
         slots[n_in:] = -1
         valid = np.zeros(len(ids_p), dtype=bool)
         valid[:n_in] = True
@@ -321,6 +384,11 @@ class FeatureStore:
         miss_ids = ids_p[miss]
         if len(miss_ids):
             streamed[miss] = self.features[miss_ids]
+        # locality: which shard serves each hit, vs the group's home shard
+        home = home_shard(group, state.n_shards)
+        hit_shards = slots[(slots >= 0) & valid] // state.rows_per_shard
+        n_local = int((hit_shards == home).sum())
+        all_local = state.n_shards > 1 and n_local == len(hit_shards)
         if self.record:
             self.meter.t_slice += time.perf_counter() - t0
             dev = self.meter.tier("device")
@@ -330,13 +398,21 @@ class FeatureStore:
             host = self.meter.tier("host")
             host.hits += len(miss_ids)
             host.bytes_read += len(miss_ids) * self._row_bytes
+            self.meter.lanes_local += n_local
+            self.meter.lanes_remote += hits - n_local
+            self.meter.bytes_cross_shard += (hits - n_local) * self._row_bytes
+            if self.cfg.placement == "locality":
+                # per-group demand histogram: the placement solver's input
+                self.meter.observe_group(group, ids_p[:n_in],
+                                         self.graph.num_nodes)
             # feed the FULL requested-id traffic (hits AND misses) to the
             # policy: a miss-only feed starves the EMA of nodes once they
             # become hits, so their scores decay until eviction and they
             # oscillate in and out of the cache (ROADMAP follow-up; see
             # AdaptivePolicy and the churn regression test).
             self.policy.observe(ids_p[:n_in])
-        return slots, streamed, hits, len(miss_ids) * self._row_bytes
+        return (slots, streamed, hits, len(miss_ids) * self._row_bytes,
+                home if all_local else None)
 
     def gather_rows(self, ids: np.ndarray,
                     gen: Optional[Generation] = None,
@@ -405,14 +481,35 @@ class FeatureStore:
         self._lam_cache = (probs, lam)
         return lam
 
+    def _solve_placement(self, state: CacheState,
+                         rng: np.random.Generator) -> Optional[PlacementMap]:
+        """Locality placement for one generation (None = stay contiguous).
+
+        Uses the meter's per-DP-group request histograms restricted to the
+        drawn membership; until any traffic is observed (cold start, or a
+        store whose batches never went through ``assemble_input``) the
+        layout stays contiguous, so reproducibility-sensitive runs get the
+        PR 2 blocks for free.
+        """
+        if self.cfg.placement != "locality" or self.n_shards <= 1:
+            return None
+        traffic = self.meter.group_slot_traffic(state.node_ids,
+                                                state.table_rows)
+        if traffic is None:
+            return None
+        return solve_placement(traffic, self.n_shards, state.rows_per_shard,
+                               group_ids=self.meter.group_ids(),
+                               seed=int(rng.integers(2 ** 31)))
+
     def _build(self, rng: np.random.Generator, version: int,
                staged_idx: int) -> Generation:
-        """Build one full generation: score → draw → gather → upload."""
+        """Build one full generation: score → draw → place → gather → upload."""
         t0 = time.perf_counter()
         probs = self._policy_probs()
         state = sample_cache(self.graph, self.cfg, rng,
                              train_idx=self.train_idx, probs=probs,
                              version=version)
+        state.placement = self._solve_placement(state, rng)
         # recycle this staging half: retire its previous owner BEFORE writing
         # so stale snapshots fall back to the host tier instead of reading
         # another generation's rows (see gather_rows)
@@ -431,7 +528,7 @@ class FeatureStore:
             buf[n:] = 0.0
         if self.refresh_delay:
             time.sleep(self.refresh_delay)            # test hook
-        tbl = self._upload(buf)
+        tbl = self._upload(buf, state)
         lam = self._solve_lambda(probs)
         adj = (self.graph.induced_cache_adjacency(state.in_cache)
                if self.build_adjacency else None)
@@ -443,8 +540,13 @@ class FeatureStore:
         self.refreshes += 1
         return gen
 
-    def _upload(self, buf: np.ndarray):
+    def _upload(self, buf: np.ndarray, state: Optional[CacheState] = None):
         """Staging half -> device table (tier 0), metering the transfer.
+
+        The staging tier keeps *logical* slot order; the device table is
+        laid out in **device-row** order (``state.placement`` permutes on
+        the way up — identity for contiguous generations), so shard ``s``'s
+        block holds exactly the rows the placement assigned it.
 
         Shard-aware path (``mesh`` + ``shard_axis``): the table is
         row-partitioned over the cache axis and each device receives ONLY its
@@ -460,6 +562,11 @@ class FeatureStore:
         import jax
         import jax.numpy as jnp
 
+        pm = state.placement if state is not None else None
+        if pm is not None and not pm.is_identity:
+            buf = buf[pm.slot_of_device_row]       # fresh permuted copy
+        if self.upload_delay:
+            time.sleep(self.upload_delay)          # test hook: slow upload
         dtype = self.dtype or jnp.float32
         if self.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P

@@ -32,6 +32,21 @@ contributed by shard 0 only, from the replicated streamed buffer), and the
 per-shard partials are psum-ed over the cache axis.  The decomposition only
 inserts zero terms and regroups the fixed-order sum, so integer-exact inputs
 stay bitwise identical to the single-device kernel.
+
+**Local fast path** (locality-aware placement, PR 3): when the host
+established at batch-assembly time that EVERY hit slot of the batch lives on
+one known shard (``FeatureStore.assemble_input`` returns ``local_shard``
+after the placement solver co-located the group's hot rows), the cross-shard
+psum is unnecessary: that shard's partial — the plain single-device kernel
+on its local block with a shard-local slot map and UNMASKED lane weights
+(``claim_all=True``: hits and misses alike are claimed by the local shard,
+misses riding the replicated streamed buffer) — already *is* the full
+result.  ``kernels.ops._fused_forward`` then runs the kernel only on the
+owner shard (``lax.cond``) and broadcasts the finished rows with a one-to-
+all ``ppermute`` instead of all-reducing zero partials from every shard.
+The contract (all hits local) lives in the store; violating it silently
+drops the non-local hit lanes' contributions, which is why only
+``assemble_input`` may produce a ``local_shard``.
 """
 from __future__ import annotations
 
@@ -161,7 +176,8 @@ def cache_lookup_agg_shard_partial(local_table: jax.Array,
                                    rows_per_shard: int,
                                    block_d: int = 2048,
                                    interpret: bool = False,
-                                   use_kernel: bool = True) -> jax.Array:
+                                   use_kernel: bool = True,
+                                   claim_all: bool = False) -> jax.Array:
     """One shard's partial of the fused lookup: kernel on the LOCAL table.
 
     Used as the ``shard_map`` body over the cache axis (``shard`` =
@@ -170,11 +186,21 @@ def cache_lookup_agg_shard_partial(local_table: jax.Array,
     ``use_kernel=False`` runs the pure-jnp oracle instead of the Pallas
     kernel (the dry-run path: interpret-mode Pallas at pod-scale grids is
     not lowerable economically from a CPU host).
+
+    ``claim_all=True`` is the LOCAL FAST PATH partial: every lane — hit and
+    miss — is claimed by this shard (weights unmasked), so under the host
+    contract that all hit slots live here, this single partial equals the
+    full single-device kernel bitwise and no psum is needed.  Hit slots NOT
+    on this shard map to -1 and would wrongly read the (zeroed) streamed
+    row — the caller must hold the contract.
     """
     idx = idx.astype(jnp.int32)
-    lane_slots = jnp.take(slots.astype(jnp.int32), idx, axis=0)
     local_slots = shard_slot_map(slots, shard, rows_per_shard)
-    w_eff = shard_lane_weights(w, lane_slots, shard, rows_per_shard)
+    if claim_all:
+        w_eff = w.astype(jnp.float32)
+    else:
+        lane_slots = jnp.take(slots.astype(jnp.int32), idx, axis=0)
+        w_eff = shard_lane_weights(w, lane_slots, shard, rows_per_shard)
     if not use_kernel:
         from repro.kernels import ref
         return ref.cache_lookup_agg_ref(local_table, streamed, local_slots,

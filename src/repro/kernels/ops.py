@@ -65,7 +65,7 @@ def _dp_spec(mesh, shard_axis):
 
 
 def _fused_forward(cache_table, streamed, slots, idx, w,
-                   impl, block_d, mesh, shard_axis):
+                   impl, block_d, mesh, shard_axis, local_shard=None):
     """Forward of the fused input op; shard_map over the cache axis if given.
 
     Sharded contract (the production regime): the table is row-partitioned
@@ -76,6 +76,14 @@ def _fused_forward(cache_table, streamed, slots, idx, w,
     partials are psum-ed over the cache axis — see
     ``kernels.cache_lookup.shard_lane_weights`` for why the regrouped sum is
     exact.
+
+    ``local_shard`` (static int) is the locality fast path: the host
+    verified at batch assembly that EVERY hit slot lives on that shard
+    (locality-aware placement, ``FeatureStore.assemble_input``), so the
+    owner's ``claim_all`` partial is already the full result — the other
+    shards skip the kernel entirely (``lax.cond``) and the finished rows are
+    ppermute-broadcast from the owner instead of all-reduced.  Bitwise equal
+    to the psum path whenever the host contract holds.
     """
     from repro.kernels.cache_lookup import cache_lookup_agg_shard_partial
 
@@ -92,12 +100,49 @@ def _fused_forward(cache_table, streamed, slots, idx, w,
         rps = rows // n
         _, bspec = _dp_spec(mesh, shard_axis)
 
-        def body(tbl, st, sl, ix, ww):
-            shard = jax.lax.axis_index(shard_axis)
-            part = cache_lookup_agg_shard_partial(
-                tbl, st, sl, ix, ww, shard, rps, block_d=block_d,
-                interpret=_interpret(), use_kernel=use_kernel)
-            return jax.lax.psum(part, shard_axis)
+        if local_shard is not None and n > 1:
+            ls = int(local_shard)
+            assert 0 <= ls < n, (local_shard, n)
+
+            def body(tbl, st, sl, ix, ww):
+                shard = jax.lax.axis_index(shard_axis)
+
+                def _owner(t, s_, sl_, ix_, ww_):
+                    return cache_lookup_agg_shard_partial(
+                        t, s_, sl_, ix_, ww_, ls, rps, block_d=block_d,
+                        interpret=_interpret(), use_kernel=use_kernel,
+                        claim_all=True)
+
+                def _skip(t, s_, sl_, ix_, ww_):
+                    return jnp.zeros((ix_.shape[0], t.shape[1]), jnp.float32)
+
+                part = jax.lax.cond(shard == ls, _owner, _skip,
+                                    tbl, st, sl, ix, ww)
+                # broadcast the finished rows from the owner by recursive
+                # doubling: round k sends from the 2^k devices that already
+                # hold them (a static set — ppermute sources must be unique,
+                # so one-to-all is built as a log2(n) tree).  Each device
+                # receives the rows exactly once -> (n-1)·|out| total bytes,
+                # half an all-reduce's, with no adds — the psum skip.
+                j = (shard - ls) % n        # my distance from the owner
+                out = part
+                shift = 1
+                while shift < n:
+                    senders = min(shift, n - shift)
+                    perm = [((ls + a) % n, (ls + a + shift) % n)
+                            for a in range(senders)]
+                    recv = jax.lax.ppermute(out, shard_axis, perm)
+                    newly = (j >= shift) & (j < shift + senders)
+                    out = jnp.where(newly, recv, out)
+                    shift *= 2
+                return out
+        else:
+            def body(tbl, st, sl, ix, ww):
+                shard = jax.lax.axis_index(shard_axis)
+                part = cache_lookup_agg_shard_partial(
+                    tbl, st, sl, ix, ww, shard, rps, block_d=block_d,
+                    interpret=_interpret(), use_kernel=use_kernel)
+                return jax.lax.psum(part, shard_axis)
 
         fn = shard_map_compat(
             body, mesh=mesh,
@@ -111,22 +156,29 @@ def _fused_forward(cache_table, streamed, slots, idx, w,
                                    block_d=block_d, interpret=_interpret())
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
 def _fused(cache_table, streamed, slots, idx, w, impl, block_d, mesh,
-           shard_axis):
+           shard_axis, local_shard):
     return _fused_forward(cache_table, streamed, slots, idx, w,
-                          impl, block_d, mesh, shard_axis)
+                          impl, block_d, mesh, shard_axis, local_shard)
 
 
 def _fused_fwd(cache_table, streamed, slots, idx, w, impl, block_d, mesh,
-               shard_axis):
+               shard_axis, local_shard):
     out = _fused_forward(cache_table, streamed, slots, idx, w,
-                         impl, block_d, mesh, shard_axis)
+                         impl, block_d, mesh, shard_axis, local_shard)
     return out, (cache_table, streamed, slots, idx, w)
 
 
-def _fused_bwd(impl, block_d, mesh, shard_axis, res, g):
+def _fused_bwd(impl, block_d, mesh, shard_axis, local_shard, res, g):
     """Hand-written VJP in plain jnp: Pallas kernels carry no AD rules.
+
+    ``local_shard`` is deliberately ignored: under the fast-path contract
+    (every hit lane owned by that one shard) the generic owner-claims-its-
+    lanes backward already scatters each gradient on exactly the right
+    shard — hits land on ``local_shard`` because it owns them, misses are
+    replicated as always — so forward-fast and forward-psum share one
+    backward and cannot drift apart.
 
     The sharded path MUST mirror the forward's shard_map rather than run
     global-array math: inside the forward each DP group's ``idx``/``slots``
@@ -214,24 +266,32 @@ _fused.defvjp(_fused_fwd, _fused_bwd)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("impl", "block_d", "mesh", "shard_axis"))
+                   static_argnames=("impl", "block_d", "mesh", "shard_axis",
+                                    "local_shard"))
 def cache_lookup_agg(cache_table: jax.Array, streamed: jax.Array,
                      slots: jax.Array, idx: jax.Array, w: jax.Array,
                      impl: str = "pallas", block_d: int = 512,
-                     mesh=None, shard_axis: Optional[str] = None) -> jax.Array:
+                     mesh=None, shard_axis: Optional[str] = None,
+                     local_shard: Optional[int] = None) -> jax.Array:
     """Fused GNS input layer: cache/streamed select + gather-agg.  [B,D] f32.
 
     Differentiable (custom VJP) so the train step's backward flows into the
     cache table / streamed rows / weights.  Pass ``mesh`` + ``shard_axis``
     (both static) to run the shard-aware path: per-device kernel on the
-    local table shard, psum over the cache axis.
+    local table shard, psum over the cache axis.  ``local_shard`` (static;
+    only meaningful with a mesh) switches to the psum-free local fast path —
+    the caller must hold the all-hits-local contract established by
+    ``FeatureStore.assemble_input`` (which is where the value comes from).
     """
     d = cache_table.shape[1]
     bd = min(block_d, d)
     while d % bd:
         bd -= 1
+    if mesh is None or shard_axis not in getattr(mesh, "axis_names", ()):
+        local_shard = None          # nothing to skip without a cache axis
     return _fused(cache_table, streamed, slots.astype(jnp.int32),
-                  idx.astype(jnp.int32), w, impl, bd, mesh, shard_axis)
+                  idx.astype(jnp.int32), w, impl, bd, mesh, shard_axis,
+                  local_shard)
 
 
 @functools.partial(jax.jit, static_argnames=(

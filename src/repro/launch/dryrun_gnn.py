@@ -97,15 +97,70 @@ def batch_structs(mesh, batch: int = BATCH, fanouts=FANOUTS,
     return batch_struct, batch_sh
 
 
+def placement_traffic_sim(cache_rows: int, n_shards: int, n_groups: int,
+                          dominant_share: float = 0.8,
+                          seed: int = 0) -> dict:
+    """Cross-shard lookup traffic, contiguous vs locality, at paper |C|.
+
+    Runs the REAL placement solver (``featurestore.placement``) on a
+    synthetic Zipf demand histogram at full production cache size (1.11M
+    rows on papers100M): each cached row's traffic is Zipf-distributed and
+    ``dominant_share`` of it comes from one uniformly-drawn DP group — the
+    skew Data Tiering (arXiv:2111.05894) reports for real access traces.
+    Reports the fraction of hit traffic served by the requesting group's
+    home shard under both placements.
+    """
+    from repro.featurestore.placement import home_shard, solve_placement
+
+    rng = np.random.default_rng(seed)
+    rows_per_shard = cache_rows // n_shards
+    total = rng.zipf(1.5, cache_rows).astype(np.float64)
+    dom = rng.integers(0, n_groups, cache_rows)
+    # per-(group, row) traffic without materializing [G, R] for the metric:
+    # dominant group carries dominant_share, the rest spread evenly
+    rest = total * (1.0 - dominant_share) / max(n_groups - 1, 1)
+    pref = np.array([home_shard(g, n_shards) for g in range(n_groups)])[dom]
+
+    # contiguous: shard of a slot is slot // rows_per_shard (membership is
+    # traffic-agnostic, so hot rows land uniformly across shards)
+    def local_traffic(shard_of_slot):
+        local = np.zeros(cache_rows)
+        for g in range(n_groups):
+            mine = dom == g
+            share = np.where(mine, dominant_share * total, rest)
+            local += share * (shard_of_slot == home_shard(g, n_shards))
+        return float(local.sum())
+
+    grand = float(total.sum())
+    contiguous = np.arange(cache_rows) // rows_per_shard
+    # locality: the real greedy solver on (total, preferred shard) — the
+    # exact code path FeatureStore._solve_placement runs, via the same
+    # internal assignment
+    from repro.featurestore.placement import _assign
+    locality, _ = _assign(total, pref, n_shards, rows_per_shard, seed=seed)
+    frac_cont = local_traffic(contiguous) / grand
+    frac_loc = local_traffic(locality) / grand
+    return {
+        "lookup_local_frac_contiguous": round(frac_cont, 4),
+        "lookup_local_frac_locality": round(frac_loc, 4),
+        "crossshard_rows_frac_contiguous": round(1 - frac_cont, 4),
+        "crossshard_rows_frac_locality": round(1 - frac_loc, 4),
+    }
+
+
 def run(multi_pod: bool = False, *, mesh=None, num_nodes: int = NUM_NODES,
         feat_dim: int = FEAT_DIM, num_classes: int = NUM_CLASSES,
         cache_frac: float = CACHE_FRAC, batch: int = BATCH,
         fanouts=FANOUTS, hidden_dim: int = 256,
-        input_impl: str = "fused") -> dict:
+        input_impl: str = "fused", local_fast_path: bool = False) -> dict:
     """Lower + compile the GNS train step; ``mesh=None`` = production mesh.
 
     The reduced-dims path (explicit ``mesh`` + small shapes) is the CI
     lane: the same lowering on a mocked multi-device host mesh.
+    ``local_fast_path=True`` lowers the step with the locality fast path
+    active (``local_shard=0``): the input layer's cache-axis all-reduce is
+    replaced by the recursive-doubling broadcast, which shows up directly
+    in the compiled HLO's collective bytes.
     """
     if mesh is None:
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -134,9 +189,12 @@ def run(multi_pod: bool = False, *, mesh=None, num_nodes: int = NUM_NODES,
     cache_sh = NamedSharding(mesh, P(cache_axis, None))    # row-sharded cache
     b_structs, b_sh = batch_structs(mesh, batch, fanouts, feat_dim)
 
+    local_shard = 0 if local_fast_path else None
+
     def train_step(params, opt_state, batch, cache_table):
         (loss, acc), grads = jax.value_and_grad(
-            graphsage.loss_fn, has_aux=True)(params, batch, cache_table, mcfg)
+            graphsage.loss_fn, has_aux=True)(params, batch, cache_table,
+                                             mcfg, local_shard)
         params, opt_state = opt.update(grads, opt_state, params)
         return params, opt_state, loss
 
@@ -168,19 +226,37 @@ def run(multi_pod: bool = False, *, mesh=None, num_nodes: int = NUM_NODES,
     terms = roofline_terms(flops, byt, coll, _gnn_cfg_stub(), shape, chips,
                            n_active=float(n_params))
     table_bytes = cache_rows * feat_dim * 4
+    # cross-shard lookup traffic before/after the locality placement map:
+    # the real solver on a skewed synthetic demand at this config's |C|
+    n_dp_groups = max(chips // n_shards, 1)
+    placement_sim = placement_traffic_sim(cache_rows, n_shards,
+                                          min(n_dp_groups, 64))
+    s0_rows = block_pad_sizes(batch, fanouts)[0][1]
+    row_bytes = feat_dim * 4
     rec = {
         "arch": "gnn-graphsage-gns", "shape": "train_1k",
         "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
         "chips": chips,
         "status": "ok", "kind": "train",
         "input_impl": mcfg.input_impl, "cache_shard_axis": cache_axis,
+        "local_fast_path": bool(local_fast_path),
         "params_total": float(n_params),
         "cache_rows": cache_rows,
         "cache_bytes_per_chip": table_bytes / n_shards,
         # per-generation refresh transfer: shard-aware upload vs replicating
-        # the full table to every chip (the paper-scale saving this PR lands)
+        # the full table to every chip (the paper-scale saving PR 2 landed)
         "upload_bytes_per_gen_sharded": table_bytes * chips // n_shards,
         "upload_bytes_per_gen_replicated": table_bytes * chips,
+        # locality placement: fraction of cache-hit rows the requesting DP
+        # group's home shard serves, and the implied cross-shard row bytes
+        # per batch, contiguous vs locality (PR 3's saving)
+        **placement_sim,
+        "crossshard_bytes_per_batch_contiguous": int(
+            s0_rows * row_bytes *
+            placement_sim["crossshard_rows_frac_contiguous"]),
+        "crossshard_bytes_per_batch_locality": int(
+            s0_rows * row_bytes *
+            placement_sim["crossshard_rows_frac_locality"]),
         "memory_analysis": mem_d,
         "cost_flops_per_device": flops, "cost_bytes_per_device": byt,
         "roofline": terms.as_dict(), "compile_s": round(t_compile, 2),
@@ -211,6 +287,8 @@ def main():
               f"cache/chip={rec['cache_bytes_per_chip']/1e6:.1f}MB "
               f"upload/gen={rec['upload_bytes_per_gen_sharded']/1e9:.2f}GB "
               f"(vs {rec['upload_bytes_per_gen_replicated']/1e9:.2f}GB repl.) "
+              f"local-hit={rec['lookup_local_frac_locality']:.2f} "
+              f"(vs {rec['lookup_local_frac_contiguous']:.2f} contiguous) "
               f"(compile {rec['compile_s']}s)")
     return failures
 

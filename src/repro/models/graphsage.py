@@ -98,8 +98,13 @@ def assemble_input(batch: DeviceBatch, cache_table: jnp.ndarray,
 
 
 def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
-            cfg: SageConfig) -> jnp.ndarray:
-    """Returns logits [B_padded, num_classes]."""
+            cfg: SageConfig, local_shard: Optional[int] = None) -> jnp.ndarray:
+    """Returns logits [B_padded, num_classes].
+
+    ``local_shard`` (static) forwards the locality fast-path gate to the
+    fused input op: the batch assembler set it iff every cache hit of THIS
+    batch resolves on that shard (see ``FeatureStore.assemble_input``).
+    """
     agg = _get_aggregate(cfg.aggregate_impl)
     fused = cfg.input_impl == "fused"
     h = None if fused else assemble_input(batch, cache_table)
@@ -108,7 +113,8 @@ def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
             # one Pallas pass: cache/streamed select + layer-0 gather-agg;
             # self rows come from a statically-sliced prefix assembly.  On a
             # mesh with the cache table row-sharded over cfg.cache_shard_axis
-            # each device runs the kernel on its own shard (psum'd partials).
+            # each device runs the kernel on its own shard (psum'd partials,
+            # or the psum-free local fast path when the batch is fully local).
             from repro.kernels.ops import cache_lookup_agg
             from repro.launch.sharding import current_mesh
             mesh = current_mesh()
@@ -119,7 +125,8 @@ def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
                                  batch.input_cache_slots,
                                  blk.nbr_idx, blk.nbr_w,
                                  impl=cfg.input_kernel,
-                                 mesh=mesh, shard_axis=axis)
+                                 mesh=mesh, shard_axis=axis,
+                                 local_shard=local_shard)
             h_dst = assemble_input(batch, cache_table, prefix=blk.num_dst)
         else:
             h_dst = h[: blk.num_dst]
@@ -131,8 +138,9 @@ def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
 
 
 def loss_fn(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
-            cfg: SageConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
-    logits = forward(params, batch, cache_table, cfg)
+            cfg: SageConfig,
+            local_shard: Optional[int] = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    logits = forward(params, batch, cache_table, cfg, local_shard=local_shard)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, batch.labels[:, None].astype(jnp.int32),
                                axis=-1)[:, 0]

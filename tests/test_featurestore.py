@@ -140,7 +140,7 @@ def test_assemble_input_tier_accounting(g, feats):
     gen = store.refresh(np.random.default_rng(0))
     ids = np.arange(200, dtype=np.int64)
     ids_p = np.concatenate([ids, np.zeros(56, np.int64)])
-    slots, streamed, hits, bts = store.assemble_input(gen, ids_p, len(ids))
+    slots, streamed, hits, bts, _ = store.assemble_input(gen, ids_p, len(ids))
     misses = (slots[:200] < 0).sum()
     assert hits + misses == 200
     assert bts == misses * feats.shape[1] * 4
@@ -315,7 +315,7 @@ def test_record_flag_suspends_metering_and_feedback(g, feats):
     gen = store.refresh(np.random.default_rng(0))
     ids_p = np.arange(100, dtype=np.int64)
     store.record = False
-    slots, streamed, hits, bts = store.assemble_input(gen, ids_p, 100)
+    slots, streamed, hits, bts, _ = store.assemble_input(gen, ids_p, 100)
     assert bts > 0                              # batch-level bytes still reported
     assert not store.meter.tiers                # no tier counters created
     assert store.policy._ema.sum() == 0         # no miss feedback

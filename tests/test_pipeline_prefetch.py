@@ -1,10 +1,15 @@
-"""Prefetcher straggler mitigation: timeout→reuse, errors, clean shutdown."""
+"""Prefetcher straggler mitigation: timeout→reuse, errors, clean shutdown —
+plus the slow-shard-UPLOAD extension (PR 3): a generation whose device
+upload straggles past ``CacheConfig.refresh_timeout_s`` must neither block
+``swap_if_ready`` nor the epoch-boundary absorb; training keeps consuming
+the old generation until the upload lands."""
 import threading
 import time
 
+import numpy as np
 import pytest
 
-from repro.core.pipeline import Prefetcher
+from repro.core.pipeline import EpochLoader, Prefetcher
 
 
 def _slow_iter(items, delays):
@@ -74,3 +79,91 @@ def test_reused_counter_zero_when_producer_keeps_up():
     p = Prefetcher(it, depth=4, timeout_s=1.0)
     assert list(p) == [0, 1, 2, 3]
     assert p.reused == 0
+
+
+# ---------------------------------------------------------------------------
+# slow shard-upload stragglers (ROADMAP follow-up, PR 3)
+# ---------------------------------------------------------------------------
+
+def _gns_setup(upload_delay, refresh_timeout_s):
+    from repro.core.sampler import GNSSampler, SamplerConfig
+    from repro.featurestore import CacheConfig, FeatureStore
+    from repro.graph.generate import powerlaw_graph
+
+    g = powerlaw_graph(600, avg_degree=6, seed=0)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 8)).astype(np.float32)
+    labels = np.zeros(g.num_nodes, np.int32)
+    train = np.arange(400, dtype=np.int64)
+    cfg = SamplerConfig(
+        fanouts=(3, 4), batch_size=50,
+        cache=CacheConfig(fraction=0.05, period=1, async_refresh=True,
+                          refresh_timeout_s=refresh_timeout_s))
+    store = FeatureStore(feats, g, cfg.cache, build_adjacency=True)
+    s = GNSSampler(g, cfg, feats, labels, train_idx=train, store=store)
+    # initial (synchronous) generation uploads fast; only REFRESH uploads
+    # straggle — the scenario is a slow device, not a broken first build
+    s.ensure_cache(np.random.default_rng(1))
+    store.upload_delay = upload_delay
+    return s, store, train
+
+
+def test_slow_upload_does_not_block_swap_or_steps():
+    """An async refresh whose shard upload straggles: swap_if_ready stays
+    False (never blocks), the epoch-boundary absorb gives up after
+    refresh_timeout_s, and every batch keeps consuming the OLD generation
+    until the upload finally lands."""
+    s, store, train = _gns_setup(upload_delay=0.6, refresh_timeout_s=0.05)
+    loader = EpochLoader(s, train, seed=0, max_batches=4)
+    v0 = s._gen.version
+
+    # epoch 1 kicks the straggling async refresh; batches must keep flowing
+    # against v0 while the upload sleeps
+    t0 = time.perf_counter()
+    versions = [mb.cache_version for mb in loader.epoch(1)]
+    assert versions == [v0] * 4, versions
+    assert store.refreshing                      # still stuck in the upload
+    assert not store.swap_if_ready()             # never blocks, never lies
+    # epoch 2's absorb must time out (0.05s) instead of joining the 0.6s
+    # upload: the epoch start stays an order of magnitude under the delay
+    t1 = time.perf_counter()
+    it = loader.epoch(2)
+    first = next(it)
+    assert time.perf_counter() - t1 < 0.45
+    assert first.cache_version == v0
+    for mb in it:
+        assert mb.cache_version == v0
+    # once the upload lands, the swap is adopted at the next boundary
+    assert store.wait_refresh(timeout=10.0)
+    store.upload_delay = 0.0
+    s.adopt_generation()
+    versions = {mb.cache_version for mb in loader.epoch(3)}
+    assert v0 not in versions and len(versions) >= 1, versions
+    assert time.perf_counter() - t0 < 30.0
+
+
+def test_slow_upload_composes_with_prefetcher_reuse():
+    """The two straggler layers compose: with the producer never blocking on
+    the upload (timeout path) the Prefetcher sees a steady batch stream and
+    its own reuse path stays idle."""
+    s, store, train = _gns_setup(upload_delay=0.4, refresh_timeout_s=0.02)
+    loader = EpochLoader(s, train, seed=0, max_batches=6)
+    p = Prefetcher(loader.epoch(1), depth=2, timeout_s=2.0)
+    got = list(p)
+    assert len(got) == 6
+    assert p.reused == 0            # producer never stalled on the upload
+    store.wait_refresh(timeout=10.0)
+
+
+def test_no_timeout_configured_preserves_blocking_absorb():
+    """refresh_timeout_s=None keeps PR 2 semantics: the epoch-boundary
+    absorb joins the in-flight build (upload included) before continuing."""
+    s, store, train = _gns_setup(upload_delay=0.15, refresh_timeout_s=None)
+    loader = EpochLoader(s, train, seed=0, max_batches=2)
+    list(loader.epoch(1))           # kicks the slow async refresh
+    v_before = s._gen.version
+    t0 = time.perf_counter()
+    first = next(loader.epoch(2))   # absorb must BLOCK through the upload
+    waited = time.perf_counter() - t0
+    assert first.cache_version != v_before
+    assert waited >= 0.1, waited

@@ -1,0 +1,227 @@
+"""Property-based invariants of the locality-aware cache shard placement.
+
+Runs under real ``hypothesis`` when installed, else the seeded fallback shim
+(tests/_hypothesis_fallback.py) — same contract as tests/test_kernels.py.
+
+The invariants every placement must hold, whatever traffic produced it:
+
+* slot -> (shard, local row) -> device row round-trips (a bijection over the
+  full padded table);
+* every shard receives exactly ``rows_per_shard`` rows (balanced capacity);
+* padding slots are placed but never handed to lookups by the store;
+* an identity placement (and a placement solved from no traffic) degrades
+  bit-for-bit to PR 2's contiguous ``divmod`` blocks.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.featurestore import (CacheConfig, FeatureStore, home_shard,
+                                identity_placement, sample_cache,
+                                solve_placement)
+from repro.featurestore.store import CacheState
+from repro.graph.generate import powerlaw_graph
+
+
+def _random_placement(rng, n_groups, n_shards, rows_per_shard):
+    rows = n_shards * rows_per_shard
+    traffic = rng.integers(0, 40, (n_groups, rows)).astype(np.float64)
+    traffic[:, rng.random(rows) < 0.3] = 0.0     # cold rows incl. "padding"
+    return solve_placement(traffic, n_shards, rows_per_shard,
+                           seed=int(rng.integers(2 ** 31)))
+
+
+# ---------------------------------------------------------------------------
+# solver invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25)
+@given(n_shards=st.integers(1, 6), rows_per_shard=st.integers(1, 12),
+       n_groups=st.integers(1, 5), seed=st.integers(0, 10 ** 6))
+def test_placement_is_balanced_bijection(n_shards, rows_per_shard,
+                                         n_groups, seed):
+    rng = np.random.default_rng(seed)
+    pm = _random_placement(rng, n_groups, n_shards, rows_per_shard)
+    rows = n_shards * rows_per_shard
+    dev = pm.device_row_of_slot
+    # bijection over the full padded table
+    assert sorted(dev.tolist()) == list(range(rows))
+    np.testing.assert_array_equal(pm.slot_of_device_row[dev],
+                                  np.arange(rows, dtype=np.int32))
+    # shard/local round-trip through the map's own views
+    slots = np.arange(rows)
+    np.testing.assert_array_equal(
+        pm.shard_of_slot(slots) * rows_per_shard + pm.local_row_of_slot(slots),
+        dev)
+    # balanced capacity: every shard exactly rows_per_shard rows
+    counts = np.bincount(dev // rows_per_shard, minlength=n_shards)
+    assert (counts == rows_per_shard).all(), counts
+    # negatives (miss lanes) pass through untouched
+    assert pm.device_rows(np.array([-1, -7]))[0] == -1
+    assert (pm.shard_of_slot(np.array([-1])) == -1).all()
+
+
+@settings(max_examples=15)
+@given(n_shards=st.integers(2, 5), rows_per_shard=st.integers(2, 10),
+       seed=st.integers(0, 10 ** 6))
+def test_placement_deterministic_under_seed(n_shards, rows_per_shard, seed):
+    rng = np.random.default_rng(seed)
+    rows = n_shards * rows_per_shard
+    traffic = rng.integers(0, 5, (3, rows)).astype(np.float64)  # many ties
+    a = solve_placement(traffic, n_shards, rows_per_shard, seed=seed)
+    b = solve_placement(traffic, n_shards, rows_per_shard, seed=seed)
+    np.testing.assert_array_equal(a.device_row_of_slot, b.device_row_of_slot)
+
+
+@settings(max_examples=15)
+@given(n_shards=st.integers(2, 5), rows_per_shard=st.integers(2, 8),
+       seed=st.integers(0, 10 ** 6))
+def test_hot_rows_win_their_home_shard(n_shards, rows_per_shard, seed):
+    """The hottest rows_per_shard rows of one dominant group must all land
+    on that group's home shard — the greedy hot-row-first guarantee."""
+    rng = np.random.default_rng(seed)
+    rows = n_shards * rows_per_shard
+    group = int(rng.integers(0, n_shards))
+    traffic = np.zeros((n_shards, rows))
+    hot = rng.choice(rows, rows_per_shard, replace=False)
+    traffic[group, hot] = 1000 + rng.integers(0, 100, rows_per_shard)
+    # background noise from other groups, strictly colder
+    traffic += rng.integers(0, 5, traffic.shape)
+    pm = solve_placement(traffic, n_shards, rows_per_shard, seed=seed)
+    assert (pm.shard_of_slot(hot) == home_shard(group, n_shards)).all()
+
+
+def test_all_zero_traffic_decays_to_identity():
+    pm = solve_placement(np.zeros((3, 12)), 4, 3, seed=9)
+    assert pm.is_identity
+    np.testing.assert_array_equal(pm.device_row_of_slot, np.arange(12))
+
+
+# ---------------------------------------------------------------------------
+# CacheState: permuted mapping vs PR 2's arithmetic blocks
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15)
+@given(n_shards=st.integers(1, 4), rows_per_shard=st.integers(1, 16))
+def test_identity_placement_degrades_to_contiguous(n_shards, rows_per_shard):
+    """CacheState with an identity placement == CacheState with none: the
+    permuted mapping must decay bit-for-bit to PR 2's divmod blocks."""
+    rows = n_shards * rows_per_shard
+    g = powerlaw_graph(200, avg_degree=4, seed=0)
+    state = sample_cache(g, CacheConfig(fraction=0.1, shards=n_shards),
+                         np.random.default_rng(0), table_rows=rows,
+                         n_shards=n_shards)
+    slots = np.concatenate([[-1], np.arange(rows)])
+    arith_shard = state.shard_of(slots).copy()
+    arith_local = state.local_row(slots).copy()
+    arith_dev = state.device_rows(slots).copy()
+    state.placement = identity_placement(n_shards, rows)
+    np.testing.assert_array_equal(state.shard_of(slots), arith_shard)
+    np.testing.assert_array_equal(state.local_row(slots), arith_local)
+    np.testing.assert_array_equal(state.device_rows(slots), arith_dev)
+    assert state.placement.is_identity
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 10 ** 6))
+def test_cache_state_permuted_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    g = powerlaw_graph(600, avg_degree=5, seed=1)
+    n_shards = 4
+    state = sample_cache(g, CacheConfig(fraction=0.1, shards=n_shards),
+                         rng)
+    rps = state.rows_per_shard
+    state.placement = _random_placement(rng, 3, n_shards, rps)
+    slots = state.slot_of[state.node_ids]
+    dev = state.device_rows(slots)
+    # shard*rps + local == device row, and the inverse recovers the slot
+    np.testing.assert_array_equal(
+        state.shard_of(slots) * rps + state.local_row(slots), dev)
+    np.testing.assert_array_equal(
+        state.placement.slot_of_device_row[dev], slots)
+
+
+def test_padding_rows_never_handed_to_lookups():
+    """Slots >= |C| (table padding) are placed on the device but must never
+    come out of assemble_input: a lane pointing at a padding row would read
+    all-zero garbage as a 'cached' feature."""
+    g = powerlaw_graph(500, avg_degree=3, seed=2)
+    feats = np.random.default_rng(2).standard_normal(
+        (g.num_nodes, 8)).astype(np.float32)
+    # random_walk mass from a tiny train set leaves most of V at zero
+    # probability -> fewer real rows than the padded table
+    cfg = CacheConfig(fraction=0.2, shards=4, placement="locality",
+                      strategy="random_walk", walk_fanouts=(2,))
+    store = FeatureStore(feats, g, cfg, importance_mode=None,
+                         train_idx=np.array([0, 1, 2], dtype=np.int64))
+    gen = store.refresh(np.random.default_rng(0))
+    n = gen.state.size
+    assert n < store.size, "test needs real padding rows"
+    # force a non-trivial placement on the next generation
+    rng = np.random.default_rng(3)
+    for grp in range(4):
+        ids = rng.choice(g.num_nodes, 64, replace=False).astype(np.int64)
+        store.assemble_input(store.generation, ids, len(ids), group=grp)
+    gen = store.refresh(np.random.default_rng(1), version=1)
+    state = gen.state
+    pad_dev_rows = set(
+        state.device_rows(np.arange(state.size, store.size)).tolist())
+    ids_p = rng.choice(g.num_nodes, 256, replace=False).astype(np.int64)
+    slots, _, hits, _, _ = store.assemble_input(gen, ids_p, len(ids_p))
+    assert hits > 0
+    hit_rows = set(slots[slots >= 0].tolist())
+    assert not (hit_rows & pad_dev_rows), (hit_rows, pad_dev_rows)
+    # every hit row maps back to a REAL slot whose node is the requested id
+    real = slots >= 0
+    back = state.placement.slot_of_device_row[slots[real]] \
+        if state.placement is not None else slots[real]
+    np.testing.assert_array_equal(state.node_ids[back], ids_p[real])
+
+
+def test_store_locality_generation_uploads_permuted_table():
+    """Device table rows must follow the placement permutation: row
+    device_row_of_slot[s] holds node_ids[s]'s features, bitwise."""
+    g = powerlaw_graph(800, avg_degree=6, seed=3)
+    feats = np.random.default_rng(4).integers(
+        -64, 65, (g.num_nodes, 8)).astype(np.float32)
+    store = FeatureStore(feats, g, CacheConfig(fraction=0.05, shards=4,
+                                               placement="locality"))
+    store.refresh(np.random.default_rng(0))
+    rng = np.random.default_rng(5)
+    for grp in range(4):
+        ids = rng.choice(g.num_nodes, 96, replace=False).astype(np.int64)
+        store.assemble_input(store.generation, ids, len(ids), group=grp)
+    gen = store.refresh(np.random.default_rng(1), version=1)
+    state = gen.state
+    assert state.placement is not None and not state.placement.is_identity
+    dev = state.device_rows(np.arange(state.size))
+    np.testing.assert_array_equal(np.asarray(gen.table)[dev],
+                                  feats[state.node_ids])
+    # staging tier stays in LOGICAL order (host reads are placement-blind)
+    np.testing.assert_array_equal(gen.staged[:state.size],
+                                  feats[state.node_ids])
+    rows = store.gather_rows(state.node_ids[:50], gen=gen, record=False)
+    np.testing.assert_array_equal(rows, feats[state.node_ids[:50]])
+
+
+def test_contiguous_config_never_permutes():
+    """placement='contiguous' (the reproducibility switch) must keep the
+    PR 2 layout even when traffic histograms exist."""
+    g = powerlaw_graph(500, avg_degree=5, seed=6)
+    feats = np.random.default_rng(6).standard_normal(
+        (g.num_nodes, 8)).astype(np.float32)
+    store = FeatureStore(feats, g, CacheConfig(fraction=0.05, shards=4))
+    store.refresh(np.random.default_rng(0))
+    rng = np.random.default_rng(7)
+    for grp in range(4):
+        ids = rng.choice(g.num_nodes, 64, replace=False).astype(np.int64)
+        store.assemble_input(store.generation, ids, len(ids), group=grp)
+    gen = store.refresh(np.random.default_rng(1), version=1)
+    assert gen.state.placement is None
+    n = gen.state.size
+    np.testing.assert_array_equal(np.asarray(gen.table)[:n],
+                                  feats[gen.state.node_ids])

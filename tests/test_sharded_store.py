@@ -258,6 +258,76 @@ np.testing.assert_allclose(np.asarray(gw), np.concatenate(rw),
                            rtol=1e-5, atol=1e-5)
 print("FUSED_DP_GRAD_OK")
 
+# ---- 2c) locality placement end-to-end on the mesh + psum-free fast path
+# A store with placement="locality" learns skewed per-group traffic, the
+# next generation co-locates each group's hot rows with its home shard, the
+# per-device table shards hold exactly the permuted blocks, and a fully-
+# local batch takes the kernel's psum-free fast path BITWISE-identically
+# (forward AND the shared custom-VJP backward).
+from repro.featurestore import home_shard
+
+cfgL = CacheConfig(fraction=0.05, placement="locality")
+stL = FeatureStore(feats, g, cfgL, mesh=mesh, shard_axis="model")
+stL.refresh(np.random.default_rng(1), version=0)
+rngL = np.random.default_rng(9)
+genL0 = stL.generation
+# hot sets smaller than rows_per_shard, so a group's surviving hot rows can
+# never overflow its home shard's capacity (which would break full locality)
+hot_n = genL0.state.rows_per_shard - 2
+hot = {grp: np.sort(rngL.choice(genL0.state.node_ids, hot_n, replace=False))
+       for grp in range(4)}
+for _ in range(3):
+    for grp in range(4):
+        stL.assemble_input(stL.generation, hot[grp], len(hot[grp]), group=grp)
+genL = stL.refresh(np.random.default_rng(2), version=1)
+state = genL.state
+assert state.placement is not None and not state.placement.is_identity
+rpsL = state.rows_per_shard
+# per-device shards hold the PERMUTED rows: device row r = node
+# node_ids[slot_of_device_row[r]]
+fullL = np.zeros((stL.size, 16), np.float32)
+fullL[state.device_rows(np.arange(state.size))] = feats[state.node_ids]
+for shard in genL.table.addressable_shards:
+    np.testing.assert_array_equal(np.asarray(shard.data), fullL[shard.index])
+
+# a group-0 batch of its (still-cached) hot rows is fully local -> fast path
+ids0 = hot[0][state.slot_of[hot[0]] >= 0]
+ids0_p = np.concatenate([ids0, np.zeros(8, np.int64)])
+stL.record = False
+slotsL, streamedL, hitsL, _, localL = stL.assemble_input(
+    genL, ids0_p, len(ids0), group=0)
+stL.record = True
+assert hitsL == len(ids0) > 0
+assert localL == home_shard(0, 4) == 0, localL
+idxL = np.random.default_rng(3).integers(0, len(ids0_p), (6, 4)).astype(np.int32)
+wL = np.random.default_rng(4).integers(-3, 4, (6, 4)).astype(np.float32)
+a_fast = cache_lookup_agg(genL.table, jnp.asarray(streamedL),
+                          jnp.asarray(slotsL), jnp.asarray(idxL),
+                          jnp.asarray(wL), mesh=mesh, shard_axis="model",
+                          local_shard=localL)
+a_psum = cache_lookup_agg(genL.table, jnp.asarray(streamedL),
+                          jnp.asarray(slotsL), jnp.asarray(idxL),
+                          jnp.asarray(wL), mesh=mesh, shard_axis="model")
+a_ref = kref.cache_lookup_agg_ref(jnp.asarray(fullL), jnp.asarray(streamedL),
+                                  jnp.asarray(slotsL), jnp.asarray(idxL),
+                                  jnp.asarray(wL))
+np.testing.assert_array_equal(np.asarray(a_fast), np.asarray(a_psum))
+np.testing.assert_array_equal(np.asarray(a_fast), np.asarray(a_ref))
+
+def lossL(tbl, st_, ww, local_shard):
+    o = cache_lookup_agg(tbl, st_, jnp.asarray(slotsL), jnp.asarray(idxL),
+                         ww, mesh=mesh, shard_axis="model",
+                         local_shard=local_shard)
+    return (o ** 2).sum()
+
+g_fast = jax.grad(lossL, argnums=(0, 1, 2))(
+    genL.table, jnp.asarray(streamedL), jnp.asarray(wL), localL)
+g_psum = jax.grad(lossL, argnums=(0, 1, 2))(
+    genL.table, jnp.asarray(streamedL), jnp.asarray(wL), None)
+for gf, gp in zip(g_fast, g_psum):
+    np.testing.assert_array_equal(np.asarray(gf), np.asarray(gp))
+print("LOCALITY_FAST_PATH_OK")
+
 # ---- 3) swap-race stress: async refresher swaps MID-EPOCH ---------------
 labels = np.zeros(g.num_nodes, np.int32)
 train = np.arange(1200, dtype=np.int64)
@@ -294,7 +364,7 @@ for ep in range(12):       # loop until a swap demonstrably lands mid-epoch
         # and a SYNCHRONOUS re-resolve against the same generation must
         # reproduce the async-sampled batch exactly
         store.record = False
-        slots2, streamed2, _, _ = store.assemble_input(
+        slots2, streamed2, _, _, _ = store.assemble_input(
             gen, mb.input_node_ids, nin)
         store.record = True
         np.testing.assert_array_equal(slots2, mb.device.input_cache_slots)
@@ -315,7 +385,7 @@ print("SWAP_STRESS_OK")
 def test_sharded_store_on_mesh_subprocess():
     out = _run_sub(MESH_CODE)
     for marker in ("UPLOAD_OK", "FUSED_SHARDED_OK", "FUSED_DP_GRAD_OK",
-                   "SWAP_STRESS_OK"):
+                   "LOCALITY_FAST_PATH_OK", "SWAP_STRESS_OK"):
         assert marker in out, out[-2000:]
 
 
@@ -341,7 +411,19 @@ assert rec["cache_shard_axis"] == "model"
 assert rec["cache_rows"] % 4 == 0
 assert rec["upload_bytes_per_gen_replicated"] == \
     4 * rec["upload_bytes_per_gen_sharded"]
-print("DRYRUN_FUSED_OK", rec["mesh"], rec["roofline"]["dominant"])
+# locality placement sim rides the record: the solver must beat contiguous
+assert rec["lookup_local_frac_locality"] > rec["lookup_local_frac_contiguous"]
+assert rec["crossshard_bytes_per_batch_locality"] < \
+    rec["crossshard_bytes_per_batch_contiguous"]
+# and the psum-free fast-path variant must LOWER on the same mesh with
+# fewer cross-device bytes in the input layer's collectives
+rec_fast = dryrun_gnn.run(mesh=mesh, num_nodes=5000, feat_dim=32,
+                          num_classes=8, cache_frac=0.05, batch=16,
+                          fanouts=(3, 4), hidden_dim=16, input_impl="fused",
+                          local_fast_path=True)
+assert rec_fast["status"] == "ok" and rec_fast["local_fast_path"], rec_fast
+print("DRYRUN_FUSED_OK", rec["mesh"], rec["roofline"]["dominant"],
+      "local-hit", rec["lookup_local_frac_locality"])
 """
 
 
