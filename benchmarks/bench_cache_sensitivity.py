@@ -45,18 +45,22 @@ def run(fast: bool = True) -> list:
 
 
 def run_policies(fast: bool = True, nodes: int = 6000, avg_degree: int = 10,
-                 cache_fraction: float = 0.05, epochs: int = 3,
+                 cache_fraction: float = None, epochs: int = 3,
                  seed: int = 0) -> list:
     """Sampling-only policy sweep on a power-law graph.
 
     Measures what the policy alone controls — device-cache hit-rate and
     streamed bytes — by driving the GNS sampler through the FeatureStore
     for a few epochs per policy (the adaptive policy needs the miss
-    feedback loop, hence >1 epoch).
+    feedback loop, hence >1 epoch).  The sampler/cache config derives from
+    the shared ``bench_ci`` preset (``benchmarks.common.engine_config``) —
+    only the knobs this sweep is ABOUT (policy, and the smaller batch/
+    fanouts the synthetic graph needs) are overridden, so the measured
+    cache fraction is the one every trained benchmark uses.
     """
-    from repro.core.cache import CacheConfig
+    from benchmarks.common import engine_config
     from repro.core.pipeline import EpochLoader
-    from repro.core.sampler import GNSSampler, SamplerConfig
+    from repro.core.sampler import GNSSampler
     from repro.graph.generate import powerlaw_graph
 
     if not fast:
@@ -69,11 +73,12 @@ def run_policies(fast: bool = True, nodes: int = 6000, avg_degree: int = 10,
                                replace=False).astype(np.int64))
 
     rows = []
-    batch_size = 128
+    batch_size = 128        # the 6k-node synthetic graph wants small batches
     for policy in POLICY_SWEEP:
-        cfg = SamplerConfig(fanouts=(5, 10), batch_size=batch_size,
-                            cache=CacheConfig(fraction=cache_fraction,
-                                              period=1, strategy=policy))
+        ecfg = engine_config("gns", batch_size=batch_size, fanouts=(5, 10),
+                             cache_fraction=cache_fraction,
+                             cache_strategy=policy, seed=seed)
+        cfg = ecfg.sampler_config()
         s = GNSSampler(g, cfg, feats, labels, train_idx=train)
         loader = EpochLoader(s, train, seed=seed)
         cached = inputs = streamed = 0
@@ -109,8 +114,7 @@ def run_sharded_upload(fast: bool = True, nodes: int = 6000,
     import jax
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-    from repro.core.cache import CacheConfig
-    from repro.featurestore import FeatureStore
+    from repro.featurestore import CacheConfig, FeatureStore
     from repro.graph.generate import powerlaw_graph
 
     if not fast:

@@ -1,7 +1,7 @@
 """Paper Fig. 3: F1 vs epoch for all four samplers (convergence parity)."""
 from __future__ import annotations
 
-from repro.core.cache import CacheConfig
+from repro.featurestore import CacheConfig
 from repro.core.sampler import SamplerConfig
 from repro.graph.datasets import get_dataset
 from repro.train.trainer import GNNTrainer

@@ -4,6 +4,10 @@ Synthetic datasets replicate the paper's dataset *shapes* (graph/datasets.py)
 at container scale; the quantity compared is the RELATIVE speed and accuracy
 of the four samplers, which is scale-transportable (the paper's 2-4x GNS/NS
 gap comes from per-batch input-node counts, reproduced in bench_input_nodes).
+
+Configuration comes from the shared ``bench_ci`` engine preset via
+``common.run_trainer`` — no sampler/cache defaults are re-declared here, so
+this table and bench_cache_sensitivity measure the same trained config.
 """
 from __future__ import annotations
 

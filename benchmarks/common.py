@@ -1,16 +1,25 @@
-"""Shared benchmark plumbing: dataset prep, trainer runs, CSV/JSON output."""
+"""Shared benchmark plumbing: dataset prep, engine runs, CSV/JSON output.
+
+Every bench_* module builds its engines from ONE preset
+(``EngineConfig.preset("bench_ci")``, re-exported here as :data:`CI_PRESET`)
+via :func:`engine_for` — so the configuration a benchmark measures is by
+construction the configuration training uses, and batch-size / cache-frac
+defaults cannot drift between modules (the PR-4 bugfix: bench_throughput
+and bench_cache_sensitivity used to re-declare subtly different
+``SamplerConfig`` defaults).
+"""
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 from pathlib import Path
 
 import numpy as np
 
-from repro.core.cache import CacheConfig
-from repro.core.sampler import SamplerConfig
+from repro.featurestore import CacheConfig
+from repro.gns import EngineConfig, GNSEngine
 from repro.graph.datasets import get_dataset
-from repro.train.trainer import GNNTrainer
 
 RESULTS = Path(__file__).resolve().parent / "results"
 
@@ -20,25 +29,47 @@ RESULTS = Path(__file__).resolve().parent / "results"
 # At the 0.15x container scale we match the CACHE COVERAGE of the paper's 1%
 # rather than the raw fraction (5% of a 9k-node graph covers the same edge
 # share as 1% of the 2.4M-node original); `--full` uses the true 1%.
-CI_CACHE_FRACTION = 0.05
+CI_PRESET = EngineConfig.preset("bench_ci")
+CI_CACHE_FRACTION = CI_PRESET.cache.fraction
+
+
+def engine_config(sampler: str, *, batch_size=None, cache_fraction=None,
+                  cache_period=None, cache_strategy=None, cache_async=None,
+                  layer_size=None, fanouts=None, seed: int = 0
+                  ) -> EngineConfig:
+    """The bench_ci preset with explicit field overrides (None = preset)."""
+    cfg = CI_PRESET
+    cache = dataclasses.replace(
+        cfg.cache,
+        **{k: v for k, v in dict(
+            fraction=cache_fraction, period=cache_period,
+            strategy=cache_strategy, async_refresh=cache_async).items()
+           if v is not None})
+    sampling = dataclasses.replace(
+        cfg.sampling,
+        **{k: v for k, v in dict(batch_size=batch_size, layer_size=layer_size,
+                                 fanouts=fanouts).items() if v is not None})
+    return dataclasses.replace(cfg, sampler=sampler, sampling=sampling,
+                               cache=cache, seed=seed)
 
 
 def run_trainer(dataset: str, sampler: str, *, epochs: int = 2,
-                scale: float = 0.25, batch_size: int = 512,
-                cache_fraction: float = CI_CACHE_FRACTION, cache_period: int = 1,
-                cache_strategy: str = "auto", cache_async: bool = False,
-                layer_size: int = 512, fanouts=(5, 10, 15), seed: int = 0,
+                scale: float = 0.25, batch_size: int = None,
+                cache_fraction: float = None, cache_period: int = None,
+                cache_strategy: str = None, cache_async: bool = None,
+                layer_size: int = None, fanouts=None, seed: int = 0,
                 eval_batches: int = 8, max_batches=None):
     ds = get_dataset(dataset, scale=scale, seed=seed)
-    scfg = SamplerConfig(
-        batch_size=batch_size, fanouts=fanouts,
-        cache=CacheConfig(fraction=cache_fraction, period=cache_period,
-                          strategy=cache_strategy, async_refresh=cache_async),
-        layer_size=layer_size)
-    tr = GNNTrainer(ds, sampler, sampler_cfg=scfg, seed=seed)
+    cfg = engine_config(sampler, batch_size=batch_size,
+                        cache_fraction=cache_fraction,
+                        cache_period=cache_period,
+                        cache_strategy=cache_strategy,
+                        cache_async=cache_async, layer_size=layer_size,
+                        fanouts=fanouts, seed=seed)
+    eng = GNSEngine(cfg, dataset=ds)
     t0 = time.perf_counter()
-    rep = tr.train(epochs, max_batches=max_batches, eval_every=epochs,
-                   eval_batches=eval_batches)
+    rep = eng.fit(epochs, max_batches=max_batches, eval_every=epochs,
+                  eval_batches=eval_batches)
     wall = time.perf_counter() - t0
     return {
         "dataset": dataset, "sampler": sampler, "epochs": epochs,
@@ -50,7 +81,7 @@ def run_trainer(dataset: str, sampler: str, *, epochs: int = 2,
         "input_nodes_per_batch": rep.input_nodes_per_batch,
         "cached_nodes_per_batch": rep.cached_nodes_per_batch,
         "isolated_per_batch": rep.isolated_per_batch,
-        "breakdown": tr.meter.breakdown(),
+        "breakdown": eng.meter.breakdown(),
     }
 
 

@@ -4,16 +4,19 @@ Reproduces the paper's core claim at laptop scale in ~a minute: GNS reaches
 the same F1 as NS while moving far fewer feature bytes host->device and
 far fewer distinct input nodes per minibatch (paper Tables 3 & 4).
 
+Everything runs through the unified engine API (``repro.gns``): one
+declarative ``EngineConfig`` preset, one ``GNSEngine`` per sampler.
+
 Run:  PYTHONPATH=src python examples/quickstart.py [--epochs 3]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
-from repro.core.cache import CacheConfig
-from repro.core.sampler import SamplerConfig
+from repro.gns import EngineConfig, GNSEngine
+from repro.gns.config import DataConfig
 from repro.graph.datasets import get_dataset
-from repro.train.trainer import GNNTrainer
 
 
 def main():
@@ -27,25 +30,30 @@ def main():
     ap.add_argument("--max-batches", type=int, default=30)
     args = ap.parse_args()
 
+    base = EngineConfig.preset(
+        "quickstart",
+        data=DataConfig(name=args.dataset, scale=args.scale))
+    base = dataclasses.replace(
+        base, sampling=dataclasses.replace(base.sampling,
+                                           batch_size=args.batch_size))
     ds = get_dataset(args.dataset, scale=args.scale)
     print(f"dataset: {ds.name}  |V|={ds.graph.num_nodes:,} "
           f"|E|={ds.graph.num_edges:,} feat={ds.feat_dim}")
 
     results = {}
     for name in ("ns", "gns"):
-        scfg = SamplerConfig(batch_size=args.batch_size, fanouts=(5, 10, 15),
-                             cache=CacheConfig(fraction=0.05, period=1))
-        tr = GNNTrainer(ds, name, sampler_cfg=scfg)
-        rep = tr.train(args.epochs, max_batches=args.max_batches,
-                       eval_every=args.epochs)
-        results[name] = (rep, tr.meter)
+        engine = GNSEngine(dataclasses.replace(base, sampler=name),
+                           dataset=ds)
+        rep = engine.fit(args.epochs, max_batches=args.max_batches,
+                         eval_every=args.epochs)
+        results[name] = (rep, engine.meter)
         print(f"\n== {name.upper()} ==")
         print(f"  epoch time:        {rep.epoch_times[-1]:.2f}s")
         print(f"  final loss:        {rep.losses[-1]:.4f}")
         print(f"  val micro-F1:      {rep.val_acc[-1]:.4f}")
         print(f"  input nodes/batch: {rep.input_nodes_per_batch:,.0f}"
               f"  (cached: {rep.cached_nodes_per_batch:,.0f})")
-        print(f"  bytes streamed:    {tr.meter.bytes_streamed/1e6:,.1f} MB")
+        print(f"  bytes streamed:    {engine.meter.bytes_streamed/1e6:,.1f} MB")
 
     ns_bytes = results["ns"][1].bytes_streamed
     gns_bytes = results["gns"][1].bytes_streamed

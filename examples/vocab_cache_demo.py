@@ -15,7 +15,7 @@ import argparse
 
 import numpy as np
 
-from repro.core.device_cache import TrafficMeter
+from repro.featurestore import TrafficMeter
 from repro.data.tokens import SyntheticCorpus
 from repro.data.vocab_cache import VocabCache, VocabCacheConfig
 

@@ -2,29 +2,33 @@
 
 Pieces map 1:1 onto the paper's sections:
 
-* :mod:`repro.core.cache`       — §3.2 cache sampling probabilities (eq. 6, 8–9)
 * :mod:`repro.core.sampler`     — §3.3 cache-prioritized neighbor sampling + the
   three baselines the paper compares against (NS, LADIES, LazyGCN)
 * :mod:`repro.core.importance`  — §3.4 importance coefficients (eq. 11–12)
 * :mod:`repro.core.minibatch`   — static-shape padded minibatch blocks (TPU
   adaptation of DGL's ragged blocks; see DESIGN.md §2)
-* :mod:`repro.core.device_cache`— shim over :mod:`repro.featurestore` (the
-  multi-tier feature store: device table → pinned staging → host features,
-  pluggable cache policies, async double-buffered refresh)
 * :mod:`repro.core.pipeline`    — threaded prefetch (the paper's multiprocessing
   sampler, adapted to a 1-core container / per-host thread at pod scale)
 * :mod:`repro.core.variance`    — §3.5 empirical gradient-MSE / variance probes
+
+The §3.2 cache machinery (``CacheConfig`` / ``sample_cache`` / the policy
+probability constructions) and the traffic meter live in
+:mod:`repro.featurestore`; this package re-exports the common names for
+convenience.  The old ``repro.core.cache`` / ``repro.core.device_cache``
+module paths are deprecated one-release re-export shims (they warn on
+import).
 """
-from repro.core.cache import CacheConfig, degree_cache_probs, random_walk_cache_probs, sample_cache
+from repro.featurestore import (CacheConfig, TrafficMeter,
+                                degree_cache_probs, random_walk_cache_probs,
+                                sample_cache)
 from repro.core.sampler import (
     GNSSampler, NeighborSampler, LadiesSampler, LazyGCNSampler, SamplerConfig)
 from repro.core.importance import cache_hit_prob, importance_coefficients
 from repro.core.minibatch import MiniBatch, LayerBlock
-from repro.core.device_cache import DeviceCache, TrafficMeter
 
 __all__ = [
     "CacheConfig", "degree_cache_probs", "random_walk_cache_probs", "sample_cache",
     "GNSSampler", "NeighborSampler", "LadiesSampler", "LazyGCNSampler", "SamplerConfig",
     "cache_hit_prob", "importance_coefficients",
-    "MiniBatch", "LayerBlock", "DeviceCache", "TrafficMeter",
+    "MiniBatch", "LayerBlock", "TrafficMeter",
 ]

@@ -1,24 +1,35 @@
-"""§3.2 — Sample Cache (compatibility shim).
+"""DEPRECATED import path — the §3.2 cache machinery lives in
+:mod:`repro.featurestore`.
 
-The cache machinery was absorbed into :mod:`repro.featurestore`:
+This module is a one-release deprecation re-export (PR 4): importing it
+warns, and every name forwards to its real home —
 
 * probability constructions (eq. 6, eqs. 7–9, reverse PageRank, adaptive)
-  live in :mod:`repro.featurestore.policies` behind the ``CachePolicy``
-  registry;
-* ``CacheConfig`` / ``CacheState`` / ``sample_cache`` / ``cache_probs`` live
-  in :mod:`repro.featurestore.store` next to the :class:`FeatureStore`
-  facade that owns cache generations at runtime.
+  -> :mod:`repro.featurestore.policies`;
+* ``CacheConfig`` / ``CacheState`` / ``sample_cache`` / ``cache_probs`` /
+  ``resolve_strategy`` -> :mod:`repro.featurestore.store`.
 
-This module re-exports the original names so existing imports keep working.
+Migrate with ``from repro.featurestore import CacheConfig`` (see README
+"Engine API" for the full migration table).  The module will be removed in
+the release after next.
 """
 from __future__ import annotations
 
-from repro.featurestore.policies import (degree_cache_probs,
+import warnings
+
+warnings.warn(
+    "repro.core.cache is deprecated: import CacheConfig/CacheState/"
+    "sample_cache/cache_probs from repro.featurestore instead "
+    "(this re-export shim will be removed next release)",
+    DeprecationWarning, stacklevel=2)
+
+from repro.featurestore.policies import (degree_cache_probs,            # noqa: E402
                                          random_walk_cache_probs,
                                          reverse_pagerank_cache_probs,
                                          uniform_cache_probs)
-from repro.featurestore.store import (CacheConfig, CacheState, cache_probs,
-                                      resolve_strategy, sample_cache)
+from repro.featurestore.store import (CacheConfig, CacheState,          # noqa: E402
+                                      cache_probs, resolve_strategy,
+                                      sample_cache)
 
 __all__ = [
     "CacheConfig", "CacheState", "cache_probs", "resolve_strategy",

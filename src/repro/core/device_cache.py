@@ -1,57 +1,24 @@
-"""Device feature cache (compatibility shim).
+"""DEPRECATED import path — device-tier machinery lives in
+:mod:`repro.featurestore`.
 
-:class:`TrafficMeter` moved to :mod:`repro.featurestore.meter` (now with
-per-tier hit/miss/byte accounting); the device-table lifecycle moved into
-:class:`repro.featurestore.store.FeatureStore`, which pairs every uploaded
-table with the :class:`CacheState` generation it was built from.
-
-:class:`DeviceCache` is kept for callers that only need the bare
-"upload these rows" behavior of the seed implementation.
+One-release deprecation re-export (PR 4): :class:`TrafficMeter` /
+:class:`TierStats` forward to :mod:`repro.featurestore.meter`; the seed-era
+``DeviceCache`` single-table uploader is gone — its behavior is a strict
+subset of :class:`repro.featurestore.store.FeatureStore` (tiering, policy
+plug-in, shard-aware upload, async double-buffered refresh).  Migrate with
+``from repro.featurestore import TrafficMeter``; this shim will be removed
+in the release after next.
 """
 from __future__ import annotations
 
-import time
-from typing import Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+warnings.warn(
+    "repro.core.device_cache is deprecated: import TrafficMeter/TierStats "
+    "from repro.featurestore instead (DeviceCache was absorbed by "
+    "FeatureStore; this re-export shim will be removed next release)",
+    DeprecationWarning, stacklevel=2)
 
-from repro.featurestore.meter import TierStats, TrafficMeter
-from repro.featurestore.store import CacheState
+from repro.featurestore.meter import TierStats, TrafficMeter    # noqa: E402
 
-__all__ = ["DeviceCache", "TrafficMeter", "TierStats"]
-
-
-class DeviceCache:
-    """Features of the cached nodes, pinned on device (§3.2).
-
-    Superseded by :class:`repro.featurestore.store.FeatureStore` (which adds
-    tiering, policy plug-in, and async double-buffered refresh); retained as
-    the minimal single-table uploader.
-    """
-
-    def __init__(self, feat_dim: int, size: int,
-                 sharding: Optional[jax.sharding.Sharding] = None,
-                 dtype=jnp.float32):
-        self.feat_dim = feat_dim
-        self.size = size
-        self.sharding = sharding
-        self.dtype = dtype
-        self.table: Optional[jax.Array] = None
-        self.version: int = -1
-
-    def refresh(self, cache: CacheState, host_features: np.ndarray,
-                meter: Optional[TrafficMeter] = None) -> jax.Array:
-        t0 = time.perf_counter()
-        rows = host_features[cache.node_ids].astype(np.float32)
-        rows = np.pad(rows, ((0, self.size - len(rows)), (0, 0)))
-        tbl = jnp.asarray(rows, dtype=self.dtype)
-        if self.sharding is not None:
-            tbl = jax.device_put(tbl, self.sharding)
-        self.table = tbl
-        self.version = cache.version
-        if meter is not None:
-            meter.bytes_cache_fill += rows.nbytes
-            meter.t_copy += time.perf_counter() - t0
-        return tbl
+__all__ = ["TrafficMeter", "TierStats"]

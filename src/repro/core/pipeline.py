@@ -45,11 +45,18 @@ class EpochLoader:
     """
 
     def __init__(self, sampler, train_idx: np.ndarray, seed: int = 0,
-                 max_batches: Optional[int] = None):
+                 max_batches: Optional[int] = None, dp_groups: int = 1):
+        """``dp_groups`` > 1 is the engine's DP regime: batch ``i`` belongs
+        to DP group ``i % dp_groups`` (the store's per-group histograms and
+        home-shard metering follow), the epoch is truncated to whole group
+        rounds, and generation swaps are only polled at round boundaries so
+        the ``dp_groups`` batches collated into one train step always share
+        one cache generation."""
         self.sampler = sampler
         self.train_idx = np.asarray(train_idx, dtype=np.int64)
         self.seed = seed
         self.max_batches = max_batches
+        self.dp_groups = max(int(dp_groups), 1)
 
     def _poll_store(self):
         """Swap point: publish a completed shadow generation, then have the
@@ -78,8 +85,19 @@ class EpochLoader:
         n_batches = len(self.train_idx) // b
         if self.max_batches is not None:
             n_batches = min(n_batches, self.max_batches)
+        rounded = n_batches - n_batches % self.dp_groups   # whole rounds only
+        if n_batches and not rounded:
+            raise ValueError(
+                f"epoch yields {n_batches} minibatch(es) but dp_groups="
+                f"{self.dp_groups} needs at least one full round per step — "
+                f"lower batch_size or raise max_batches")
+        n_batches = rounded
+        store = getattr(self.sampler, "store", None)
         for i in range(n_batches):
-            self._poll_store()
+            if i % self.dp_groups == 0:
+                self._poll_store()
+            if store is not None and self.dp_groups > 1:
+                store.dp_group = i % self.dp_groups
             targets = self.train_idx[perm[i * b:(i + 1) * b]]
             yield self.sampler.sample(targets, rng)
 

@@ -32,7 +32,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.cache import CacheConfig, CacheState
+from repro.featurestore import CacheConfig, CacheState
 from repro.core.importance import importance_coefficients
 from repro.core.minibatch import (DeviceBatch, LayerBlock, MiniBatch,
                                   block_pad_sizes, make_block, pad_to)

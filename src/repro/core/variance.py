@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.cache import CacheConfig
+from repro.featurestore import CacheConfig
 from repro.core.sampler import GNSSampler, NeighborSampler, SamplerConfig
 from repro.graph.csr import CSRGraph
 

@@ -17,7 +17,7 @@ output softmax.  ``sampled_softmax_loss`` draws negatives from the cache
 distribution and reweights logits by -log(E[count]) exactly like sampled-
 softmax literature, with the GNS eq. (11) inclusion form.
 
-Traffic accounting reuses :class:`repro.core.device_cache.TrafficMeter` so
+Traffic accounting reuses :class:`repro.featurestore.TrafficMeter` so
 benchmarks report the same host->device byte savings as the GNN path.
 """
 from __future__ import annotations
@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.device_cache import TrafficMeter
+from repro.featurestore import TrafficMeter
 
 
 @dataclasses.dataclass(frozen=True)

@@ -103,17 +103,24 @@ def identity_placement(n_shards: int, table_rows: int) -> PlacementMap:
 
 def _assign(total: np.ndarray, pref_shard: np.ndarray, n_shards: int,
             rows_per_shard: int,
-            seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+            seed: int = 0,
+            alt_prefs: Optional[np.ndarray] = None
+            ) -> tuple[np.ndarray, np.ndarray]:
     """Greedy hot-row-first capacity assignment.
 
     Returns ``(shard_of, order)``: the shard index per slot, and the
     traffic-descending visit order it was assigned in (seeded shuffle breaks
     ties) — the caller derives local rows from the SAME order, so the
     tie-break lives in exactly one place.  Each row takes its preferred
-    shard while that shard has capacity, otherwise it spills to the shards
-    with free capacity *at its turn in the order* — hot rows therefore
-    always win their preference over cold ones.  Fully vectorized (the
-    dry-run solves paper-scale |C| ~ 1.1M rows).
+    shard while that shard has capacity; rows spilled out of their first
+    choice then try their ranked ``alt_prefs`` columns in traffic order
+    (``-1`` entries are skipped) — the second-choice spill: a row that
+    cannot live with its hottest group's home shard lands with its
+    SECOND-hottest group's, capacity permitting, instead of whatever shard
+    happens to have free capacity first.  Rows exhausting every ranked
+    choice fall back to the remaining capacity in shard order, as before.
+    Fully vectorized per pass (the dry-run solves paper-scale |C| ~ 1.1M
+    rows; passes are bounded by ``alt_prefs`` columns).
     """
     rows = len(total)
     assert rows == n_shards * rows_per_shard, (rows, n_shards, rows_per_shard)
@@ -127,14 +134,29 @@ def _assign(total: np.ndarray, pref_shard: np.ndarray, n_shards: int,
     rank_in_pref = _cumcount(pref, n_shards)
     got_pref = rank_in_pref < rows_per_shard
     shard_ordered = np.where(got_pref, pref, -1)
+    free = rows_per_shard - np.bincount(pref[got_pref], minlength=n_shards)
 
-    # spill pass: leftover rows (still in traffic order) fill the remaining
-    # capacity shard-by-shard in shard order — deterministic, and the spilled
-    # rows are by construction the coldest contenders for their shard
-    taken = np.bincount(pref[got_pref], minlength=n_shards)
-    free = rows_per_shard - taken
+    # ranked-alternative passes: unassigned rows (still hot-first) contend
+    # for their c-th choice against whatever capacity the earlier passes
+    # left.  A choice equal to an already-full shard simply fails again.
+    if alt_prefs is not None and len(alt_prefs):
+        alts = np.asarray(alt_prefs, dtype=np.int64)[order]
+        for c in range(alts.shape[1]):
+            un = np.where((shard_ordered < 0) & (alts[:, c] >= 0))[0]
+            if not len(un) or not free.any():
+                break
+            cand = alts[un, c]
+            rank = _cumcount(cand, n_shards)
+            ok = rank < free[cand]
+            shard_ordered[un[ok]] = cand[ok]
+            free -= np.bincount(cand[ok], minlength=n_shards)
+
+    # final spill: leftover rows fill the remaining capacity shard-by-shard
+    # in shard order — deterministic, and by construction the coldest
+    # contenders for every shard they wanted
+    un = shard_ordered < 0
     spill_slots = np.repeat(np.arange(n_shards), free)
-    shard_ordered[~got_pref] = spill_slots
+    shard_ordered[un] = spill_slots
     shard_of = np.empty(rows, dtype=np.int64)
     shard_of[order] = shard_ordered
     return shard_of, order
@@ -164,9 +186,14 @@ def solve_placement(group_traffic: np.ndarray,
       seed: tie-break determinism (equal-traffic rows).
 
     Every slot's preferred shard is the home shard of the group that
-    requests it most (ties -> lowest group id); the greedy assignment is
-    capacity-bounded so each shard ends with exactly ``rows_per_shard``
-    rows.  All-zero histograms decay to :func:`identity_placement`.
+    requests it most (ties -> lowest group id); a slot spilled out of its
+    first choice tries the home shards of its remaining groups in traffic
+    order (second-hottest first, zero-traffic groups never count as a
+    choice) before falling back to first-free-in-shard-order — so overflow
+    rows still land where SOME of their demand lives.  The greedy
+    assignment is capacity-bounded so each shard ends with exactly
+    ``rows_per_shard`` rows.  All-zero histograms decay to
+    :func:`identity_placement`.
     """
     traffic = np.asarray(group_traffic, dtype=np.float64)
     assert traffic.ndim == 2, traffic.shape
@@ -181,9 +208,19 @@ def solve_placement(group_traffic: np.ndarray,
     homes = np.array([home_shard(g, n_shards) for g in group_ids],
                      dtype=np.int64)
     pref = homes[np.argmax(traffic, axis=0)]
+    alt_prefs = None
+    if n_groups > 1:
+        # ranked alternatives: each row's remaining groups hottest-first
+        # (stable sort -> ties break toward the lowest group id, matching
+        # argmax above); a group with zero traffic for the row is no choice
+        grp_order = np.argsort(-traffic, axis=0, kind="stable")   # [G, rows]
+        ranked_homes = homes[grp_order]
+        ranked_traffic = np.take_along_axis(traffic, grp_order, axis=0)
+        alt_prefs = np.where(ranked_traffic[1:] > 0,
+                             ranked_homes[1:], -1).T               # [rows, G-1]
 
     shard_of, order = _assign(total, pref, n_shards, rows_per_shard,
-                              seed=seed)
+                              seed=seed, alt_prefs=alt_prefs)
     # local rows: order of assignment within each shard (hot rows first),
     # derived from the SAME visit order the shards were assigned in
     local = np.empty(rows, dtype=np.int64)

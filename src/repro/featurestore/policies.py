@@ -37,7 +37,7 @@ import numpy as np
 
 
 # ---------------------------------------------------------------------------
-# probability constructions (pure functions, shared with repro.core.cache)
+# probability constructions (pure functions, formerly repro.core.cache)
 # ---------------------------------------------------------------------------
 
 def degree_cache_probs(g) -> np.ndarray:

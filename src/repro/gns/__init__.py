@@ -1,0 +1,33 @@
+"""Unified GNS engine: one declarative config, one compiled step.
+
+Public surface:
+
+* :class:`EngineConfig` (+ ``DataConfig`` / ``MeshConfig`` / ``ModelConfig``
+  sub-configs and the ``preset`` registry) — the single declarative
+  description of a run; round-trips through ``to_dict``/``from_dict``.
+* :class:`GNSEngine` — owns the wiring FeatureStore → sampler →
+  EpochLoader/Prefetcher → compiled step and exposes ``fit`` / ``evaluate``
+  / ``infer`` / ``describe``.
+* :class:`TrainReport` — fit() result (timings, losses, traffic meter).
+* ``collate_groups`` / ``make_train_step`` — the DP>1 collation and the one
+  train step every surface compiles (the dry-run lowers the same function).
+
+Quickstart::
+
+    from repro.gns import EngineConfig, GNSEngine
+
+    engine = GNSEngine(EngineConfig.preset("quickstart"))
+    report = engine.fit(epochs=2)
+    f1 = engine.evaluate()
+    logits = engine.infer(node_ids)      # serves from the live cache
+    print(engine.describe())
+"""
+from repro.gns.config import (DataConfig, EngineConfig, MeshConfig,
+                              ModelConfig, PRESETS)
+from repro.gns.engine import (GNSEngine, TrainReport, collate_groups,
+                              make_train_step)
+
+__all__ = [
+    "EngineConfig", "DataConfig", "MeshConfig", "ModelConfig", "PRESETS",
+    "GNSEngine", "TrainReport", "collate_groups", "make_train_step",
+]

@@ -1,0 +1,193 @@
+"""Declarative engine configuration: one config, every surface.
+
+``EngineConfig`` is the single description of a GNS training/inference run —
+dataset, sampler, cache/placement, mesh, model and optimizer sub-configs —
+that :class:`repro.gns.engine.GNSEngine` turns into the wired pipeline
+(FeatureStore → sampler → EpochLoader/Prefetcher → compiled step).  It
+replaces the hand-assembled ``GNNTrainer.__init__`` kwarg pile that every
+example and benchmark used to rebuild independently.
+
+Design rules:
+
+* **Pure data.**  Every field is a frozen dataclass of plain values; the
+  whole config round-trips through ``to_dict``/``from_dict`` (JSON-safe), so
+  a run can be logged, diffed and replayed.
+* **Existing configs are reused, not wrapped.**  ``SamplerConfig``
+  (repro.core.sampler), ``CacheConfig`` (repro.featurestore — placement
+  included) and ``AdamConfig`` (repro.optim.adam) appear verbatim as
+  sub-configs; only the dataset/mesh/model descriptions needed new
+  declarative types.  ``EngineConfig.cache`` is the authoritative cache
+  config — it is injected into ``sampling.cache`` at build time
+  (:meth:`EngineConfig.sampler_config`), so the two can never drift.
+* **Presets are the sharing mechanism.**  Benchmarks and examples start from
+  a named preset (:meth:`EngineConfig.preset`) and override explicitly;
+  the benchmarked and the trained configuration come from one literal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.sampler import SamplerConfig
+from repro.featurestore import CacheConfig
+from repro.optim.adam import AdamConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    """Named synthetic dataset (repro.graph.datasets) + scale."""
+    name: str = "ogbn-products"
+    scale: float = 0.5
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Declarative host mesh: (data, model) axis sizes over local devices.
+
+    ``GNSEngine`` builds the jax mesh via ``launch.mesh.make_host_mesh``;
+    passing a concrete ``jax.sharding.Mesh`` to the engine overrides this.
+    """
+    data: int = 1
+    model: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Declarative GraphSAGE dims; feat_dim / num_classes / num_layers are
+    resolved from the dataset and sampler at build time (pass a concrete
+    ``SageConfig`` to the engine to override everything)."""
+    hidden_dim: int = 256
+    aggregate_impl: str = "reference"   # "reference" | "pallas"
+    input_impl: str = "where"           # "where" | "fused"
+    input_kernel: str = "pallas"        # fused backend: "pallas" | "reference"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """One declarative description of a GNS run (see module docstring)."""
+    sampler: str = "gns"                # ns | gns | ladies | lazygcn
+    data: DataConfig = dataclasses.field(default_factory=DataConfig)
+    sampling: SamplerConfig = dataclasses.field(
+        default_factory=lambda: SamplerConfig(batch_size=256))
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    model: ModelConfig = dataclasses.field(default_factory=ModelConfig)
+    optim: AdamConfig = dataclasses.field(
+        default_factory=lambda: AdamConfig(lr=3e-3))
+    mesh: Optional[MeshConfig] = None
+    seed: int = 0
+    prefetch: bool = False              # fit() default (overridable per call)
+
+    # ------------------------------------------------------------------
+    def sampler_config(self) -> SamplerConfig:
+        """The sampler config with THE cache config injected — the one
+        object handed to ``make_sampler``/``FeatureStore`` so
+        ``EngineConfig.cache`` and ``sampling.cache`` cannot diverge."""
+        return dataclasses.replace(self.sampling, cache=self.cache)
+
+    # ------------------------------------------------------------------
+    # dict round-trip (JSON-safe)
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        md = d["optim"]["moment_dtype"]
+        if not isinstance(md, str):
+            d["optim"]["moment_dtype"] = np.dtype(md).name
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EngineConfig":
+        return _build(cls, d)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "EngineConfig":
+        """A named baseline config, optionally overridden field-by-field.
+
+        Overrides are top-level ``EngineConfig`` fields (sub-configs are
+        replaced whole — use ``dataclasses.replace`` on the result for
+        field-level tweaks).
+        """
+        base = PRESETS[name]
+        return dataclasses.replace(base, **overrides) if overrides else base
+
+
+# ---------------------------------------------------------------------------
+# nested reconstruction
+# ---------------------------------------------------------------------------
+
+_TUPLE_FIELDS = {"fanouts", "walk_fanouts"}
+_DTYPES = {"float32": np.float32, "bfloat16": None}   # resolved lazily
+
+
+def _moment_dtype(name: str):
+    if name == "bfloat16":
+        import jax.numpy as jnp
+        return jnp.bfloat16
+    import jax.numpy as jnp
+    return {"float32": jnp.float32, "float16": jnp.float16}.get(name, jnp.float32)
+
+
+def _build(cls_, d):
+    """Rebuild a (possibly nested) frozen dataclass from its asdict form."""
+    if d is None:
+        return None
+    kw = {}
+    for f in dataclasses.fields(cls_):
+        if f.name not in d:
+            continue
+        v = d[f.name]
+        sub = _NESTED.get((cls_, f.name))
+        if sub is not None:
+            kw[f.name] = _build(sub, v)
+        elif f.name in _TUPLE_FIELDS and v is not None:
+            kw[f.name] = tuple(v)
+        elif cls_ is AdamConfig and f.name == "moment_dtype" \
+                and isinstance(v, str):
+            kw[f.name] = _moment_dtype(v)
+        else:
+            kw[f.name] = v
+    return cls_(**kw)
+
+
+_NESTED = {
+    (EngineConfig, "data"): DataConfig,
+    (EngineConfig, "sampling"): SamplerConfig,
+    (EngineConfig, "cache"): CacheConfig,
+    (EngineConfig, "model"): ModelConfig,
+    (EngineConfig, "optim"): AdamConfig,
+    (EngineConfig, "mesh"): MeshConfig,
+    (SamplerConfig, "cache"): CacheConfig,
+}
+
+
+# ---------------------------------------------------------------------------
+# presets — the single home for configurations shared across surfaces
+# ---------------------------------------------------------------------------
+
+PRESETS: dict = {
+    # examples/quickstart.py: laptop-scale GNS-vs-NS comparison
+    "quickstart": EngineConfig(
+        sampler="gns",
+        data=DataConfig(name="ogbn-products", scale=1.0),
+        sampling=SamplerConfig(batch_size=128, fanouts=(5, 10, 15)),
+        cache=CacheConfig(fraction=0.05, period=1)),
+    # examples/train_gns_graphsage.py: the paper's §4.1 training setup
+    "paper_train": EngineConfig(
+        sampler="gns",
+        data=DataConfig(name="ogbn-products", scale=0.5),
+        sampling=SamplerConfig(batch_size=1000, fanouts=(5, 10, 15)),
+        cache=CacheConfig(fraction=0.01, period=1)),
+    # benchmarks/common.run_trainer: CI-scale harness defaults.  The cache
+    # fraction matches the paper's 1% COVERAGE at container scale (see the
+    # note in benchmarks/common.py); every bench_* module starts here, so a
+    # benchmarked configuration is by construction a trainable one.
+    "bench_ci": EngineConfig(
+        sampler="gns",
+        data=DataConfig(name="ogbn-products", scale=0.25),
+        sampling=SamplerConfig(batch_size=512, fanouts=(5, 10, 15),
+                               layer_size=512),
+        cache=CacheConfig(fraction=0.05, period=1)),
+}

@@ -1,0 +1,307 @@
+"""Lowering / traffic reports for an engine config (``GNSEngine.describe``).
+
+This is the machinery behind ``launch.dryrun_gnn``: lower + compile the
+engine's train step (``gns.engine.make_train_step`` — the SAME function the
+in-process engine jits, home-shard vector included) on a production or
+mocked mesh at the requested dimensions, and report roofline terms,
+per-chip cache bytes, shard-aware upload bytes per generation, and the
+locality-placement cross-shard traffic simulation.
+
+``fast_path`` selects what the input layer lowers:
+
+* ``"dynamic"`` (default) — the engine's device-resident home-shard vector:
+  one compiled step serving any mix of per-group home shards (owner-shard
+  ``lax.cond`` + psum of exact-zero non-owner partials);
+* ``"static"``  — the PR-3 static ``local_shard=0`` lowering (owner kernel +
+  recursive-doubling ppermute broadcast), kept for HLO comparison;
+* ``"off"``     — the plain per-shard + psum path, no locality gate.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import ShapeSpec
+from repro.core.minibatch import block_pad_sizes
+from repro.optim.adam import AdamConfig
+
+
+def batch_structs(mesh, batch, fanouts, feat_dim, cache_axis=None):
+    """ShapeDtypeStruct DeviceBatch + shardings (batch dims on the DP axes).
+
+    Group-aware: ``batch`` is the GLOBAL target count; block pads are built
+    from the per-DP-group batch (``batch // num_groups``) and concatenated
+    group-first, exactly the layout ``gns.engine.collate_groups`` produces —
+    so the lowered step is the one the engine runs.  The global shapes match
+    the ungrouped pads (the pad chain is multiplicative in the batch).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.minibatch import DeviceBatch, LayerBlock
+    from repro.kernels.ops import dp_group_count
+    from repro.launch import sharding as shlib
+
+    groups = dp_group_count(mesh, cache_axis)
+    assert batch % groups == 0, (batch, groups)
+    pads = block_pad_sizes(batch // groups, fanouts)
+    dp = shlib.batch_axes(mesh)     # () on a 1-D cache-only mesh -> replicate
+    dp = tuple(a for a in dp if a != cache_axis)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def sd(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    def sh(*parts):
+        return NamedSharding(mesh, P(*parts))
+
+    blocks, blocks_sh = [], []
+    for li, (d, s) in enumerate(pads):
+        k = fanouts[li]
+        blocks.append(LayerBlock(
+            nbr_idx=sd((groups * d, k), jnp.int32),
+            nbr_w=sd((groups * d, k), jnp.float32),
+            dst_mask=sd((groups * d,), jnp.float32), num_src=s, num_dst=d))
+        blocks_sh.append(LayerBlock(
+            nbr_idx=sh(dp, None), nbr_w=sh(dp, None), dst_mask=sh(dp),
+            num_src=s, num_dst=d))
+    s0 = groups * pads[0][1]
+    batch_struct = DeviceBatch(
+        blocks=tuple(blocks),
+        input_cache_slots=sd((s0,), jnp.int32),
+        input_streamed=sd((s0, feat_dim), jnp.float32),
+        input_mask=sd((s0,), jnp.float32),
+        labels=sd((batch,), jnp.int32),
+        label_mask=sd((batch,), jnp.float32))
+    batch_sh = DeviceBatch(
+        blocks=tuple(blocks_sh),
+        input_cache_slots=sh(dp),
+        input_streamed=sh(dp, None),
+        input_mask=sh(dp),
+        labels=sh(dp),
+        label_mask=sh(dp))
+    home_struct = sd((groups,), jnp.int32)
+    home_sh = sh(dp)
+    return batch_struct, batch_sh, home_struct, home_sh
+
+
+def placement_traffic_sim(cache_rows: int, n_shards: int, n_groups: int,
+                          dominant_share: float = 0.8,
+                          seed: int = 0) -> dict:
+    """Cross-shard lookup traffic, contiguous vs locality, at paper |C|.
+
+    Runs the REAL placement solver (``featurestore.placement``) on a
+    synthetic Zipf demand histogram at full production cache size (1.11M
+    rows on papers100M): each cached row's traffic is Zipf-distributed and
+    ``dominant_share`` of it comes from one uniformly-drawn DP group — the
+    skew Data Tiering (arXiv:2111.05894) reports for real access traces.
+    Reports the fraction of hit traffic served by the requesting group's
+    home shard under both placements.
+    """
+    from repro.featurestore.placement import _assign, home_shard
+
+    rng = np.random.default_rng(seed)
+    rows_per_shard = cache_rows // n_shards
+    total = rng.zipf(1.5, cache_rows).astype(np.float64)
+    dom = rng.integers(0, n_groups, cache_rows)
+    # per-(group, row) traffic without materializing [G, R] for the metric:
+    # dominant group carries dominant_share, the rest spread evenly
+    rest = total * (1.0 - dominant_share) / max(n_groups - 1, 1)
+    pref = np.array([home_shard(g, n_shards) for g in range(n_groups)])[dom]
+
+    # contiguous: shard of a slot is slot // rows_per_shard (membership is
+    # traffic-agnostic, so hot rows land uniformly across shards)
+    def local_traffic(shard_of_slot):
+        local = np.zeros(cache_rows)
+        for g in range(n_groups):
+            mine = dom == g
+            share = np.where(mine, dominant_share * total, rest)
+            local += share * (shard_of_slot == home_shard(g, n_shards))
+        return float(local.sum())
+
+    grand = float(total.sum())
+    contiguous = np.arange(cache_rows) // rows_per_shard
+    # locality: the real greedy solver on (total, preferred shard) — the
+    # exact code path FeatureStore._solve_placement runs, via the same
+    # internal assignment
+    locality, _ = _assign(total, pref, n_shards, rows_per_shard, seed=seed)
+    frac_cont = local_traffic(contiguous) / grand
+    frac_loc = local_traffic(locality) / grand
+    return {
+        "lookup_local_frac_contiguous": round(frac_cont, 4),
+        "lookup_local_frac_locality": round(frac_loc, 4),
+        "crossshard_rows_frac_contiguous": round(1 - frac_cont, 4),
+        "crossshard_rows_frac_locality": round(1 - frac_loc, 4),
+    }
+
+
+def traffic_report(*, num_nodes: int, feat_dim: int, cache_frac: float,
+                   batch: int, fanouts, n_shards: int = 1,
+                   meter=None) -> dict:
+    """Host-side subset of the record: no mesh, no lowering."""
+    from repro.featurestore import FeatureStore
+
+    cache_rows = FeatureStore.padded_rows(num_nodes, cache_frac,
+                                          multiple=max(n_shards, 1))
+    table_bytes = cache_rows * feat_dim * 4
+    s0 = block_pad_sizes(batch, fanouts)[0][1]
+    rec = {
+        "arch": "gnn-graphsage-gns", "status": "ok", "mesh": None,
+        "cache_rows": cache_rows, "cache_table_bytes": table_bytes,
+        "input_rows_per_batch": s0,
+        "streamed_bytes_per_batch_worstcase": s0 * feat_dim * 4,
+    }
+    if meter is not None:
+        rec["meter"] = meter.breakdown()
+    return rec
+
+
+def describe_lowering(*, mesh, num_nodes: int, feat_dim: int,
+                      num_classes: int, cache_frac: float, batch: int,
+                      fanouts, hidden_dim: int = 256,
+                      input_impl: str = "fused",
+                      input_kernel: str = "reference",
+                      fast_path: str = "dynamic",
+                      optim: AdamConfig = None) -> dict:
+    """Lower + compile the engine train step on ``mesh``; return the record.
+
+    ``batch`` is global (one minibatch per DP group, collated); the step
+    lowered is ``gns.engine.make_train_step`` — byte-for-byte the function
+    ``GNSEngine`` jits in process.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.featurestore import FeatureStore
+    from repro.gns.engine import make_train_step
+    from repro.kernels.ops import dp_group_count
+    from repro.launch import sharding as shlib
+    from repro.launch.mesh import cache_shard_axis
+    from repro.models import graphsage
+    from repro.optim.adam import AdamW
+    from repro.roofline.analysis import collective_bytes_from_hlo, \
+        roofline_terms
+
+    assert fast_path in ("dynamic", "static", "off"), fast_path
+    chips = mesh.size
+    cache_axis = cache_shard_axis(mesh)
+    groups = dp_group_count(mesh, cache_axis)
+    mcfg = graphsage.SageConfig(feat_dim=feat_dim, hidden_dim=hidden_dim,
+                                num_classes=num_classes,
+                                num_layers=len(fanouts),
+                                input_impl=input_impl,
+                                input_kernel=input_kernel,
+                                cache_shard_axis=cache_axis,
+                                num_groups=groups)
+    opt = AdamW(optim or AdamConfig(lr=3e-3))
+    # device-tier shape via the feature-store facade (pads rows so the
+    # cache-axis shards divide evenly — the pod-scale cache tier)
+    n_shards = mesh.shape[cache_axis]
+    cache_rows = FeatureStore.padded_rows(num_nodes, cache_frac,
+                                          multiple=n_shards)
+
+    p_structs = jax.eval_shape(
+        lambda: graphsage.init_params(jax.random.PRNGKey(0), mcfg))
+    p_sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), p_structs)     # tiny -> replicated
+    o_structs = jax.eval_shape(opt.init, p_structs)
+    o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
+    cache_struct = jax.ShapeDtypeStruct((cache_rows, feat_dim), jnp.float32)
+    cache_sh = NamedSharding(mesh, P(cache_axis, None))    # row-sharded cache
+    b_structs, b_sh, home_struct, home_sh = batch_structs(
+        mesh, batch, fanouts, feat_dim, cache_axis)
+
+    base_step = make_train_step(mcfg, opt)
+    if fast_path == "dynamic":
+        def train_step(params, opt_state, batch_, cache_table, home):
+            p, o, loss, _ = base_step(params, opt_state, batch_, cache_table,
+                                      home)
+            return p, o, loss
+        args = (p_structs, o_structs, b_structs, cache_struct, home_struct)
+        in_sh = (p_sh, o_sh, b_sh, cache_sh, home_sh)
+    else:
+        ls = 0 if fast_path == "static" else None
+
+        def train_step(params, opt_state, batch_, cache_table):
+            p, o, loss, _ = base_step(params, opt_state, batch_, cache_table,
+                                      ls)
+            return p, o, loss
+        args = (p_structs, o_structs, b_structs, cache_struct)
+        in_sh = (p_sh, o_sh, b_sh, cache_sh)
+
+    t0 = time.time()
+    with shlib.use_mesh(mesh):
+        lowered = jax.jit(
+            train_step,
+            in_shardings=in_sh,
+            out_shardings=(p_sh, o_sh, NamedSharding(mesh, P()))).lower(*args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {"argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                 "temp_bytes": getattr(mem, "temp_size_in_bytes", None)}
+    except Exception as e:
+        mem_d = {"error": str(e)}
+
+    # roofline: no scan in the 3-layer GNN -> cost_analysis is exact
+    n_params = sum(np.prod(l.shape)
+                   for l in jax.tree_util.tree_leaves(p_structs))
+    flops = float(cost.get("flops", 0.0))
+    byt = float(cost.get("bytes accessed", 0.0))
+    shape = ShapeSpec("train_1k", 1, batch, "train")   # D = batch target nodes
+    terms = roofline_terms(flops, byt, coll, _gnn_cfg_stub(), shape, chips,
+                           n_active=float(n_params))
+    table_bytes = cache_rows * feat_dim * 4
+    # cross-shard lookup traffic before/after the locality placement map:
+    # the real solver on a skewed synthetic demand at this config's |C|
+    n_dp_groups = max(chips // n_shards, 1)
+    placement_sim = placement_traffic_sim(cache_rows, n_shards,
+                                          min(n_dp_groups, 64))
+    s0_rows = groups * block_pad_sizes(batch // groups, fanouts)[0][1]
+    row_bytes = feat_dim * 4
+    rec = {
+        "arch": "gnn-graphsage-gns", "shape": "train_1k",
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "chips": chips,
+        "status": "ok", "kind": "train",
+        "input_impl": mcfg.input_impl, "cache_shard_axis": cache_axis,
+        "dp_groups": groups,
+        "fast_path": fast_path,
+        "local_fast_path": fast_path != "off",
+        "params_total": float(n_params),
+        "cache_rows": cache_rows,
+        "cache_bytes_per_chip": table_bytes / n_shards,
+        # per-generation refresh transfer: shard-aware upload vs replicating
+        # the full table to every chip (the paper-scale saving PR 2 landed)
+        "upload_bytes_per_gen_sharded": table_bytes * chips // n_shards,
+        "upload_bytes_per_gen_replicated": table_bytes * chips,
+        # locality placement: fraction of cache-hit rows the requesting DP
+        # group's home shard serves, and the implied cross-shard row bytes
+        # per batch, contiguous vs locality (PR 3's saving)
+        **placement_sim,
+        "crossshard_bytes_per_batch_contiguous": int(
+            s0_rows * row_bytes *
+            placement_sim["crossshard_rows_frac_contiguous"]),
+        "crossshard_bytes_per_batch_locality": int(
+            s0_rows * row_bytes *
+            placement_sim["crossshard_rows_frac_locality"]),
+        "memory_analysis": mem_d,
+        "cost_flops_per_device": flops, "cost_bytes_per_device": byt,
+        "roofline": terms.as_dict(), "compile_s": round(t_compile, 2),
+    }
+    return rec
+
+
+def _gnn_cfg_stub():
+    """Minimal cfg for roofline_terms' model_flops (n_active overrides)."""
+    from repro.configs.base import ArchConfig
+    return ArchConfig(name="gnn", family="gnn", num_layers=3, d_model=256,
+                      num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=1)

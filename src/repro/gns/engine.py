@@ -1,0 +1,437 @@
+"""GNSEngine — the unified engine behind every GNS surface.
+
+One object owns the wiring the trainer, the examples, the benchmarks and the
+pod-scale dry-run each used to hand-assemble:
+
+    FeatureStore  →  sampler  →  EpochLoader / Prefetcher  →  compiled step
+
+built from one declarative :class:`~repro.gns.config.EngineConfig`, and
+exposing the four verbs every surface needs:
+
+* :meth:`fit`      — the paper's §2.2 training loop (sample → slice → copy →
+  compute) with the Fig. 1/2 timing/traffic breakdown on the meter;
+* :meth:`evaluate` — micro-F1 over held-out targets (meter suspended);
+* :meth:`infer`    — mini-batch inference reusing the LIVE cache generation:
+  the first serving-shaped entry point — logits for arbitrary node ids at
+  cache-hit feature cost, no refresh, no training side effects;
+* :meth:`describe` — the lowering/traffic report ``launch.dryrun_gnn``
+  prints, for THIS config.
+
+**DP > 1 in one compiled step** (the PR-3 follow-up this engine closes): on
+a mesh with data-parallel axes the engine samples one minibatch per DP group
+per step, collates them into a single group-ordered batch
+(:func:`collate_groups`), and passes a device-resident int32 **home-shard
+vector** — one entry per group, ``-1`` when that group's batch has no
+locality contract — to the train step.  The fused input op branches on the
+owner shard at RUNTIME (``lax.cond`` on the traced vector,
+``kernels.ops._fused_forward``), so a single jit cache entry serves batches
+with any mix of home shards; the old path retraced on every distinct
+``MiniBatch.local_shard`` because it was a static jit argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.minibatch import DeviceBatch, LayerBlock, MiniBatch
+from repro.core.pipeline import EpochLoader, Prefetcher
+from repro.core.sampler import GNSSampler, make_sampler
+from repro.featurestore import FeatureStore, TrafficMeter
+from repro.gns.config import EngineConfig
+from repro.kernels.ops import dp_group_count
+from repro.launch import sharding as shlib
+from repro.models import graphsage
+from repro.optim.adam import AdamW
+
+
+@dataclasses.dataclass
+class TrainReport:
+    epoch_times: list
+    losses: list
+    val_acc: list
+    meter: TrafficMeter
+    input_nodes_per_batch: float = 0.0
+    cached_nodes_per_batch: float = 0.0
+    isolated_per_batch: float = 0.0
+
+
+def make_train_step(mcfg: graphsage.SageConfig, opt: AdamW):
+    """The one train step every surface compiles.
+
+    ``home_shards`` is the device-resident per-group home-shard vector (or
+    None to lower the plain psum input path); it is a TRACED operand, so the
+    jitted step never retraces when a batch's home shard changes.
+    """
+    def train_step(params, opt_state, batch, cache_table, home_shards):
+        (loss, acc), grads = jax.value_and_grad(
+            graphsage.loss_fn, has_aux=True)(params, batch, cache_table,
+                                             mcfg, home_shards)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss, acc
+    return train_step
+
+
+def collate_groups(mbs: Sequence[MiniBatch], fused: bool
+                   ) -> tuple[MiniBatch, np.ndarray]:
+    """Collate one MiniBatch per DP group into a single step batch.
+
+    Group-order concatenation of every device array; block pads stay
+    PER-GROUP (``SageConfig.num_groups`` tells the model to gather each
+    group's leading rows instead of slicing a global prefix).  Gather
+    indices are group-local per assembly, so upper-layer blocks — consumed
+    by GLOBAL gathers in the model — are offset by ``g·num_src``; the input
+    block stays group-local when the fused op consumes it (its shard_map
+    body sees exactly one group's slice) and is offset otherwise.
+
+    Returns the collated batch plus the int32 home-shard vector (one entry
+    per group, -1 where the group's batch had no locality contract).  All
+    batches must carry the SAME cache generation — the loader only polls
+    generation swaps at step boundaries, so a swap can never tear a step.
+    """
+    if len(mbs) == 1:
+        mb = mbs[0]
+        ls = mb.local_shard if mb.local_shard is not None else -1
+        return mb, np.array([ls], np.int32)
+    gens = {mb.cache_gen.version if mb.cache_gen is not None else -1
+            for mb in mbs}
+    assert len(gens) == 1, f"step spans cache generations {gens}"
+    blocks = []
+    for li in range(len(mbs[0].device.blocks)):
+        bs = [mb.device.blocks[li] for mb in mbs]
+        s, d = bs[0].num_src, bs[0].num_dst
+        offset = li > 0 or not fused
+        blocks.append(LayerBlock(
+            nbr_idx=np.concatenate(
+                [b.nbr_idx + (g * s if offset else 0)
+                 for g, b in enumerate(bs)]).astype(np.int32),
+            nbr_w=np.concatenate([b.nbr_w for b in bs]),
+            dst_mask=np.concatenate([b.dst_mask for b in bs]),
+            num_src=s, num_dst=d))
+    dev = DeviceBatch(
+        blocks=tuple(blocks),
+        input_cache_slots=np.concatenate(
+            [mb.device.input_cache_slots for mb in mbs]),
+        input_streamed=np.concatenate(
+            [mb.device.input_streamed for mb in mbs]),
+        input_mask=np.concatenate([mb.device.input_mask for mb in mbs]),
+        labels=np.concatenate([mb.device.labels for mb in mbs]),
+        label_mask=np.concatenate([mb.device.label_mask for mb in mbs]))
+    home = np.array([mb.local_shard if mb.local_shard is not None else -1
+                     for mb in mbs], np.int32)
+    out = MiniBatch(
+        device=dev,
+        input_node_ids=np.concatenate([mb.input_node_ids for mb in mbs]),
+        num_input=sum(mb.num_input for mb in mbs),
+        num_cached=sum(mb.num_cached for mb in mbs),
+        bytes_streamed=sum(mb.bytes_streamed for mb in mbs),
+        num_isolated=sum(mb.num_isolated for mb in mbs),
+        cache_gen=mbs[0].cache_gen)
+    return out, home
+
+
+class GNSEngine:
+    """The wired pipeline for one :class:`EngineConfig` (module docstring)."""
+
+    def __init__(self, cfg: EngineConfig, *, dataset=None, mesh=None,
+                 model_cfg: Optional[graphsage.SageConfig] = None,
+                 cache_shard_axis: Optional[str] = None):
+        """``dataset`` / ``mesh`` / ``model_cfg`` override the declarative
+        sub-configs with concrete objects (the GNNTrainer shim's path)."""
+        self.cfg = cfg
+        if dataset is None:
+            from repro.graph.datasets import get_dataset
+            dataset = get_dataset(cfg.data.name, scale=cfg.data.scale,
+                                  seed=cfg.data.seed)
+        self.ds = dataset
+        if mesh is None and cfg.mesh is not None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(cfg.mesh.data, cfg.mesh.model)
+        self.mesh = mesh
+        self.seed = cfg.seed
+        self.scfg = cfg.sampler_config()
+        mcfg = model_cfg
+        if mcfg is None:
+            m = cfg.model
+            mcfg = graphsage.SageConfig(
+                feat_dim=self.ds.feat_dim, hidden_dim=m.hidden_dim,
+                num_classes=self.ds.num_classes,
+                num_layers=len(self.scfg.fanouts),
+                aggregate_impl=m.aggregate_impl, input_impl=m.input_impl,
+                input_kernel=m.input_kernel)
+        self.meter = TrafficMeter()
+        if cfg.sampler == "gns":
+            # the facade owns all three feature tiers + the refresh lifecycle
+            self.store = FeatureStore(
+                self.ds.features, self.ds.graph, self.scfg.cache,
+                train_idx=self.ds.train_idx, mesh=mesh,
+                shard_axis=cache_shard_axis, meter=self.meter,
+                importance_mode=self.scfg.importance_mode,
+                build_adjacency=True, seed=cfg.seed)
+        else:
+            self.store = None
+        if (self.store is not None and mesh is not None
+                and mcfg.input_impl == "fused"
+                and mcfg.cache_shard_axis is None):
+            # fused steps must psum over the SAME axis the upload shards on
+            mcfg = dataclasses.replace(mcfg,
+                                       cache_shard_axis=self.store.shard_axis)
+        # DP groups: one minibatch per group per step, collated (module doc)
+        self.num_groups = dp_group_count(mesh, mcfg.cache_shard_axis)
+        if self.num_groups > 1:
+            from repro.core.minibatch import block_pad_sizes
+            s0 = block_pad_sizes(self.scfg.batch_size, self.scfg.fanouts)[0][1]
+            assert self.scfg.batch_size % self.num_groups == 0 \
+                and s0 % self.num_groups == 0, (
+                    f"batch_size={self.scfg.batch_size} (input pad {s0}) "
+                    f"must divide the {self.num_groups} DP groups so eval "
+                    f"batches can shard over the DP axes")
+        self.mcfg = dataclasses.replace(mcfg, num_groups=self.num_groups)
+        self.mcfg_eval = dataclasses.replace(self.mcfg, num_groups=1)
+        self.sampler = make_sampler(cfg.sampler, self.ds.graph, self.scfg,
+                                    self.ds.features, self.ds.labels,
+                                    train_idx=self.ds.train_idx,
+                                    store=self.store)
+        self.params = graphsage.init_params(jax.random.PRNGKey(cfg.seed),
+                                            self.mcfg)
+        self.opt = AdamW(cfg.optim)
+        self.opt_state = self.opt.init(self.params)
+        self._dummy_cache = graphsage.dummy_cache_table(self.ds.feat_dim)
+
+        # collation must keep layer-0 indices group-local ONLY when the
+        # fused op will actually shard_map them (mesh + cache axis); a fused
+        # model without a cache axis runs the op on the GLOBAL arrays, so
+        # layer 0 needs the same per-group offsets as the upper layers
+        self._collate_fused = (
+            self.mcfg.input_impl == "fused" and mesh is not None
+            and self.mcfg.cache_shard_axis in getattr(mesh, "axis_names", ()))
+        self._train_step = jax.jit(make_train_step(self.mcfg, self.opt))
+        mcfg_eval = self.mcfg_eval
+
+        @jax.jit
+        def eval_step(params, batch, cache_table):
+            return graphsage.loss_fn(params, batch, cache_table, mcfg_eval)
+
+        @jax.jit
+        def logits_step(params, batch, cache_table):
+            return graphsage.forward(params, batch, cache_table, mcfg_eval)
+
+        self._eval_step = eval_step
+        self._logits_step = logits_step
+
+    # ------------------------------------------------------------------
+    def _cache_table(self, mb: Optional[MiniBatch] = None):
+        """The device table the batch's slots index into.
+
+        Each MiniBatch carries the :class:`Generation` it was assembled
+        against, so even when an async refresh swaps the live generation
+        between sampling and stepping, the step reads the table matching the
+        batch's slot map — a swap can never tear a batch.
+        """
+        gen = getattr(mb, "cache_gen", None) if mb is not None else None
+        if gen is not None:
+            return gen.table
+        return self._dummy_cache
+
+    def run_batch(self, mb: MiniBatch,
+                  home_shards: Optional[np.ndarray] = None
+                  ) -> tuple[float, float]:
+        """One optimizer step on a (possibly group-collated) minibatch."""
+        if self.num_groups > 1:
+            expect = self.num_groups * self.scfg.batch_size
+            got = int(mb.device.labels.shape[0])
+            assert got == expect, (
+                f"DP={self.num_groups} steps consume GROUP-COLLATED batches "
+                f"({expect} labels, got {got}): use fit(), or collate "
+                f"{self.num_groups} per-group minibatches via collate_groups")
+        if home_shards is None:
+            ls = mb.local_shard if mb.local_shard is not None else -1
+            home_shards = np.full(max(self.num_groups, 1), -1, np.int32)
+            home_shards[0] = ls
+        m = self.meter
+        t0 = time.perf_counter()
+        dev_batch = jax.device_put(mb.device)
+        m.t_copy += time.perf_counter() - t0
+        m.add_batch(mb.bytes_streamed)
+        t0 = time.perf_counter()
+        with shlib.use_mesh(self.mesh):     # no-op scope when mesh is None
+            self.params, self.opt_state, loss, acc = self._train_step(
+                self.params, self.opt_state, dev_batch, self._cache_table(mb),
+                jax.numpy.asarray(home_shards, jax.numpy.int32))
+        loss = float(loss)
+        m.t_compute += time.perf_counter() - t0
+        return loss, float(acc)
+
+    # ------------------------------------------------------------------
+    def fit(self, epochs: int, max_batches: Optional[int] = None,
+            prefetch: Optional[bool] = None,
+            eval_every: Optional[int] = None,
+            eval_batches: int = 8) -> TrainReport:
+        """The §2.2 training loop; ``max_batches`` bounds STEPS per epoch
+        (at DP > 1 each step consumes ``num_groups`` minibatches)."""
+        if prefetch is None:
+            prefetch = self.cfg.prefetch
+        G = max(self.num_groups, 1)
+        loader = EpochLoader(self.sampler, self.ds.train_idx, seed=self.seed,
+                             max_batches=(max_batches * G
+                                          if max_batches is not None else None),
+                             dp_groups=G)
+        report = TrainReport([], [], [], self.meter)
+        n_inputs, n_cached, n_iso, n_b = 0, 0, 0, 0
+        fused = self._collate_fused
+        for ep in range(epochs):
+            t_ep = time.perf_counter()
+            # epoch start (cache refresh happens in sampler.start_epoch)
+            it = loader.epoch(ep)
+            if prefetch:
+                it = Prefetcher(it, depth=2)
+            else:
+                it = self._timed(it)
+            ep_losses = []
+            group_buf: list = []
+            for mb in it:
+                group_buf.append(mb)
+                if len(group_buf) < G:
+                    continue
+                step_mb, home = collate_groups(group_buf, fused)
+                group_buf = []
+                loss, _ = self.run_batch(step_mb, home)
+                ep_losses.append(loss)
+                n_inputs += step_mb.num_input
+                n_cached += step_mb.num_cached
+                n_iso += step_mb.num_isolated
+                n_b += 1
+            report.epoch_times.append(time.perf_counter() - t_ep)
+            report.losses.append(float(np.mean(ep_losses)) if ep_losses
+                                 else float("nan"))
+            if eval_every and (ep + 1) % eval_every == 0:
+                report.val_acc.append(
+                    self.evaluate(self.ds.val_idx, eval_batches))
+        if n_b:
+            # per MINIBATCH, not per step: a DP>1 step consumes G of them,
+            # and the paper's Table 3/4 comparisons are per-minibatch
+            n_mb = n_b * G
+            report.input_nodes_per_batch = n_inputs / n_mb
+            report.cached_nodes_per_batch = n_cached / n_mb
+            report.isolated_per_batch = n_iso / n_mb
+        return report
+
+    def _timed(self, it):
+        """Wrap a batch iterator, attributing wall time to meter.t_sample.
+
+        The store self-reports the host gather inside ``sample`` to
+        meter.t_slice and (sync-mode) cache builds inside ``start_epoch``
+        to meter.t_refresh; subtract both deltas so each second lands in
+        exactly one bucket.  Clamped at zero: an async build finishing
+        during a short window could otherwise over-subtract.
+        """
+        it = iter(it)
+        while True:
+            t0 = time.perf_counter()
+            slice0 = self.meter.t_slice
+            refresh0 = self.meter.t_refresh
+            try:
+                mb = next(it)
+            except StopIteration:
+                return
+            elapsed = time.perf_counter() - t0
+            self.meter.t_sample += max(
+                elapsed - (self.meter.t_slice - slice0)
+                - (self.meter.t_refresh - refresh0), 0.0)
+            yield mb
+
+    # ------------------------------------------------------------------
+    def evaluate(self, idx: Optional[np.ndarray] = None,
+                 num_batches: int = 8) -> float:
+        """Micro-F1 (= accuracy for single-label tasks, as in the paper)."""
+        if idx is None:
+            idx = self.ds.val_idx
+        b = self.scfg.batch_size
+        idx = np.asarray(idx)
+        if len(idx) < b:  # pad by wrapping; mask handles duplicates' weight
+            idx = np.concatenate([idx, idx[: b - len(idx)]])
+        rng = np.random.default_rng(1234)
+        if isinstance(self.sampler, GNSSampler):
+            self.sampler.ensure_cache(rng)
+        if self.store is not None:
+            self.store.record = False   # eval must not skew training metrics
+                                        # or the adaptive policy's miss EMA
+        correct, total = 0.0, 0.0
+        try:
+            for i in range(num_batches):
+                lo = (i * b) % (len(idx) - b + 1)
+                targets = idx[lo:lo + b]
+                mb = self.sampler.sample(targets, rng)
+                with shlib.use_mesh(self.mesh):
+                    _, acc = self._eval_step(self.params,
+                                             jax.device_put(mb.device),
+                                             self._cache_table(mb))
+                correct += float(acc)
+                total += 1.0
+        finally:
+            if self.store is not None:
+                self.store.record = True
+        return correct / max(total, 1.0)
+
+    # ------------------------------------------------------------------
+    def infer(self, node_ids: np.ndarray) -> np.ndarray:
+        """Mini-batch inference over arbitrary node ids.  [N, classes] f32.
+
+        The serving-shaped entry point: reuses the LIVE cache generation
+        (no refresh is triggered beyond the cold-start one), suspends all
+        traffic/policy accounting, and leaves the training state untouched —
+        so a fitted engine can interleave serving lookups with training
+        exactly like the production cache tier would.
+        """
+        ids = np.asarray(node_ids, dtype=np.int64)
+        b = self.scfg.batch_size
+        rng = np.random.default_rng(4321)
+        if isinstance(self.sampler, GNSSampler):
+            self.sampler.ensure_cache(rng)
+        out = np.zeros((len(ids), self.mcfg.num_classes), np.float32)
+        if self.store is not None:
+            self.store.record = False
+        try:
+            for lo in range(0, len(ids), b):
+                chunk = ids[lo:lo + b]
+                targets = np.resize(chunk, b)    # wrap-pad the tail batch
+                mb = self.sampler.sample(targets, rng)
+                with shlib.use_mesh(self.mesh):
+                    logits = self._logits_step(self.params,
+                                               jax.device_put(mb.device),
+                                               self._cache_table(mb))
+                out[lo:lo + len(chunk)] = np.asarray(logits)[:len(chunk)]
+        finally:
+            if self.store is not None:
+                self.store.record = True
+        return out
+
+    # ------------------------------------------------------------------
+    def describe(self) -> dict:
+        """Lowering/traffic report for THIS config (what dryrun_gnn prints).
+
+        With a mesh: the full pod-scale record — compiled-step cost
+        analysis, per-chip cache bytes, shard-aware upload bytes per
+        generation, and the locality-placement cross-shard traffic
+        simulation.  Without one: the host-side subset (no lowering).
+        """
+        from repro.gns.describe import describe_lowering, traffic_report
+        if self.mesh is None:
+            return traffic_report(
+                num_nodes=self.ds.graph.num_nodes, feat_dim=self.ds.feat_dim,
+                cache_frac=self.scfg.cache.fraction,
+                batch=self.scfg.batch_size, fanouts=self.scfg.fanouts,
+                n_shards=(self.store.n_shards if self.store else 1),
+                meter=self.meter)
+        return describe_lowering(
+            mesh=self.mesh, num_nodes=self.ds.graph.num_nodes,
+            feat_dim=self.ds.feat_dim, num_classes=self.ds.num_classes,
+            cache_frac=self.scfg.cache.fraction,
+            batch=self.scfg.batch_size * max(self.num_groups, 1),
+            fanouts=tuple(self.scfg.fanouts),
+            hidden_dim=self.mcfg.hidden_dim,
+            input_impl=self.mcfg.input_impl,
+            optim=self.cfg.optim)

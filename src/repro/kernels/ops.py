@@ -64,8 +64,9 @@ def _dp_spec(mesh, shard_axis):
     return dp, (dp if len(dp) > 1 else (dp[0] if dp else None))
 
 
-def _fused_forward(cache_table, streamed, slots, idx, w,
-                   impl, block_d, mesh, shard_axis, local_shard=None):
+def _fused_forward(cache_table, streamed, slots, idx, w, local_shards,
+                   impl, block_d, mesh, shard_axis, local_shard=None,
+                   dynamic=False):
     """Forward of the fused input op; shard_map over the cache axis if given.
 
     Sharded contract (the production regime): the table is row-partitioned
@@ -84,6 +85,21 @@ def _fused_forward(cache_table, streamed, slots, idx, w,
     shards skip the kernel entirely (``lax.cond``) and the finished rows are
     ppermute-broadcast from the owner instead of all-reduced.  Bitwise equal
     to the psum path whenever the host contract holds.
+
+    ``local_shards`` + ``dynamic=True`` is the DEVICE-RESIDENT variant of the
+    same fast path: a traced int32 vector carrying one home shard per DP
+    group (-1 = no locality contract for that group's batch), sharded over
+    the DP axes so each group's body instance reads its own scalar.  The
+    owner test becomes a runtime branch — ``lax.cond`` skips the kernel on
+    every non-owner shard and the owner runs the ``claim_all`` partial — so
+    ONE compiled step serves batches with any mix of home shards (including
+    none) without retracing, which is what makes the fast path usable at
+    DP > 1 where each group's batch may be homed on a different shard.  The
+    combine stays the single psum: with the non-owner partials skipped to
+    exact zeros it reproduces the owner's rows bitwise (only +0.0 terms are
+    added), while a psum-free broadcast would need the owner in the ppermute
+    permutation — a *static* quantity — and collectives inside a
+    data-dependent ``lax.cond`` deadlock multi-group meshes.
     """
     from repro.kernels.cache_lookup import cache_lookup_agg_shard_partial
 
@@ -98,7 +114,47 @@ def _fused_forward(cache_table, streamed, slots, idx, w,
             f"cache table rows {rows} must divide the cache axis "
             f"{shard_axis}={n} (pad via CacheConfig.shards / padded_rows)")
         rps = rows // n
-        _, bspec = _dp_spec(mesh, shard_axis)
+        dp, bspec = _dp_spec(mesh, shard_axis)
+
+        if dynamic and n > 1:
+            from repro.kernels.cache_lookup import (shard_lane_weights,
+                                                    shard_slot_map)
+
+            def body(tbl, st, sl, ix, ww, lsv):
+                shard = jax.lax.axis_index(shard_axis)
+                ls = lsv[0]                  # this group's home shard or -1
+                fast = ls >= 0
+                lane_slots = jnp.take(sl.astype(jnp.int32), ix, axis=0)
+                # fast: claim-all weights (owner serves hits AND misses);
+                # slow: the usual owner-per-lane masking, psum reassembles
+                w_eff = jnp.where(fast, ww.astype(jnp.float32),
+                                  shard_lane_weights(ww, lane_slots, shard,
+                                                     rps))
+                local_slots = shard_slot_map(sl, shard, rps)
+
+                def _run(t, s_, sl_, ix_, we):
+                    if not use_kernel:
+                        return ref.cache_lookup_agg_ref(t, s_, sl_, ix_, we)
+                    return cache_lookup_agg_pallas(t, s_, sl_, ix_, we,
+                                                   block_d=block_d,
+                                                   interpret=_interpret())
+
+                def _skip(t, s_, sl_, ix_, we):
+                    return jnp.zeros((ix_.shape[0], t.shape[1]), jnp.float32)
+
+                part = jax.lax.cond(fast & (shard != ls), _skip, _run,
+                                    tbl, st, local_slots, ix, w_eff)
+                # single combine for both regimes: on fast batches every
+                # non-owner term is an exact zero, so the psum returns the
+                # owner partial bitwise and only the owner paid the kernel
+                return jax.lax.psum(part, shard_axis)
+
+            fn = shard_map_compat(
+                body, mesh=mesh,
+                in_specs=(P(shard_axis, None), P(bspec, None), P(bspec),
+                          P(bspec, None), P(bspec, None), P(bspec)),
+                out_specs=P(bspec, None))
+            return fn(cache_table, streamed, slots, idx, w, local_shards)
 
         if local_shard is not None and n > 1:
             ls = int(local_shard)
@@ -156,29 +212,31 @@ def _fused_forward(cache_table, streamed, slots, idx, w,
                                    block_d=block_d, interpret=_interpret())
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
-def _fused(cache_table, streamed, slots, idx, w, impl, block_d, mesh,
-           shard_axis, local_shard):
-    return _fused_forward(cache_table, streamed, slots, idx, w,
-                          impl, block_d, mesh, shard_axis, local_shard)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11))
+def _fused(cache_table, streamed, slots, idx, w, local_shards, impl, block_d,
+           mesh, shard_axis, local_shard, dynamic):
+    return _fused_forward(cache_table, streamed, slots, idx, w, local_shards,
+                          impl, block_d, mesh, shard_axis, local_shard,
+                          dynamic)
 
 
-def _fused_fwd(cache_table, streamed, slots, idx, w, impl, block_d, mesh,
-               shard_axis, local_shard):
-    out = _fused_forward(cache_table, streamed, slots, idx, w,
-                         impl, block_d, mesh, shard_axis, local_shard)
-    return out, (cache_table, streamed, slots, idx, w)
+def _fused_fwd(cache_table, streamed, slots, idx, w, local_shards, impl,
+               block_d, mesh, shard_axis, local_shard, dynamic):
+    out = _fused_forward(cache_table, streamed, slots, idx, w, local_shards,
+                         impl, block_d, mesh, shard_axis, local_shard,
+                         dynamic)
+    return out, (cache_table, streamed, slots, idx, w, local_shards)
 
 
-def _fused_bwd(impl, block_d, mesh, shard_axis, local_shard, res, g):
+def _fused_bwd(impl, block_d, mesh, shard_axis, local_shard, dynamic, res, g):
     """Hand-written VJP in plain jnp: Pallas kernels carry no AD rules.
 
-    ``local_shard`` is deliberately ignored: under the fast-path contract
-    (every hit lane owned by that one shard) the generic owner-claims-its-
-    lanes backward already scatters each gradient on exactly the right
-    shard — hits land on ``local_shard`` because it owns them, misses are
-    replicated as always — so forward-fast and forward-psum share one
-    backward and cannot drift apart.
+    ``local_shard`` (and the traced ``local_shards`` vector) is deliberately
+    ignored: under the fast-path contract (every hit lane owned by that one
+    shard) the generic owner-claims-its-lanes backward already scatters each
+    gradient on exactly the right shard — hits land on the home shard
+    because it owns them, misses are replicated as always — so forward-fast
+    and forward-psum share one backward and cannot drift apart.
 
     The sharded path MUST mirror the forward's shard_map rather than run
     global-array math: inside the forward each DP group's ``idx``/``slots``
@@ -189,10 +247,11 @@ def _fused_bwd(impl, block_d, mesh, shard_axis, local_shard, res, g):
     streamed/weight gradients stay group-local, and the per-lane h0 needed
     for dw is psum-ed over the cache axis exactly like the forward output.
     """
-    cache_table, streamed, slots, idx, w = res
+    cache_table, streamed, slots, idx, w, local_shards = res
     f0 = jax.dtypes.float0
     zslots = np.zeros(slots.shape, f0)
     zidx = np.zeros(idx.shape, f0)
+    zls = np.zeros(local_shards.shape, f0)
 
     if mesh is not None and shard_axis in mesh.axis_names:
         from jax.sharding import PartitionSpec as P
@@ -244,7 +303,7 @@ def _fused_bwd(impl, block_d, mesh, shard_axis, local_shard, res, g):
                       P(bspec, None), P(bspec, None), P(bspec, None)),
             out_specs=(P(shard_axis, None), P(bspec, None), P(bspec, None)))
         dcache, dstreamed, dw = fn(cache_table, streamed, slots, idx, w, g)
-        return dcache, dstreamed, zslots, zidx, dw
+        return dcache, dstreamed, zslots, zidx, dw, zls
 
     g = g.astype(jnp.float32)
     lane_slots = jnp.take(slots.astype(jnp.int32), idx, axis=0)     # [B, K]
@@ -259,10 +318,27 @@ def _fused_bwd(impl, block_d, mesh, shard_axis, local_shard, res, g):
         jnp.where(hit, dlane, 0.0).astype(cache_table.dtype))
     dstreamed = jnp.zeros(streamed.shape, streamed.dtype).at[idx].add(
         jnp.where(hit, 0.0, dlane).astype(streamed.dtype))
-    return dcache, dstreamed, zslots, zidx, dw
+    return dcache, dstreamed, zslots, zidx, dw, zls
 
 
 _fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+def dp_group_count(mesh, shard_axis: Optional[str]) -> int:
+    """Number of data-parallel groups the fused op's batch operands span.
+
+    One rule for the op, the engine's collation and the dry-run's batch
+    structs: the groups are the product of the mesh's batch axes minus the
+    cache axis (1 without a mesh) — the length a ``local_shards`` home-shard
+    vector must have.
+    """
+    if mesh is None:
+        return 1
+    dp, _ = _dp_spec(mesh, shard_axis)
+    g = 1
+    for a in dp:
+        g *= mesh.shape[a]
+    return g
 
 
 @functools.partial(jax.jit,
@@ -272,7 +348,8 @@ def cache_lookup_agg(cache_table: jax.Array, streamed: jax.Array,
                      slots: jax.Array, idx: jax.Array, w: jax.Array,
                      impl: str = "pallas", block_d: int = 512,
                      mesh=None, shard_axis: Optional[str] = None,
-                     local_shard: Optional[int] = None) -> jax.Array:
+                     local_shard: Optional[int] = None,
+                     local_shards=None) -> jax.Array:
     """Fused GNS input layer: cache/streamed select + gather-agg.  [B,D] f32.
 
     Differentiable (custom VJP) so the train step's backward flows into the
@@ -282,6 +359,13 @@ def cache_lookup_agg(cache_table: jax.Array, streamed: jax.Array,
     only meaningful with a mesh) switches to the psum-free local fast path —
     the caller must hold the all-hits-local contract established by
     ``FeatureStore.assemble_input`` (which is where the value comes from).
+
+    ``local_shards`` is the TRACED variant of the same gate: an int32 vector
+    with one home shard per DP group (-1 = psum path for that group),
+    sharded over the DP axes inside the op.  Because it is a device operand
+    rather than a static argument, one compiled step serves batches with any
+    mix of home shards without retracing — the DP > 1 regime.  Mutually
+    exclusive with ``local_shard`` (the static argument wins).
     """
     d = cache_table.shape[1]
     bd = min(block_d, d)
@@ -289,9 +373,21 @@ def cache_lookup_agg(cache_table: jax.Array, streamed: jax.Array,
         bd -= 1
     if mesh is None or shard_axis not in getattr(mesh, "axis_names", ()):
         local_shard = None          # nothing to skip without a cache axis
+        local_shards = None
+    if local_shard is not None:
+        local_shards = None         # static gate wins (legacy callers)
+    dynamic = local_shards is not None
+    if dynamic:
+        groups = dp_group_count(mesh, shard_axis)
+        local_shards = jnp.asarray(local_shards, jnp.int32).reshape(-1)
+        assert local_shards.shape == (groups,), (
+            f"local_shards must carry one home shard per DP group "
+            f"({groups}), got shape {local_shards.shape}")
+    else:
+        local_shards = jnp.full((1,), -1, jnp.int32)   # placeholder operand
     return _fused(cache_table, streamed, slots.astype(jnp.int32),
-                  idx.astype(jnp.int32), w, impl, bd, mesh, shard_axis,
-                  local_shard)
+                  idx.astype(jnp.int32), w, local_shards, impl, bd, mesh,
+                  shard_axis, local_shard, dynamic)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -5,25 +5,23 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 """Pod-scale dry-run of the PAPER's workload: GraphSAGE + GNS.
 
 The 40 LM cells prove the framework; this proves the paper's own technique
-at pod scale: the GNS train step — device cache table + padded minibatch
-blocks + importance-weighted aggregation — lowered on the 16x16 (and
-2x16x16) production mesh at ogbn-papers100M dimensions:
+at pod scale: the GNS ENGINE train step (``repro.gns.engine.make_train_step``
+— byte-for-byte the function ``GNSEngine`` jits in process) lowered on the
+16x16 (and 2x16x16) production mesh at ogbn-papers100M dimensions:
 
   * cache table [|C| = 1% of 111M = 1.11M rows, 128 feats] — row-sharded
-    over the cache axis ('model'; the pod-scale cache the paper's single T4
-    cannot hold), refreshed by SHARD-AWARE upload (each device receives only
-    its own rows — table/n_shards per chip instead of the full table);
-  * minibatch: batch 1000, fanouts (15,10,5) => padded input layer of
-    176k nodes/batch, sharded over 'data' (one minibatch per data group is
-    the paper's multi-GPU regime);
-  * input path: the REAL one — ``SageConfig(input_impl="fused")``, the fused
-    cache-lookup + layer-0 gather op shard_mapped over the cache axis
-    (reference backend: interpret-mode Pallas at these grids cannot be
-    lowered economically from a CPU host — same policy as kernels/ops.py);
+    over the cache axis ('model'), refreshed by SHARD-AWARE upload;
+  * minibatch: global batch 1024 = one minibatch per DP group, collated
+    group-first (``gns.engine.collate_groups``'s layout), padded input layer
+    of ~1.08M rows/step sharded over 'data';
+  * input path: ``SageConfig(input_impl="fused")`` with the DEVICE-RESIDENT
+    per-group home-shard vector — one compiled step serving any mix of
+    locality fast paths at DP = 16 without retracing (the engine's regime);
   * train step = forward + backward + AdamW on the 3-layer GraphSAGE.
 
-``run(mesh=...)`` accepts a reduced host mesh + scaled-down dims so CI can
-lower the identical path on 4 mocked devices (tests/test_sharded_store.py).
+All the machinery lives in :mod:`repro.gns.describe` (``GNSEngine.describe``
+reports the same record for an in-process config); this module keeps the
+production dimensions, the CLI, and the CI-reduced ``run(mesh=...)`` entry.
 
 Emits the same roofline record as the LM cells ->
 benchmarks/results/dryrun/gnn-graphsage__train_1k__<mesh>.json
@@ -31,20 +29,10 @@ benchmarks/results/dryrun/gnn-graphsage__train_1k__<mesh>.json
 
 import json
 import sys
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.minibatch import DeviceBatch, LayerBlock, block_pad_sizes
-from repro.featurestore import FeatureStore
-from repro.launch import sharding as shlib
-from repro.launch.mesh import cache_shard_axis, make_production_mesh
-from repro.models import graphsage
-from repro.optim.adam import AdamConfig, AdamW
-from repro.roofline.analysis import collective_bytes_from_hlo, roofline_terms
-from repro.configs.base import ShapeSpec
+from repro.gns.describe import (batch_structs, describe_lowering,   # noqa: F401
+                                placement_traffic_sim)
+from repro.launch.mesh import make_production_mesh
 
 # paper Table 2: ogbn-papers100M; §4.1 setup
 NUM_NODES = 111_059_956
@@ -55,220 +43,27 @@ BATCH = 1024     # paper uses 1000; padded to divide the 16-wide data axis
 FANOUTS = (15, 10, 5)        # input-first (paper: 15,10,5 top-down)
 
 
-def batch_structs(mesh, batch: int = BATCH, fanouts=FANOUTS,
-                  feat_dim: int = FEAT_DIM):
-    """ShapeDtypeStruct DeviceBatch + shardings (batch dims on 'data')."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    pads = block_pad_sizes(batch, fanouts)
-    dp = shlib.batch_axes(mesh)     # () on a 1-D cache-only mesh -> replicate
-    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
-
-    def sd(shape, dtype):
-        return jax.ShapeDtypeStruct(shape, dtype)
-
-    def sh(*parts):
-        return NamedSharding(mesh, P(*parts))
-
-    blocks, blocks_sh = [], []
-    for li, (d, s) in enumerate(pads):
-        k = fanouts[li]
-        blocks.append(LayerBlock(
-            nbr_idx=sd((d, k), jnp.int32), nbr_w=sd((d, k), jnp.float32),
-            dst_mask=sd((d,), jnp.float32), num_src=s, num_dst=d))
-        blocks_sh.append(LayerBlock(
-            nbr_idx=sh(dp, None), nbr_w=sh(dp, None), dst_mask=sh(dp),
-            num_src=s, num_dst=d))
-    s0 = pads[0][1]
-    batch_struct = DeviceBatch(
-        blocks=tuple(blocks),
-        input_cache_slots=sd((s0,), jnp.int32),
-        input_streamed=sd((s0, feat_dim), jnp.float32),
-        input_mask=sd((s0,), jnp.float32),
-        labels=sd((batch,), jnp.int32),
-        label_mask=sd((batch,), jnp.float32))
-    batch_sh = DeviceBatch(
-        blocks=tuple(blocks_sh),
-        input_cache_slots=sh(dp),
-        input_streamed=sh(dp, None),
-        input_mask=sh(dp),
-        labels=sh(dp),
-        label_mask=sh(dp))
-    return batch_struct, batch_sh
-
-
-def placement_traffic_sim(cache_rows: int, n_shards: int, n_groups: int,
-                          dominant_share: float = 0.8,
-                          seed: int = 0) -> dict:
-    """Cross-shard lookup traffic, contiguous vs locality, at paper |C|.
-
-    Runs the REAL placement solver (``featurestore.placement``) on a
-    synthetic Zipf demand histogram at full production cache size (1.11M
-    rows on papers100M): each cached row's traffic is Zipf-distributed and
-    ``dominant_share`` of it comes from one uniformly-drawn DP group — the
-    skew Data Tiering (arXiv:2111.05894) reports for real access traces.
-    Reports the fraction of hit traffic served by the requesting group's
-    home shard under both placements.
-    """
-    from repro.featurestore.placement import home_shard, solve_placement
-
-    rng = np.random.default_rng(seed)
-    rows_per_shard = cache_rows // n_shards
-    total = rng.zipf(1.5, cache_rows).astype(np.float64)
-    dom = rng.integers(0, n_groups, cache_rows)
-    # per-(group, row) traffic without materializing [G, R] for the metric:
-    # dominant group carries dominant_share, the rest spread evenly
-    rest = total * (1.0 - dominant_share) / max(n_groups - 1, 1)
-    pref = np.array([home_shard(g, n_shards) for g in range(n_groups)])[dom]
-
-    # contiguous: shard of a slot is slot // rows_per_shard (membership is
-    # traffic-agnostic, so hot rows land uniformly across shards)
-    def local_traffic(shard_of_slot):
-        local = np.zeros(cache_rows)
-        for g in range(n_groups):
-            mine = dom == g
-            share = np.where(mine, dominant_share * total, rest)
-            local += share * (shard_of_slot == home_shard(g, n_shards))
-        return float(local.sum())
-
-    grand = float(total.sum())
-    contiguous = np.arange(cache_rows) // rows_per_shard
-    # locality: the real greedy solver on (total, preferred shard) — the
-    # exact code path FeatureStore._solve_placement runs, via the same
-    # internal assignment
-    from repro.featurestore.placement import _assign
-    locality, _ = _assign(total, pref, n_shards, rows_per_shard, seed=seed)
-    frac_cont = local_traffic(contiguous) / grand
-    frac_loc = local_traffic(locality) / grand
-    return {
-        "lookup_local_frac_contiguous": round(frac_cont, 4),
-        "lookup_local_frac_locality": round(frac_loc, 4),
-        "crossshard_rows_frac_contiguous": round(1 - frac_cont, 4),
-        "crossshard_rows_frac_locality": round(1 - frac_loc, 4),
-    }
-
-
 def run(multi_pod: bool = False, *, mesh=None, num_nodes: int = NUM_NODES,
         feat_dim: int = FEAT_DIM, num_classes: int = NUM_CLASSES,
         cache_frac: float = CACHE_FRAC, batch: int = BATCH,
         fanouts=FANOUTS, hidden_dim: int = 256,
-        input_impl: str = "fused", local_fast_path: bool = False) -> dict:
-    """Lower + compile the GNS train step; ``mesh=None`` = production mesh.
+        input_impl: str = "fused", fast_path: str = "dynamic") -> dict:
+    """Lower + compile the engine train step; ``mesh=None`` = production mesh.
 
     The reduced-dims path (explicit ``mesh`` + small shapes) is the CI
     lane: the same lowering on a mocked multi-device host mesh.
-    ``local_fast_path=True`` lowers the step with the locality fast path
-    active (``local_shard=0``): the input layer's cache-axis all-reduce is
-    replaced by the recursive-doubling broadcast, which shows up directly
-    in the compiled HLO's collective bytes.
+    ``fast_path``: "dynamic" (default — the engine's home-shard vector),
+    "static" (the PR-3 static-arg lowering, for HLO comparison) or "off"
+    (plain per-shard psum, no locality gate).
     """
     if mesh is None:
         mesh = make_production_mesh(multi_pod=multi_pod)
-    chips = mesh.size
-    cache_axis = cache_shard_axis(mesh)
-    mcfg = graphsage.SageConfig(feat_dim=feat_dim, hidden_dim=hidden_dim,
-                                num_classes=num_classes, num_layers=len(fanouts),
-                                input_impl=input_impl,
-                                input_kernel="reference",
-                                cache_shard_axis=cache_axis)
-    opt = AdamW(AdamConfig(lr=3e-3))
-    # device-tier shape via the feature-store facade (pads rows so the
-    # cache-axis shards divide evenly — the pod-scale cache tier)
-    n_shards = mesh.shape[cache_axis]
-    cache_rows = FeatureStore.padded_rows(num_nodes, cache_frac,
-                                          multiple=n_shards)
-
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    p_structs = jax.eval_shape(
-        lambda: graphsage.init_params(jax.random.PRNGKey(0), mcfg))
-    p_sh = jax.tree_util.tree_map(
-        lambda _: NamedSharding(mesh, P()), p_structs)     # tiny -> replicated
-    o_structs = jax.eval_shape(opt.init, p_structs)
-    o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
-    cache_struct = jax.ShapeDtypeStruct((cache_rows, feat_dim), jnp.float32)
-    cache_sh = NamedSharding(mesh, P(cache_axis, None))    # row-sharded cache
-    b_structs, b_sh = batch_structs(mesh, batch, fanouts, feat_dim)
-
-    local_shard = 0 if local_fast_path else None
-
-    def train_step(params, opt_state, batch, cache_table):
-        (loss, acc), grads = jax.value_and_grad(
-            graphsage.loss_fn, has_aux=True)(params, batch, cache_table,
-                                             mcfg, local_shard)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, loss
-
-    t0 = time.time()
-    with shlib.use_mesh(mesh):
-        lowered = jax.jit(
-            train_step,
-            in_shardings=(p_sh, o_sh, b_sh, cache_sh),
-            out_shardings=(p_sh, o_sh, NamedSharding(mesh, P()))).lower(
-                p_structs, o_structs, b_structs, cache_struct)
-        compiled = lowered.compile()
-    t_compile = time.time() - t0
-
-    cost_list = compiled.cost_analysis()
-    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
-    coll = collective_bytes_from_hlo(compiled.as_text())
-    try:
-        mem = compiled.memory_analysis()
-        mem_d = {"argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-                 "temp_bytes": getattr(mem, "temp_size_in_bytes", None)}
-    except Exception as e:
-        mem_d = {"error": str(e)}
-
-    # roofline: no scan in the 3-layer GNN -> cost_analysis is exact
-    n_params = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(p_structs))
-    flops = float(cost.get("flops", 0.0))
-    byt = float(cost.get("bytes accessed", 0.0))
-    shape = ShapeSpec("train_1k", 1, batch, "train")   # D = batch target nodes
-    terms = roofline_terms(flops, byt, coll, _gnn_cfg_stub(), shape, chips,
-                           n_active=float(n_params))
-    table_bytes = cache_rows * feat_dim * 4
-    # cross-shard lookup traffic before/after the locality placement map:
-    # the real solver on a skewed synthetic demand at this config's |C|
-    n_dp_groups = max(chips // n_shards, 1)
-    placement_sim = placement_traffic_sim(cache_rows, n_shards,
-                                          min(n_dp_groups, 64))
-    s0_rows = block_pad_sizes(batch, fanouts)[0][1]
-    row_bytes = feat_dim * 4
-    rec = {
-        "arch": "gnn-graphsage-gns", "shape": "train_1k",
-        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
-        "chips": chips,
-        "status": "ok", "kind": "train",
-        "input_impl": mcfg.input_impl, "cache_shard_axis": cache_axis,
-        "local_fast_path": bool(local_fast_path),
-        "params_total": float(n_params),
-        "cache_rows": cache_rows,
-        "cache_bytes_per_chip": table_bytes / n_shards,
-        # per-generation refresh transfer: shard-aware upload vs replicating
-        # the full table to every chip (the paper-scale saving PR 2 landed)
-        "upload_bytes_per_gen_sharded": table_bytes * chips // n_shards,
-        "upload_bytes_per_gen_replicated": table_bytes * chips,
-        # locality placement: fraction of cache-hit rows the requesting DP
-        # group's home shard serves, and the implied cross-shard row bytes
-        # per batch, contiguous vs locality (PR 3's saving)
-        **placement_sim,
-        "crossshard_bytes_per_batch_contiguous": int(
-            s0_rows * row_bytes *
-            placement_sim["crossshard_rows_frac_contiguous"]),
-        "crossshard_bytes_per_batch_locality": int(
-            s0_rows * row_bytes *
-            placement_sim["crossshard_rows_frac_locality"]),
-        "memory_analysis": mem_d,
-        "cost_flops_per_device": flops, "cost_bytes_per_device": byt,
-        "roofline": terms.as_dict(), "compile_s": round(t_compile, 2),
-    }
-    return rec
-
-
-def _gnn_cfg_stub():
-    """Minimal cfg for roofline_terms' model_flops (n_active overrides)."""
-    from repro.configs.base import ArchConfig
-    return ArchConfig(name="gnn", family="gnn", num_layers=3, d_model=256,
-                      num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=1)
+    return describe_lowering(
+        mesh=mesh, num_nodes=num_nodes, feat_dim=feat_dim,
+        num_classes=num_classes, cache_frac=cache_frac, batch=batch,
+        fanouts=tuple(fanouts), hidden_dim=hidden_dim,
+        input_impl=input_impl, input_kernel="reference",
+        fast_path=fast_path)
 
 
 def main():
@@ -284,6 +79,7 @@ def main():
         print(f"[gnn {rec['mesh']}] dominant={r['dominant']} "
               f"compute={r['compute_s']:.5f}s memory={r['memory_s']:.5f}s "
               f"collective={r['collective_s']:.5f}s "
+              f"dp_groups={rec['dp_groups']} fast_path={rec['fast_path']} "
               f"cache/chip={rec['cache_bytes_per_chip']/1e6:.1f}MB "
               f"upload/gen={rec['upload_bytes_per_gen_sharded']/1e9:.2f}GB "
               f"(vs {rec['upload_bytes_per_gen_replicated']/1e9:.2f}GB repl.) "

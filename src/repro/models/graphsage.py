@@ -49,6 +49,14 @@ class SageConfig:
                                        # mesh axis the cache table is row-
                                        # sharded over; with a mesh in scope
                                        # the fused op runs per-shard + psum
+    num_groups: int = 1                # DP groups collated into one batch:
+                                       # every device array is the group-
+                                       # order concat of per-group arrays
+                                       # (block pads stay PER-GROUP), so dst
+                                       # selection gathers each group's
+                                       # leading rows instead of slicing a
+                                       # global prefix — the GNSEngine's
+                                       # DP > 1 regime
 
 
 def reference_aggregate(h_src: jnp.ndarray, nbr_idx: jnp.ndarray,
@@ -80,16 +88,25 @@ def init_params(rng: jax.Array, cfg: SageConfig) -> dict:
 
 
 def assemble_input(batch: DeviceBatch, cache_table: jnp.ndarray,
-                   prefix: Optional[int] = None) -> jnp.ndarray:
+                   prefix: Optional[int] = None,
+                   rows: Optional[np.ndarray] = None) -> jnp.ndarray:
     """h0 from cache hits + streamed misses (the GNS data path).
 
     ``prefix`` statically truncates to the first N rows — the fused input
     path only needs the destination self-rows, not the full padded h0.
+    ``rows`` (a static index vector) generalizes the prefix to non-leading
+    selections: a group-collated batch's destination self-rows are each
+    group's leading block, not a global prefix (see ``_dst_rows``).
     """
     slots = batch.input_cache_slots
     streamed = batch.input_streamed
     mask = batch.input_mask
-    if prefix is not None:
+    if rows is not None:
+        rows = jnp.asarray(rows, jnp.int32)
+        slots = jnp.take(slots, rows, axis=0)
+        streamed = jnp.take(streamed, rows, axis=0)
+        mask = jnp.take(mask, rows, axis=0)
+    elif prefix is not None:
         slots, streamed, mask = slots[:prefix], streamed[:prefix], mask[:prefix]
     hit = slots >= 0
     cached_rows = jnp.take(cache_table, jnp.clip(slots, 0), axis=0)
@@ -97,18 +114,36 @@ def assemble_input(batch: DeviceBatch, cache_table: jnp.ndarray,
     return h0 * mask[:, None]
 
 
+def _dst_rows(num_groups: int, blk: LayerBlock) -> Optional[np.ndarray]:
+    """Global rows of the destination self-representations, group-collated.
+
+    With one group the destinations are the array's leading ``num_dst`` rows
+    (slice, no gather).  A collated batch concatenates G groups' per-group-
+    padded arrays, so group g's destinations live at ``g·num_src + [0,
+    num_dst)`` of the layer's global source array — a static index vector.
+    """
+    if num_groups <= 1:
+        return None
+    return np.concatenate([g * blk.num_src + np.arange(blk.num_dst)
+                           for g in range(num_groups)]).astype(np.int32)
+
+
 def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
-            cfg: SageConfig, local_shard: Optional[int] = None) -> jnp.ndarray:
+            cfg: SageConfig, local_shard=None) -> jnp.ndarray:
     """Returns logits [B_padded, num_classes].
 
-    ``local_shard`` (static) forwards the locality fast-path gate to the
-    fused input op: the batch assembler set it iff every cache hit of THIS
-    batch resolves on that shard (see ``FeatureStore.assemble_input``).
+    ``local_shard`` forwards the locality fast-path gate to the fused input
+    op: a static int when the batch assembler established that every cache
+    hit of THIS batch resolves on that shard (see
+    ``FeatureStore.assemble_input``), or a TRACED int32 home-shard vector
+    (one entry per DP group, -1 = no contract) — the device-resident form
+    that lets one compiled step serve any mix of home shards (GNSEngine).
     """
     agg = _get_aggregate(cfg.aggregate_impl)
     fused = cfg.input_impl == "fused"
     h = None if fused else assemble_input(batch, cache_table)
     for i, (blk, layer) in enumerate(zip(batch.blocks, params["layers"])):
+        dst_rows = _dst_rows(cfg.num_groups, blk)
         if i == 0 and fused:
             # one Pallas pass: cache/streamed select + layer-0 gather-agg;
             # self rows come from a statically-sliced prefix assembly.  On a
@@ -121,15 +156,23 @@ def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
             axis = cfg.cache_shard_axis
             if mesh is None or axis not in getattr(mesh, "axis_names", ()):
                 mesh = axis = None
+            if local_shard is None or isinstance(local_shard,
+                                                 (int, np.integer)):
+                ls_static, ls_vec = local_shard, None
+            else:                     # traced per-group home-shard vector
+                ls_static, ls_vec = None, local_shard
             a = cache_lookup_agg(cache_table, batch.input_streamed,
                                  batch.input_cache_slots,
                                  blk.nbr_idx, blk.nbr_w,
                                  impl=cfg.input_kernel,
                                  mesh=mesh, shard_axis=axis,
-                                 local_shard=local_shard)
-            h_dst = assemble_input(batch, cache_table, prefix=blk.num_dst)
+                                 local_shard=ls_static,
+                                 local_shards=ls_vec)
+            h_dst = assemble_input(batch, cache_table,
+                                   prefix=blk.num_dst, rows=dst_rows)
         else:
-            h_dst = h[: blk.num_dst]
+            h_dst = (h[: blk.num_dst] if dst_rows is None
+                     else jnp.take(h, jnp.asarray(dst_rows), axis=0))
             a = agg(h, blk.nbr_idx, blk.nbr_w)
         z = jnp.concatenate([h_dst, a], axis=-1) @ layer["w"] + layer["b"]
         h = jax.nn.relu(z) if i < len(batch.blocks) - 1 else z
@@ -139,7 +182,7 @@ def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
 
 def loss_fn(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
             cfg: SageConfig,
-            local_shard: Optional[int] = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+            local_shard=None) -> tuple[jnp.ndarray, jnp.ndarray]:
     logits = forward(params, batch, cache_table, cfg, local_shard=local_shard)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, batch.labels[:, None].astype(jnp.int32),

@@ -1,239 +1,117 @@
-"""GNN trainer — the paper's mixed CPU-GPU training loop (§2.2), JAX edition.
+"""GNN trainer — thin compatibility shim over :class:`repro.gns.GNSEngine`.
 
-Reproduces the six steps of §2.2 with explicit timing so the benchmark
-harness can emit the paper's Fig. 1/2 runtime breakdown:
+The paper's mixed CPU-GPU training loop (§2.2) lives in the engine now
+(``src/repro/gns/``): one declarative :class:`~repro.gns.EngineConfig`
+drives the FeatureStore → sampler → EpochLoader/Prefetcher → compiled-step
+wiring, and the engine's train step takes the device-resident per-group
+home-shard vector (no static ``local_shard`` jit argument, no per-batch
+retracing — the DP > 1 fast-path regime).
 
-  1. sample minibatch (host, numpy)            -> meter.t_sample
-  2. slice node features (host gather)          -> inside sampler._assemble
-  3. copy sliced data to device                 -> meter.t_copy
-  4-6. forward/backward/optimizer (jitted)      -> meter.t_compute
-
-For GNS the cache refresh uploads the cached rows once per period
-(meter.bytes_cache_fill); per-batch traffic then shrinks to the streamed
-misses (meter.bytes_streamed) — the paper's central saving.
+``GNNTrainer`` keeps the historical constructor/``train``/``evaluate``
+surface by building the equivalent ``EngineConfig`` and delegating; state
+(``params`` / ``opt_state`` / ``meter`` / ``store`` / ``sampler``) aliases
+the engine's, so trainer-driven and engine-driven runs are the same run.
+New code should use the engine directly — see README "Engine API" for the
+kwarg → config-field migration table.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from functools import partial
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import CacheConfig
-from repro.core.pipeline import EpochLoader, Prefetcher
-from repro.core.sampler import GNSSampler, SamplerConfig, make_sampler
-from repro.featurestore import FeatureStore, TrafficMeter
+from repro.core.sampler import SamplerConfig
+from repro.gns.config import EngineConfig
+from repro.gns.engine import GNSEngine, TrainReport
 from repro.graph.datasets import GraphDataset
-from repro.launch import sharding as shlib
 from repro.models import graphsage
-from repro.optim.adam import AdamConfig, AdamW
+from repro.optim.adam import AdamConfig
 
-
-@dataclasses.dataclass
-class TrainReport:
-    epoch_times: list
-    losses: list
-    val_acc: list
-    meter: TrafficMeter
-    input_nodes_per_batch: float = 0.0
-    cached_nodes_per_batch: float = 0.0
-    isolated_per_batch: float = 0.0
+__all__ = ["GNNTrainer", "TrainReport"]
 
 
 class GNNTrainer:
+    """Shim: the historical kwarg surface, engine underneath."""
+
     def __init__(self, ds: GraphDataset, sampler_name: str,
                  sampler_cfg: Optional[SamplerConfig] = None,
                  model_cfg: Optional[graphsage.SageConfig] = None,
                  adam_cfg: Optional[AdamConfig] = None,
                  mesh=None, cache_shard_axis: Optional[str] = None,
                  seed: int = 0):
-        """``mesh`` (+ optional ``cache_shard_axis``) makes the feature
-        store shard-aware: each refresh uploads only each device's own
-        shard of the generation table instead of replicating it.  The
-        train/eval steps then run under that mesh scope, and a fused model
-        config inherits the store's shard axis, so the input layer reads the
-        table via the per-shard kernel + psum instead of an XLA all-gather
-        of the whole table every step (pair the mesh with
-        ``SageConfig(input_impl="fused")`` — the "where" input path cannot
-        exploit the sharded layout)."""
-        self.ds = ds
+        scfg = sampler_cfg or SamplerConfig(batch_size=256)
+        cfg = EngineConfig(sampler=sampler_name, sampling=scfg,
+                           cache=scfg.cache,
+                           optim=adam_cfg or AdamConfig(lr=3e-3),
+                           seed=seed)
+        self.engine = GNSEngine(cfg, dataset=ds, mesh=mesh,
+                                model_cfg=model_cfg,
+                                cache_shard_axis=cache_shard_axis)
         self.sampler_name = sampler_name
-        self.mesh = mesh
-        self.scfg = sampler_cfg or SamplerConfig(batch_size=256)
-        self.mcfg = model_cfg or graphsage.SageConfig(
-            feat_dim=ds.feat_dim, num_classes=ds.num_classes)
-        self.meter = TrafficMeter()
-        if sampler_name == "gns":
-            # the facade owns all three feature tiers + the refresh lifecycle
-            self.store = FeatureStore(
-                ds.features, ds.graph, self.scfg.cache, train_idx=ds.train_idx,
-                mesh=mesh, shard_axis=cache_shard_axis,
-                meter=self.meter, importance_mode=self.scfg.importance_mode,
-                build_adjacency=True, seed=seed)
-        else:
-            self.store = None
-        if (self.store is not None and mesh is not None
-                and self.mcfg.input_impl == "fused"
-                and self.mcfg.cache_shard_axis is None):
-            # fused steps must psum over the SAME axis the upload shards on
-            self.mcfg = dataclasses.replace(
-                self.mcfg, cache_shard_axis=self.store.shard_axis)
-        self.sampler = make_sampler(sampler_name, ds.graph, self.scfg,
-                                    ds.features, ds.labels,
-                                    train_idx=ds.train_idx, store=self.store)
-        self.params = graphsage.init_params(jax.random.PRNGKey(seed), self.mcfg)
-        self.opt = AdamW(adam_cfg or AdamConfig(lr=3e-3))
-        self.opt_state = self.opt.init(self.params)
-        self.seed = seed
-        self._dummy_cache = graphsage.dummy_cache_table(ds.feat_dim)
 
-        mcfg = self.mcfg
-        # locality fast path: honor MiniBatch.local_shard only when the fused
-        # sharded input path is active AND the mesh has a single DP group —
-        # the host assembles one batch per step, so with DP > 1 the groups
-        # would need per-group home shards inside one compiled step (the
-        # dry-run's regime, not the in-process trainer's).
-        dp = 1
-        if mesh is not None:
-            dp = int(np.prod([mesh.shape[a] for a in mesh.axis_names
-                              if a != self.mcfg.cache_shard_axis] or [1]))
-        self._use_local_fast_path = (
-            self.mcfg.input_impl == "fused" and mesh is not None
-            and self.mcfg.cache_shard_axis in getattr(mesh, "axis_names", ())
-            and dp == 1)
+    # -- state aliases (read/write flows through to the engine) ------------
+    @property
+    def ds(self):
+        return self.engine.ds
 
-        @partial(jax.jit, static_argnames=("local_shard",))
-        def train_step(params, opt_state, batch, cache_table,
-                       local_shard=None):
-            (loss, acc), grads = jax.value_and_grad(
-                graphsage.loss_fn, has_aux=True)(params, batch, cache_table,
-                                                 mcfg, local_shard)
-            params, opt_state = self.opt.update(grads, opt_state, params)
-            return params, opt_state, loss, acc
+    @property
+    def mesh(self):
+        return self.engine.mesh
 
-        @jax.jit
-        def eval_step(params, batch, cache_table):
-            return graphsage.loss_fn(params, batch, cache_table, mcfg)
+    @property
+    def scfg(self):
+        return self.engine.scfg
 
-        self._train_step = train_step
-        self._eval_step = eval_step
+    @property
+    def mcfg(self):
+        return self.engine.mcfg
 
-    # ------------------------------------------------------------------
-    def _cache_table(self, mb=None):
-        """The device table the batch's slots index into.
+    @property
+    def meter(self):
+        return self.engine.meter
 
-        Each MiniBatch carries the :class:`Generation` it was assembled
-        against, so even when an async refresh swaps the live generation
-        between sampling and stepping, the step reads the table matching the
-        batch's slot map — a swap can never tear a batch.
-        """
-        gen = getattr(mb, "cache_gen", None) if mb is not None else None
-        if gen is not None:
-            return gen.table
-        return self._dummy_cache
+    @property
+    def store(self):
+        return self.engine.store
 
+    @property
+    def sampler(self):
+        return self.engine.sampler
+
+    @property
+    def opt(self):
+        return self.engine.opt
+
+    @property
+    def seed(self):
+        return self.engine.seed
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @params.setter
+    def params(self, v):
+        self.engine.params = v
+
+    @property
+    def opt_state(self):
+        return self.engine.opt_state
+
+    @opt_state.setter
+    def opt_state(self, v):
+        self.engine.opt_state = v
+
+    # -- the historical verbs ---------------------------------------------
     def run_batch(self, mb) -> tuple[float, float]:
-        m = self.meter
-        t0 = time.perf_counter()
-        dev_batch = jax.device_put(mb.device)
-        m.t_copy += time.perf_counter() - t0
-        m.add_batch(mb.bytes_streamed)
-        t0 = time.perf_counter()
-        ls = mb.local_shard if self._use_local_fast_path else None
-        with shlib.use_mesh(self.mesh):     # no-op scope when mesh is None
-            self.params, self.opt_state, loss, acc = self._train_step(
-                self.params, self.opt_state, dev_batch, self._cache_table(mb),
-                local_shard=ls)
-        loss = float(loss)
-        m.t_compute += time.perf_counter() - t0
-        return loss, float(acc)
+        return self.engine.run_batch(mb)
 
     def train(self, epochs: int, max_batches: Optional[int] = None,
               prefetch: bool = False, eval_every: Optional[int] = None,
               eval_batches: int = 8) -> TrainReport:
-        loader = EpochLoader(self.sampler, self.ds.train_idx, seed=self.seed,
-                             max_batches=max_batches)
-        report = TrainReport([], [], [], self.meter)
-        n_inputs, n_cached, n_iso, n_b = 0, 0, 0, 0
-        for ep in range(epochs):
-            t_ep = time.perf_counter()
-            # epoch start (cache refresh happens in sampler.start_epoch)
-            it = loader.epoch(ep)
-            if prefetch:
-                it = Prefetcher(it, depth=2)
-            else:
-                it = self._timed(it)
-            ep_losses = []
-            for mb in it:
-                loss, _ = self.run_batch(mb)
-                ep_losses.append(loss)
-                n_inputs += mb.num_input
-                n_cached += mb.num_cached
-                n_iso += mb.num_isolated
-                n_b += 1
-            report.epoch_times.append(time.perf_counter() - t_ep)
-            report.losses.append(float(np.mean(ep_losses)) if ep_losses else float("nan"))
-            if eval_every and (ep + 1) % eval_every == 0:
-                report.val_acc.append(self.evaluate(self.ds.val_idx, eval_batches))
-        if n_b:
-            report.input_nodes_per_batch = n_inputs / n_b
-            report.cached_nodes_per_batch = n_cached / n_b
-            report.isolated_per_batch = n_iso / n_b
-        return report
-
-    def _timed(self, it):
-        """Wrap a batch iterator, attributing wall time to meter.t_sample.
-
-        The store self-reports the host gather inside ``sample`` to
-        meter.t_slice and (sync-mode) cache builds inside ``start_epoch``
-        to meter.t_refresh; subtract both deltas so each second lands in
-        exactly one bucket.  Clamped at zero: an async build finishing
-        during a short window could otherwise over-subtract.
-        """
-        it = iter(it)
-        while True:
-            t0 = time.perf_counter()
-            slice0 = self.meter.t_slice
-            refresh0 = self.meter.t_refresh
-            try:
-                mb = next(it)
-            except StopIteration:
-                return
-            elapsed = time.perf_counter() - t0
-            self.meter.t_sample += max(
-                elapsed - (self.meter.t_slice - slice0)
-                - (self.meter.t_refresh - refresh0), 0.0)
-            yield mb
+        return self.engine.fit(epochs, max_batches=max_batches,
+                               prefetch=prefetch, eval_every=eval_every,
+                               eval_batches=eval_batches)
 
     def evaluate(self, idx: np.ndarray, num_batches: int = 8) -> float:
-        """Micro-F1 (= accuracy for single-label tasks, as in the paper)."""
-        b = self.scfg.batch_size
-        idx = np.asarray(idx)
-        if len(idx) < b:  # pad by wrapping; mask handles duplicates' weight
-            idx = np.concatenate([idx, idx[: b - len(idx)]])
-        rng = np.random.default_rng(1234)
-        if isinstance(self.sampler, GNSSampler):
-            self.sampler.ensure_cache(rng)
-        if self.store is not None:
-            self.store.record = False   # eval must not skew training metrics
-                                        # or the adaptive policy's miss EMA
-        correct, total = 0.0, 0.0
-        try:
-            for i in range(num_batches):
-                lo = (i * b) % (len(idx) - b + 1)
-                targets = idx[lo:lo + b]
-                mb = self.sampler.sample(targets, rng)
-                with shlib.use_mesh(self.mesh):
-                    _, acc = self._eval_step(self.params,
-                                             jax.device_put(mb.device),
-                                             self._cache_table(mb))
-                correct += float(acc)
-                total += 1.0
-        finally:
-            if self.store is not None:
-                self.store.record = True
-        return correct / max(total, 1.0)
+        return self.engine.evaluate(idx, num_batches=num_batches)

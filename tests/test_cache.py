@@ -2,8 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core.cache import (CacheConfig, cache_probs, degree_cache_probs,
-                              random_walk_cache_probs, sample_cache)
+from repro.featurestore import (CacheConfig, cache_probs, degree_cache_probs,
+                                random_walk_cache_probs, sample_cache)
 from repro.graph.generate import powerlaw_graph
 
 
@@ -73,3 +73,29 @@ def test_auto_strategy_switches(g):
     np.testing.assert_allclose(p_big, p_deg)
     # small train fraction -> random-walk (different from degree)
     assert not np.allclose(p_small, p_deg)
+
+
+# ---------------------------------------------------------------------------
+# deprecated import paths (PR 4): one-release re-export shims
+# ---------------------------------------------------------------------------
+
+def test_core_cache_shims_warn_and_reexport():
+    """`repro.core.cache` / `repro.core.device_cache` are deprecation
+    re-exports: importing them warns once, and every forwarded name is THE
+    featurestore object (not a copy)."""
+    import importlib
+    import sys
+
+    for mod in ("repro.core.cache", "repro.core.device_cache"):
+        sys.modules.pop(mod, None)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            importlib.import_module(mod)
+
+    from repro.core.cache import CacheConfig as ShimConfig
+    from repro.core.cache import sample_cache as shim_sample
+    from repro.core.device_cache import TrafficMeter as ShimMeter
+    from repro.featurestore import CacheConfig, TrafficMeter
+    from repro.featurestore import sample_cache as real_sample
+    assert ShimConfig is CacheConfig
+    assert shim_sample is real_sample
+    assert ShimMeter is TrafficMeter

@@ -230,7 +230,7 @@ def test_ops_wrapper_dispatch():
 def test_graphsage_fused_input_matches_reference():
     """input_impl='fused' forward == reference forward on a real GNS batch."""
     from repro.core.sampler import SamplerConfig, make_sampler
-    from repro.core.cache import CacheConfig
+    from repro.featurestore import CacheConfig
     from repro.graph.datasets import get_dataset
     from repro.models import graphsage
 

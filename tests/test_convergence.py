@@ -8,7 +8,7 @@ Scaled to the container: tiny SBM dataset, few epochs.  The claims we verify:
 import numpy as np
 import pytest
 
-from repro.core.cache import CacheConfig
+from repro.featurestore import CacheConfig
 from repro.core.sampler import SamplerConfig
 from repro.graph.datasets import get_dataset
 from repro.train.trainer import GNNTrainer

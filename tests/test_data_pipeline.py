@@ -11,7 +11,7 @@ try:
 except ImportError:                          # bare env: seeded fallback shim
     from _hypothesis_fallback import given, settings, st
 
-from repro.core.device_cache import TrafficMeter
+from repro.featurestore import TrafficMeter
 from repro.data.tokens import SyntheticCorpus, TokenPipeline
 from repro.data.vocab_cache import (VocabCache, VocabCacheConfig,
                                     embed_with_cache, sampled_softmax_loss)

@@ -5,7 +5,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core.cache import CacheConfig
+from repro.featurestore import CacheConfig
 from repro.core.pipeline import EpochLoader
 from repro.core.sampler import GNSSampler, SamplerConfig
 from repro.featurestore import (FeatureStore, POLICIES, make_policy,

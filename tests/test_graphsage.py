@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.cache import CacheConfig
+from repro.featurestore import CacheConfig
 from repro.core.sampler import SamplerConfig, make_sampler
 from repro.graph.datasets import get_dataset
 from repro.models import graphsage

@@ -12,7 +12,7 @@ try:
 except ImportError:                          # bare env: seeded fallback shim
     from _hypothesis_fallback import given, settings, st
 
-from repro.core.cache import CacheConfig
+from repro.featurestore import CacheConfig
 from repro.core.importance import (cache_hit_prob, importance_coefficients,
                                    solve_inclusion_lambda)
 from repro.core.sampler import GNSSampler, SamplerConfig

@@ -102,6 +102,70 @@ def test_all_zero_traffic_decays_to_identity():
 
 
 # ---------------------------------------------------------------------------
+# second-choice spill (PR-4 satellite): overflow rows land with their
+# second-hottest group, not first-free-in-shard-order
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20)
+@given(n_shards=st.integers(3, 6), rows_per_shard=st.integers(2, 8),
+       seed=st.integers(0, 10 ** 6))
+def test_spilled_rows_take_second_hottest_groups_shard(n_shards,
+                                                       rows_per_shard, seed):
+    """Group A's hot set overflows its home shard; every overflow row's
+    second-hottest group is B — the spill must land on home(B), which has
+    free capacity, never on the (emptier, earlier-in-shard-order) others."""
+    rng = np.random.default_rng(seed)
+    rows = n_shards * rows_per_shard
+    a, b = 1, 2                       # homes 1 and 2: shard 0 stays coldest,
+                                      # so shard-order spill would pick 0
+    overflow = rows_per_shard // 2 + 1
+    hot = rng.choice(rows, rows_per_shard + overflow, replace=False)
+    traffic = np.zeros((n_shards, rows))
+    traffic[a, hot] = 1000 + rng.integers(0, 50, len(hot))
+    traffic[b, hot] = 10 + rng.integers(0, 5, len(hot))   # 2nd-hottest: B
+    pm = solve_placement(traffic, n_shards, rows_per_shard, seed=seed)
+    got = pm.shard_of_slot(hot)
+    # A's home takes exactly its capacity of the hottest rows...
+    assert (got == home_shard(a, n_shards)).sum() == rows_per_shard
+    # ...and EVERY overflow row lands on B's home (capacity permitting:
+    # overflow <= rows_per_shard by construction), not on shard 0
+    spilled = got[got != home_shard(a, n_shards)]
+    assert (spilled == home_shard(b, n_shards)).all(), got
+
+
+def test_spill_falls_back_to_shard_order_when_second_choice_full():
+    """When the second-hottest group's shard is also at capacity the
+    leftover rows take the old shard-order fill — and the assignment stays
+    a balanced bijection."""
+    n_shards, rps = 3, 2
+    rows = n_shards * rps
+    traffic = np.zeros((n_shards, rows))
+    # groups 1 and 2 both want ALL rows (1 hottest, 2 second) -> shards 1, 2
+    # fill to capacity and the remaining rows must land on shard 0
+    traffic[1] = 100 + np.arange(rows)
+    traffic[2] = 10 + np.arange(rows)
+    pm = solve_placement(traffic, n_shards, rps, seed=0)
+    counts = np.bincount(pm.shard_of_slot(np.arange(rows)), minlength=n_shards)
+    assert (counts == rps).all(), counts
+
+
+def test_zero_traffic_group_is_never_a_spill_choice():
+    """A group with zero traffic for a row must not attract its spill: the
+    row's only real demand is group 1 (home 1); overflow rows fall back to
+    shard order (shard 0 first), NOT to silent-zero groups' homes."""
+    n_shards, rps = 4, 2
+    rows = n_shards * rps
+    traffic = np.zeros((n_shards, rows))
+    traffic[1] = 50 + np.arange(rows)      # one group wants everything
+    pm = solve_placement(traffic, n_shards, rps, seed=3)
+    got = pm.shard_of_slot(np.arange(rows))
+    assert (got == 1).sum() == rps
+    # every shard still exactly at capacity (bijection invariant holds)
+    counts = np.bincount(got, minlength=n_shards)
+    assert (counts == rps).all(), counts
+
+
+# ---------------------------------------------------------------------------
 # CacheState: permuted mapping vs PR 2's arithmetic blocks
 # ---------------------------------------------------------------------------
 

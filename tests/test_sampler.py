@@ -13,7 +13,7 @@ invariants covers them:
 import numpy as np
 import pytest
 
-from repro.core.cache import CacheConfig
+from repro.featurestore import CacheConfig
 from repro.core.minibatch import block_pad_sizes
 from repro.core.sampler import (GNSSampler, LadiesSampler, LazyGCNSampler,
                                 NeighborSampler, SamplerConfig, make_sampler)

@@ -403,11 +403,15 @@ from jax.sharding import Mesh
 from repro.launch import dryrun_gnn
 
 mesh = Mesh(np.asarray(jax.devices()).reshape(1, 4), ("data", "model"))
+# default = the ENGINE lowering: dynamic home-shard vector, one compiled
+# step for any mix of per-group fast paths (gns.engine.make_train_step)
 rec = dryrun_gnn.run(mesh=mesh, num_nodes=5000, feat_dim=32, num_classes=8,
                      cache_frac=0.05, batch=16, fanouts=(3, 4), hidden_dim=16,
                      input_impl="fused")
 assert rec["status"] == "ok" and rec["input_impl"] == "fused", rec
 assert rec["cache_shard_axis"] == "model"
+assert rec["fast_path"] == "dynamic" and rec["local_fast_path"], rec
+assert rec["dp_groups"] == 1
 assert rec["cache_rows"] % 4 == 0
 assert rec["upload_bytes_per_gen_replicated"] == \
     4 * rec["upload_bytes_per_gen_sharded"]
@@ -415,13 +419,18 @@ assert rec["upload_bytes_per_gen_replicated"] == \
 assert rec["lookup_local_frac_locality"] > rec["lookup_local_frac_contiguous"]
 assert rec["crossshard_bytes_per_batch_locality"] < \
     rec["crossshard_bytes_per_batch_contiguous"]
-# and the psum-free fast-path variant must LOWER on the same mesh with
-# fewer cross-device bytes in the input layer's collectives
-rec_fast = dryrun_gnn.run(mesh=mesh, num_nodes=5000, feat_dim=32,
-                          num_classes=8, cache_frac=0.05, batch=16,
-                          fanouts=(3, 4), hidden_dim=16, input_impl="fused",
-                          local_fast_path=True)
-assert rec_fast["status"] == "ok" and rec_fast["local_fast_path"], rec_fast
+# the legacy lowerings still compile on the same mesh: the PR-3 static-arg
+# fast path and the plain psum path (no locality gate)
+rec_sta = dryrun_gnn.run(mesh=mesh, num_nodes=5000, feat_dim=32,
+                         num_classes=8, cache_frac=0.05, batch=16,
+                         fanouts=(3, 4), hidden_dim=16, input_impl="fused",
+                         fast_path="static")
+assert rec_sta["status"] == "ok" and rec_sta["fast_path"] == "static", rec_sta
+rec_off = dryrun_gnn.run(mesh=mesh, num_nodes=5000, feat_dim=32,
+                         num_classes=8, cache_frac=0.05, batch=16,
+                         fanouts=(3, 4), hidden_dim=16, input_impl="fused",
+                         fast_path="off")
+assert rec_off["status"] == "ok" and not rec_off["local_fast_path"], rec_off
 print("DRYRUN_FUSED_OK", rec["mesh"], rec["roofline"]["dominant"],
       "local-hit", rec["lookup_local_frac_locality"])
 """
