@@ -1,0 +1,141 @@
+"""Serving: dynamic micro-batching vs per-request `GNSEngine.infer()`.
+
+Two measurements (PR 5 acceptance):
+
+* :func:`run_throughput` — the same request stream served (a) by looping
+  the one-shot ``infer()`` per request and (b) by the persistent
+  :class:`~repro.serve.GNSServer` at EQUAL batch budget (the server's
+  largest bucket == ``infer()``'s padded batch).  Micro-batching coalesces
+  many small requests into one padded step, so sampling AND compute
+  amortize: the acceptance asserts >= 3x request throughput with ZERO
+  steady-state recompilation (one compiled step per size bucket).
+* :func:`run_trajectory` — a Zipf-skewed request stream against the
+  adaptive policy with serving-driven refreshes
+  (``ServeConfig.refresh_every``): the per-batch device-tier hit fraction
+  must RISE across the stream as the cache re-draws toward the inference
+  hot set (the paper's cache loop closed over a serving workload).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, engine_config
+from repro.gns import GNSEngine, ServeConfig
+from repro.graph.datasets import get_dataset
+
+REQ_IDS = 8                       # ids per request (a user-page fetch)
+
+
+def _build(fast: bool, *, strategy: str = "auto",
+           serve: ServeConfig = None, seed: int = 0) -> GNSEngine:
+    scale = 0.25 if fast else 1.0
+    ds = get_dataset("ogbn-products", scale=scale, seed=seed)
+    cfg = engine_config("gns", batch_size=128 if fast else 512,
+                        cache_strategy=strategy, seed=seed)
+    if serve is not None:
+        cfg = dataclasses.replace(cfg, serve=serve)
+    return GNSEngine(cfg, dataset=ds)
+
+
+def _requests(eng: GNSEngine, n: int, rng, hot=None,
+              hot_share: float = 0.0) -> list:
+    pool = eng.ds.val_idx
+    out = []
+    for _ in range(n):
+        src = hot if hot is not None and rng.random() < hot_share else pool
+        out.append(rng.choice(src, size=REQ_IDS, replace=False))
+    return out
+
+
+# ---------------------------------------------------------------------------
+def run_throughput(fast: bool = True) -> list:
+    n_requests = 64 if fast else 512
+    rng = np.random.default_rng(0)
+
+    # (a) per-request one-shot infer(): every request pays a full padded
+    # batch (sampling + compiled step) on its own
+    eng_a = _build(fast)
+    reqs = _requests(eng_a, n_requests, rng)
+    eng_a.infer(reqs[0])                          # warm: compile + cold cache
+    t0 = time.perf_counter()
+    for ids in reqs:
+        eng_a.infer(ids)
+    wall_a = time.perf_counter() - t0
+
+    # (b) the serving loop at EQUAL batch budget: largest bucket == the
+    # engine batch infer() pads to
+    budget = eng_a.scfg.batch_size
+    serve = ServeConfig(buckets=(budget // 4, budget), max_wait_ms=5.0,
+                        max_queue=4 * n_requests)
+    eng_b = _build(fast, serve=serve)
+    with eng_b.serve() as srv:
+        srv.infer(reqs[0], timeout=600)           # warm small bucket
+        srv.submit(np.resize(reqs[0], budget)).result(timeout=600)  # large
+        warm_entries = eng_b.infer_step._cache_size()
+        t0 = time.perf_counter()
+        futs = [srv.submit(ids) for ids in reqs]
+        for f in futs:
+            f.result(timeout=600)
+        wall_b = time.perf_counter() - t0
+        recompiles = eng_b.infer_step._cache_size() - warm_entries
+    snap = srv.meter.snapshot()
+
+    rows = [{
+        "mode": "per_request_infer", "requests": n_requests,
+        "wall_s": wall_a, "requests_per_s": n_requests / wall_a,
+        "batches": n_requests, "speedup": 1.0, "recompiles": 0,
+        "fill_fraction": REQ_IDS / budget,
+    }, {
+        "mode": "server_microbatch", "requests": n_requests,
+        "wall_s": wall_b, "requests_per_s": n_requests / wall_b,
+        "batches": snap["batches"], "speedup": wall_a / wall_b,
+        "recompiles": recompiles,
+        "fill_fraction": snap["fill_fraction"],
+        "queue_wait_p99_ms": snap["queue_wait_p99_ms"],
+        "total_p99_ms": snap["total_p99_ms"],
+    }]
+    emit("serve_throughput", rows,
+         ["mode", "requests", "wall_s", "requests_per_s", "batches",
+          "speedup", "recompiles", "fill_fraction"])
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def run_trajectory(fast: bool = True) -> list:
+    n_requests = 150 if fast else 1000
+    rng = np.random.default_rng(1)
+    eng = _build(fast, strategy="adaptive",
+                 serve=ServeConfig(buckets=(32, 128), max_wait_ms=2.0,
+                                   refresh_every=10,
+                                   max_queue=4 * n_requests))
+    hot = rng.choice(eng.ds.val_idx, size=max(len(eng.ds.val_idx) // 20, 16),
+                     replace=False)
+    with eng.serve() as srv:
+        for ids in _requests(eng, n_requests, rng, hot=hot, hot_share=0.9):
+            srv.infer(ids, timeout=600)           # sequential: a live stream
+    traj = srv.meter.hit_trajectory()
+    k = max(len(traj) // 4, 1)
+    early, late = float(np.mean(traj[:k])), float(np.mean(traj[-k:]))
+    rows = [{
+        "requests": n_requests, "batches": srv.meter.batches,
+        "swaps": srv.meter.swaps_observed,
+        "hit_frac_early": early, "hit_frac_late": late,
+        "hit_improvement": late - early,
+        "cache_hit_rate": srv.meter.cache_hit_rate,
+    }]
+    emit("serve_trajectory", rows,
+         ["requests", "batches", "swaps", "hit_frac_early", "hit_frac_late",
+          "hit_improvement", "cache_hit_rate"])
+    return rows
+
+
+def run(fast: bool = True) -> None:
+    run_throughput(fast)
+    run_trajectory(fast)
+
+
+if __name__ == "__main__":
+    run()

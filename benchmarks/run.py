@@ -7,6 +7,7 @@
   Fig 1/2  bench_breakdown         runtime breakdown + byte ledger
   Fig 3    bench_convergence       F1 vs epoch, 4 samplers
   §Roofline bench_roofline         aggregates dry-run JSONs (no compute)
+  Serving  bench_serve             micro-batched GNSServer vs infer() loop
 
 ``python -m benchmarks.run`` runs all at CI scale (--full for paper scale);
 each prints CSV and persists JSON under benchmarks/results/.
@@ -27,7 +28,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_breakdown, bench_cache_sensitivity,
                             bench_convergence, bench_input_nodes,
-                            bench_isolated, bench_roofline, bench_throughput)
+                            bench_isolated, bench_roofline, bench_serve,
+                            bench_throughput)
     all_benches = {
         "throughput": bench_throughput.run,
         "input_nodes": bench_input_nodes.run,
@@ -36,6 +38,7 @@ def main(argv=None) -> None:
         "breakdown": bench_breakdown.run,
         "convergence": bench_convergence.run,
         "roofline": bench_roofline.run,
+        "serve": bench_serve.run,
     }
     names = (args.only.split(",") if args.only else list(all_benches))
     for name in names:

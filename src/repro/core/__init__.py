@@ -14,9 +14,9 @@ Pieces map 1:1 onto the paper's sections:
 The §3.2 cache machinery (``CacheConfig`` / ``sample_cache`` / the policy
 probability constructions) and the traffic meter live in
 :mod:`repro.featurestore`; this package re-exports the common names for
-convenience.  The old ``repro.core.cache`` / ``repro.core.device_cache``
-module paths are deprecated one-release re-export shims (they warn on
-import).
+convenience.  (The deprecated ``repro.core.cache`` / ``repro.core
+.device_cache`` shim paths were removed after their one-release grace
+period — import from ``repro.featurestore``.)
 """
 from repro.featurestore import (CacheConfig, TrafficMeter,
                                 degree_cache_probs, random_walk_cache_probs,

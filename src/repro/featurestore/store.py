@@ -49,6 +49,7 @@ the permutation is the identity — bit-for-bit the PR 2 layout.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
@@ -319,6 +320,13 @@ class FeatureStore:
         self.record = True          # False: suspend meter + policy feedback
                                     # (evaluation must not skew training
                                     # metrics or the adaptive traffic EMA)
+        self.serve_meter: Optional[TrafficMeter] = None
+                                    # serving mode (record=False + a meter
+                                    # here, via ``serving()``): tier/time
+                                    # accounting lands on THIS meter while
+                                    # policy/placement feedback stays live —
+                                    # serving traffic steers the cache
+                                    # without touching training metrics
         self.refresh_delay = 0.0    # test hook: artificial build latency (s)
         self.upload_delay = 0.0     # test hook: artificial shard-upload
                                     # latency (s) — the straggler the
@@ -348,6 +356,32 @@ class FeatureStore:
     def refreshing(self) -> bool:
         t = self._thread
         return t is not None and t.is_alive()
+
+    # ------------------------------------------------------------------
+    # accounting modes
+    # ------------------------------------------------------------------
+    @contextlib.contextmanager
+    def serving(self, meter: TrafficMeter):
+        """Serving-mode accounting scope (the GNSServer's sampling window).
+
+        Inside the scope, ``assemble_input`` routes its tier/time/locality
+        counters to ``meter`` — a serving-side :class:`TrafficMeter` view —
+        instead of the training meter, while the adaptive policy's EMA and
+        the placement demand histograms KEEP observing: serving traffic must
+        steer cache admission and shard placement (the cache converges onto
+        the inference hot set) without inflating training metrics.  Contrast
+        ``record = False`` alone (evaluation), which suspends everything.
+
+        Not safe to interleave with a concurrent ``fit``/``evaluate`` on the
+        same store — one accounting mode at a time (the serving loop holds
+        the scope only while it samples, on its single worker thread).
+        """
+        prev_record, prev_meter = self.record, self.serve_meter
+        self.record, self.serve_meter = False, meter
+        try:
+            yield self
+        finally:
+            self.record, self.serve_meter = prev_record, prev_meter
 
     # ------------------------------------------------------------------
     # tier reads
@@ -389,20 +423,26 @@ class FeatureStore:
         hit_shards = slots[(slots >= 0) & valid] // state.rows_per_shard
         n_local = int((hit_shards == home).sum())
         all_local = state.n_shards > 1 and n_local == len(hit_shards)
-        if self.record:
-            self.meter.t_slice += time.perf_counter() - t0
-            dev = self.meter.tier("device")
+        # accounting sink for this mode: the training meter, the serving
+        # meter (``serving()`` scope), or nothing (evaluation)
+        meter = self.meter if self.record else self.serve_meter
+        if meter is not None:
+            meter.t_slice += time.perf_counter() - t0
+            dev = meter.tier("device")
             dev.hits += hits
             dev.misses += len(miss_ids)
             dev.bytes_read += hits * self._row_bytes
-            host = self.meter.tier("host")
+            host = meter.tier("host")
             host.hits += len(miss_ids)
             host.bytes_read += len(miss_ids) * self._row_bytes
-            self.meter.lanes_local += n_local
-            self.meter.lanes_remote += hits - n_local
-            self.meter.bytes_cross_shard += (hits - n_local) * self._row_bytes
+            meter.lanes_local += n_local
+            meter.lanes_remote += hits - n_local
+            meter.bytes_cross_shard += (hits - n_local) * self._row_bytes
             if self.cfg.placement == "locality":
-                # per-group demand histogram: the placement solver's input
+                # per-group demand histogram: the placement solver's input.
+                # ALWAYS on the training meter — the solver reads exactly
+                # one demand signal, and serving traffic must steer the
+                # next generation's placement too.
                 self.meter.observe_group(group, ids_p[:n_in],
                                          self.graph.num_nodes)
             # feed the FULL requested-id traffic (hits AND misses) to the
@@ -635,9 +675,14 @@ class FeatureStore:
             except BaseException as e:   # surfaced at the next swap point
                 self._refresh_err = e
 
-        self._thread = threading.Thread(target=_run, daemon=True,
-                                        name="featurestore-refresh")
-        self._thread.start()
+        t = threading.Thread(target=_run, daemon=True,
+                             name="featurestore-refresh")
+        # publish + start under the lock: a concurrent wait_refresh (e.g.
+        # the serving loop kicks refreshes from its worker thread while the
+        # owner waits) must never see a created-but-unstarted thread
+        with self._lock:
+            self._thread = t
+            t.start()
         return True
 
     def swap_if_ready(self) -> bool:
@@ -655,7 +700,8 @@ class FeatureStore:
 
     def wait_refresh(self, timeout: Optional[float] = None) -> bool:
         """Block until an in-flight refresh finishes, then swap it in."""
-        t = self._thread
+        with self._lock:      # pairs with begin_refresh's publish-and-start
+            t = self._thread
         if t is not None:
             t.join(timeout)
         return self.swap_if_ready()

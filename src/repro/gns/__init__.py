@@ -23,11 +23,12 @@ Quickstart::
     print(engine.describe())
 """
 from repro.gns.config import (DataConfig, EngineConfig, MeshConfig,
-                              ModelConfig, PRESETS)
+                              ModelConfig, PRESETS, ServeConfig)
 from repro.gns.engine import (GNSEngine, TrainReport, collate_groups,
                               make_train_step)
 
 __all__ = [
-    "EngineConfig", "DataConfig", "MeshConfig", "ModelConfig", "PRESETS",
+    "EngineConfig", "DataConfig", "MeshConfig", "ModelConfig", "ServeConfig",
+    "PRESETS",
     "GNSEngine", "TrainReport", "collate_groups", "make_train_step",
 ]

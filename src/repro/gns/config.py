@@ -1,8 +1,9 @@
 """Declarative engine configuration: one config, every surface.
 
 ``EngineConfig`` is the single description of a GNS training/inference run —
-dataset, sampler, cache/placement, mesh, model and optimizer sub-configs —
-that :class:`repro.gns.engine.GNSEngine` turns into the wired pipeline
+dataset, sampler, cache/placement, mesh, model, optimizer and serving
+sub-configs — that :class:`repro.gns.engine.GNSEngine` turns into the wired
+pipeline
 (FeatureStore → sampler → EpochLoader/Prefetcher → compiled step).  It
 replaces the hand-assembled ``GNNTrainer.__init__`` kwarg pile that every
 example and benchmark used to rebuild independently.
@@ -26,7 +27,7 @@ Design rules:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import numpy as np
 
@@ -66,6 +67,41 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Declarative serving sub-block (``repro.serve.GNSServer``).
+
+    ``buckets`` are the ONLY padded inference-batch sizes the server ever
+    ships to the device: the micro-batcher coalesces queued requests and pads
+    to the smallest bucket that holds them, so steady-state serving compiles
+    exactly one inference step per bucket (``GNSEngine.infer_prepare`` /
+    ``infer_compute``) and never retraces — the `launch/serve.py` step-cache
+    design transplanted onto the GNS cache tier.
+    """
+    buckets: Sequence[int] = (32, 128, 512)
+                                    # ascending padded batch sizes; the
+                                    # largest is the per-step id budget
+    max_queue: int = 256            # admission control: queued requests
+                                    # beyond this are REJECTED (QueueFull)
+    max_wait_ms: float = 2.0        # micro-batch coalescing window: how long
+                                    # the batcher holds the first request of
+                                    # a batch while more arrive
+    default_deadline_ms: Optional[float] = None
+                                    # per-request deadline (ms from submit);
+                                    # requests still queued past it complete
+                                    # as "expired" without touching the
+                                    # device.  None = no deadline.
+    refresh_every: Optional[int] = None
+                                    # kick an async cache refresh every N
+                                    # served batches, so the adaptive policy
+                                    # (fed by serving traffic) re-draws the
+                                    # generation toward the INFERENCE hot
+                                    # set.  None = never refresh while
+                                    # serving.
+    latency_window: int = 2048      # rolling per-request latency records
+                                    # kept for the p50/p99 view
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """One declarative description of a GNS run (see module docstring)."""
     sampler: str = "gns"                # ns | gns | ladies | lazygcn
@@ -77,6 +113,7 @@ class EngineConfig:
     optim: AdamConfig = dataclasses.field(
         default_factory=lambda: AdamConfig(lr=3e-3))
     mesh: Optional[MeshConfig] = None
+    serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
     seed: int = 0
     prefetch: bool = False              # fit() default (overridable per call)
 
@@ -118,7 +155,7 @@ class EngineConfig:
 # nested reconstruction
 # ---------------------------------------------------------------------------
 
-_TUPLE_FIELDS = {"fanouts", "walk_fanouts"}
+_TUPLE_FIELDS = {"fanouts", "walk_fanouts", "buckets"}
 _DTYPES = {"float32": np.float32, "bfloat16": None}   # resolved lazily
 
 
@@ -159,6 +196,7 @@ _NESTED = {
     (EngineConfig, "model"): ModelConfig,
     (EngineConfig, "optim"): AdamConfig,
     (EngineConfig, "mesh"): MeshConfig,
+    (EngineConfig, "serve"): ServeConfig,
     (SamplerConfig, "cache"): CacheConfig,
 }
 

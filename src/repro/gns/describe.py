@@ -305,3 +305,70 @@ def _gnn_cfg_stub():
     from repro.configs.base import ArchConfig
     return ArchConfig(name="gnn", family="gnn", num_layers=3, d_model=256,
                       num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=1)
+
+
+# ---------------------------------------------------------------------------
+# diff mode: compare two configs' lowering/traffic records (ROADMAP follow-up)
+# ---------------------------------------------------------------------------
+
+# keys that vary run-to-run without the configuration changing: wall-clock
+# measurements and per-process memory analysis have no place in a diff
+_VOLATILE = ("compile_s", "memory_analysis", "meter")
+
+
+def _flatten(d: dict, prefix: str = "") -> dict:
+    """Nested dict -> {dotted.key: leaf}, volatile keys dropped."""
+    out = {}
+    for k, v in d.items():
+        if k in _VOLATILE:
+            continue
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, prefix=key + "."))
+        else:
+            out[key] = v
+    return out
+
+
+def diff_records(rec_a: dict, rec_b: dict) -> dict:
+    """Structural diff of two describe records (or any nested dicts).
+
+    Returns ``{"only_a": {...}, "only_b": {...}, "changed": {key: [a, b]},
+    "same": bool}`` over dotted leaf keys, with run-volatile keys
+    (compile wall time, memory analysis, live meter readings) excluded so
+    two runs of the SAME config diff as identical.
+    """
+    fa, fb = _flatten(rec_a), _flatten(rec_b)
+    changed = {k: [fa[k], fb[k]] for k in sorted(fa.keys() & fb.keys())
+               if fa[k] != fb[k]}
+    only_a = {k: fa[k] for k in sorted(fa.keys() - fb.keys())}
+    only_b = {k: fb[k] for k in sorted(fb.keys() - fa.keys())}
+    return {"only_a": only_a, "only_b": only_b, "changed": changed,
+            "same": not (changed or only_a or only_b)}
+
+
+def diff(cfg_a, cfg_b, *, dataset_a=None, dataset_b=None) -> dict:
+    """Compare two :class:`~repro.gns.EngineConfig` runs end to end.
+
+    Builds the engine for each config (``dataset_*`` shortcut concrete
+    datasets, e.g. in tests) and diffs both layers:
+
+    * ``config`` — the declarative fields themselves (what the operator
+      changed);
+    * ``record`` — each config's ``GNSEngine.describe()`` lowering/traffic
+      record (what that change DID to cache rows, per-chip bytes, upload
+      traffic, roofline terms, locality fractions ...).
+
+    The CLI lives in ``launch/dryrun_gnn.py`` (``--diff A B`` with preset
+    names or config-JSON paths).
+    """
+    from repro.gns.engine import GNSEngine
+
+    rec_a = GNSEngine(cfg_a, dataset=dataset_a).describe()
+    rec_b = GNSEngine(cfg_b, dataset=dataset_b).describe()
+    out = {
+        "config": diff_records(cfg_a.to_dict(), cfg_b.to_dict()),
+        "record": diff_records(rec_a, rec_b),
+    }
+    out["same"] = out["config"]["same"] and out["record"]["same"]
+    return out

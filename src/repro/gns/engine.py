@@ -221,6 +221,12 @@ class GNSEngine:
 
         self._eval_step = eval_step
         self._logits_step = logits_step
+        # serving-shaped inference: one sampler per padded batch size
+        # ("bucket"), all sharing THE store — so every bucket rides the same
+        # live cache generation and feeds the same policy/placement signals,
+        # while jax.jit keys the one logits step per bucket shape (a small
+        # fixed set of compiled steps, never retraced in steady state)
+        self._bucket_samplers: dict = {}
 
     # ------------------------------------------------------------------
     def _cache_table(self, mb: Optional[MiniBatch] = None):
@@ -377,20 +383,103 @@ class GNSEngine:
         return correct / max(total, 1.0)
 
     # ------------------------------------------------------------------
+    # serving-shaped inference (the repro.serve subsystem's engine surface)
+    # ------------------------------------------------------------------
+    def _bucket_sampler(self, bucket: int):
+        """A sampler whose padded shapes are sized for ``bucket`` targets.
+
+        Separate instances per bucket (never ``self.sampler``): each bucket
+        is a distinct set of static pad sizes, and a dedicated instance keeps
+        the serving path off the training sampler's scratch state.  All
+        bucket samplers share ``self.store``, so they resolve against the
+        SAME live generation and feed the same adaptive-policy/placement
+        traffic signals.
+        """
+        s = self._bucket_samplers.get(bucket)
+        if s is None:
+            scfg = dataclasses.replace(self.scfg, batch_size=int(bucket))
+            s = make_sampler(self.cfg.sampler, self.ds.graph, scfg,
+                             self.ds.features, self.ds.labels,
+                             train_idx=self.ds.train_idx, store=self.store)
+            self._bucket_samplers[bucket] = s
+        return s
+
+    def ensure_cache(self, rng: Optional[np.random.Generator] = None) -> None:
+        """Cold-start the cache generation (no-op for storeless samplers)."""
+        if isinstance(self.sampler, GNSSampler):
+            self.sampler.ensure_cache(rng)
+
+    def infer_prepare(self, node_ids: np.ndarray, bucket: Optional[int] = None,
+                      rng: Optional[np.random.Generator] = None,
+                      sampler=None) -> MiniBatch:
+        """Sample one inference minibatch padded to ``bucket`` targets.
+
+        The returned batch PINS the cache generation it was assembled
+        against (``MiniBatch.cache_gen``), so :meth:`infer_compute` reads a
+        matching slot-map/table pair even if an async refresh swaps the live
+        generation in between — the serving loop's in-flight safety contract.
+        Accounting follows the store's current mode (the server wraps this
+        in ``FeatureStore.serving``; :meth:`infer` suspends it entirely).
+
+        ``sampler`` overrides the per-bucket serving sampler (its pad sizes
+        must match ``bucket``) — the one-shot :meth:`infer` passes the
+        training sampler so it never duplicates the O(V) sampler scratch.
+        """
+        ids = np.asarray(node_ids, dtype=np.int64)
+        if bucket is None:
+            bucket = self.scfg.batch_size
+        assert len(ids) <= bucket, (len(ids), bucket)
+        if rng is None:
+            rng = np.random.default_rng(4321)
+        if sampler is None:
+            sampler = self._bucket_sampler(bucket)
+        else:
+            assert sampler.cfg.batch_size == bucket, (
+                sampler.cfg.batch_size, bucket)
+        if isinstance(sampler, GNSSampler):
+            if self.store.generation is None:
+                self.ensure_cache(rng)
+            sampler.adopt_generation()    # follow the live gen (monotonic)
+        return sampler.sample(ids, rng)
+
+    def infer_compute(self, mb: MiniBatch) -> np.ndarray:
+        """Run the compiled inference step on a prepared batch.
+
+        Returns logits ``[bucket, classes]`` (padded rows included — slice
+        the leading real rows off).  One jit cache entry per bucket shape:
+        the device table is an UNTRACED operand resolved per batch from the
+        batch's pinned generation, so generation swaps never retrace.
+        """
+        with shlib.use_mesh(self.mesh):
+            logits = self._logits_step(self.params,
+                                       jax.device_put(mb.device),
+                                       self._cache_table(mb))
+        return np.asarray(logits)
+
+    @property
+    def infer_step(self):
+        """The one compiled inference step (jit-cached per bucket shape)."""
+        return self._logits_step
+
+    def serve(self, serve_cfg=None):
+        """A :class:`repro.serve.GNSServer` over this engine (not started)."""
+        from repro.serve import GNSServer
+        return GNSServer(self, serve_cfg if serve_cfg is not None
+                         else self.cfg.serve)
+
     def infer(self, node_ids: np.ndarray) -> np.ndarray:
         """Mini-batch inference over arbitrary node ids.  [N, classes] f32.
 
-        The serving-shaped entry point: reuses the LIVE cache generation
-        (no refresh is triggered beyond the cold-start one), suspends all
-        traffic/policy accounting, and leaves the training state untouched —
-        so a fitted engine can interleave serving lookups with training
-        exactly like the production cache tier would.
+        The one-shot entry point: reuses the LIVE cache generation (no
+        refresh is triggered beyond the cold-start one), suspends all
+        traffic/policy accounting, and leaves the training state untouched.
+        For a request stream, use :meth:`serve` — the persistent loop
+        micro-batches into size buckets and feeds the adaptive policy.
         """
         ids = np.asarray(node_ids, dtype=np.int64)
         b = self.scfg.batch_size
         rng = np.random.default_rng(4321)
-        if isinstance(self.sampler, GNSSampler):
-            self.sampler.ensure_cache(rng)
+        self.ensure_cache(rng)
         out = np.zeros((len(ids), self.mcfg.num_classes), np.float32)
         if self.store is not None:
             self.store.record = False
@@ -398,12 +487,12 @@ class GNSEngine:
             for lo in range(0, len(ids), b):
                 chunk = ids[lo:lo + b]
                 targets = np.resize(chunk, b)    # wrap-pad the tail batch
-                mb = self.sampler.sample(targets, rng)
-                with shlib.use_mesh(self.mesh):
-                    logits = self._logits_step(self.params,
-                                               jax.device_put(mb.device),
-                                               self._cache_table(mb))
-                out[lo:lo + len(chunk)] = np.asarray(logits)[:len(chunk)]
+                # one-shot path: reuse the TRAINING sampler (documented as
+                # not concurrent with fit) — a bucket sampler here would
+                # duplicate its O(V) scratch for nothing
+                mb = self.infer_prepare(targets, bucket=b, rng=rng,
+                                        sampler=self.sampler)
+                out[lo:lo + len(chunk)] = self.infer_compute(mb)[:len(chunk)]
         finally:
             if self.store is not None:
                 self.store.record = True

@@ -22,6 +22,8 @@ at pod scale: the GNS ENGINE train step (``repro.gns.engine.make_train_step``
 All the machinery lives in :mod:`repro.gns.describe` (``GNSEngine.describe``
 reports the same record for an in-process config); this module keeps the
 production dimensions, the CLI, and the CI-reduced ``run(mesh=...)`` entry.
+``--diff A B`` (preset names or EngineConfig-JSON paths) prints the
+describe diff mode instead: declarative fields + lowering/traffic records.
 
 Emits the same roofline record as the LM cells ->
 benchmarks/results/dryrun/gnn-graphsage__train_1k__<mesh>.json
@@ -31,7 +33,7 @@ import json
 import sys
 
 from repro.gns.describe import (batch_structs, describe_lowering,   # noqa: F401
-                                placement_traffic_sim)
+                                diff, placement_traffic_sim)
 from repro.launch.mesh import make_production_mesh
 
 # paper Table 2: ogbn-papers100M; §4.1 setup
@@ -66,6 +68,25 @@ def run(multi_pod: bool = False, *, mesh=None, num_nodes: int = NUM_NODES,
         fast_path=fast_path)
 
 
+def _load_config(spec: str):
+    """A preset name (``quickstart``) or a path to an EngineConfig JSON."""
+    from pathlib import Path
+
+    from repro.gns import EngineConfig, PRESETS
+    if spec in PRESETS:
+        return EngineConfig.preset(spec)
+    return EngineConfig.from_dict(json.loads(Path(spec).read_text()))
+
+
+def main_diff(spec_a: str, spec_b: str) -> int:
+    """``--diff A B``: the describe() diff mode — compare two configs'
+    declarative fields and their lowering/traffic records.  Exit status
+    follows ``diff(1)`` convention: 0 = identical, 1 = they differ."""
+    rec = diff(_load_config(spec_a), _load_config(spec_b))
+    print(json.dumps(rec, indent=1, default=str))
+    return 0 if rec["same"] else 1
+
+
 def main():
     from pathlib import Path
     outdir = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
@@ -90,4 +111,11 @@ def main():
 
 
 if __name__ == "__main__":
+    if "--diff" in sys.argv:
+        i = sys.argv.index("--diff")
+        if len(sys.argv) < i + 3:
+            print("usage: dryrun_gnn.py --diff <preset|config.json> "
+                  "<preset|config.json>", file=sys.stderr)
+            sys.exit(2)
+        sys.exit(main_diff(sys.argv[i + 1], sys.argv[i + 2]))
     sys.exit(main())

@@ -1,0 +1,40 @@
+"""GNS serving subsystem: persistent request loop off the live cache.
+
+Public surface:
+
+* :class:`GNSServer` — bounded request queue + single-worker serving loop
+  over a :class:`~repro.gns.GNSEngine`; ``submit()`` / ``infer()`` /
+  ``start()`` / ``stop()`` (or use it as a context manager).
+* :class:`ServeConfig` — the declarative sub-block (``EngineConfig.serve``):
+  size buckets, queue bound, batching window, deadlines, serving-driven
+  refresh cadence.
+* :class:`MicroBatcher` — dynamic micro-batching into size buckets (one
+  compiled inference step per bucket, zero steady-state recompilation).
+* :class:`ServeMeter` / :class:`BatchRecord` — per-request latency
+  (queue wait vs compute, p50/p99), admission/outcome counters, the
+  serving-side :class:`~repro.featurestore.TrafficMeter` view and the
+  cache-hit trajectory.
+* :class:`ServeResult` / :class:`ServeFuture` and the control-flow errors
+  :class:`QueueFull` / :class:`ServerClosed`.
+
+Quickstart::
+
+    from repro.gns import EngineConfig, GNSEngine
+
+    engine = GNSEngine(EngineConfig.preset("quickstart"))
+    with engine.serve() as server:
+        fut = server.submit(node_ids)          # micro-batched + bucketed
+        logits = fut.result(timeout=10).logits
+    print(server.meter.snapshot())             # p50/p99, hit rate, rejects
+"""
+from repro.gns.config import ServeConfig
+from repro.serve.batcher import MicroBatcher
+from repro.serve.metrics import BatchRecord, ServeMeter
+from repro.serve.server import (GNSServer, QueueFull, ServeFuture,
+                                ServeResult, ServerClosed)
+
+__all__ = [
+    "GNSServer", "ServeConfig", "MicroBatcher",
+    "ServeMeter", "BatchRecord",
+    "ServeResult", "ServeFuture", "QueueFull", "ServerClosed",
+]

@@ -1,0 +1,128 @@
+"""Serving-side accounting: per-request latency + a TrafficMeter view.
+
+The training loop's :class:`~repro.featurestore.meter.TrafficMeter` answers
+"where did the bytes go"; a serving tier additionally has to answer "where
+did the *milliseconds* go, per request".  :class:`ServeMeter` owns both:
+
+* ``traffic`` — a dedicated :class:`TrafficMeter` the feature store routes
+  serving lookups into (``FeatureStore.serving`` scope), so the serving
+  cache-hit rate, streamed bytes and cross-shard lanes are readable without
+  untangling them from training traffic;
+* per-request latency records split into **queue wait** (submit → the
+  micro-batcher dequeues it into a batch) and **compute** (sample + step +
+  readback for the batch it rode), with p50/p99 over a bounded rolling
+  window;
+* admission/outcome counters (submitted / rejected / expired / served /
+  deadline_miss / errors) — the backpressure ledger;
+* the **cache-hit trajectory**: per-batch device-tier hit fraction, the
+  signal that shows the adaptive policy converging onto the inference hot
+  set after a serving-driven refresh (`bench_serve.run_trajectory`).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Deque, Optional
+
+import numpy as np
+
+from repro.featurestore.meter import TrafficMeter
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    """One served micro-batch (host-side bookkeeping, never traced)."""
+    bucket: int                 # padded batch size shipped to the device
+    n_requests: int             # requests coalesced into it
+    n_ids: int                  # real target rows (<= bucket)
+    compute_s: float            # sample + compiled step + readback
+    cache_version: int          # generation the batch was pinned to (-1 none)
+    hit_fraction: float         # device-tier hits / requested input nodes
+
+
+class ServeMeter:
+    """Latency + traffic accounting for one :class:`GNSServer`."""
+
+    def __init__(self, latency_window: int = 2048):
+        self.traffic = TrafficMeter()       # serving-side tier view
+        self.lock = threading.Lock()        # guards the ADMISSION counters:
+                                            # submit() increments them from
+                                            # arbitrary client threads (all
+                                            # other counters are worker-only)
+        self.submitted = 0
+        self.rejected = 0                   # admission control (queue full)
+        self.expired = 0                    # deadline passed while queued
+        self.served = 0
+        self.deadline_miss = 0              # served, but past its deadline
+        self.errors = 0
+        self.refresh_failures = 0           # failed serving-driven builds
+        self.batches = 0
+        self.padded_rows = 0                # sum of buckets shipped
+        self.real_rows = 0                  # sum of real target rows
+        self.swaps_observed = 0             # generation adoptions mid-stream
+        self._queue_wait: Deque[float] = collections.deque(maxlen=latency_window)
+        self._compute: Deque[float] = collections.deque(maxlen=latency_window)
+        self._total: Deque[float] = collections.deque(maxlen=latency_window)
+        self.batch_log: Deque[BatchRecord] = collections.deque(maxlen=latency_window)
+
+    # ------------------------------------------------------------------
+    def observe_request(self, queue_wait_s: float, compute_s: float,
+                        total_s: float) -> None:
+        self._queue_wait.append(queue_wait_s)
+        self._compute.append(compute_s)
+        self._total.append(total_s)
+
+    def observe_batch(self, rec: BatchRecord) -> None:
+        self.batches += 1
+        self.padded_rows += rec.bucket
+        self.real_rows += rec.n_ids
+        self.batch_log.append(rec)
+
+    # ------------------------------------------------------------------
+    @property
+    def cache_hit_rate(self) -> float:
+        """Device-tier hit rate over ALL serving lookups so far."""
+        return self.traffic.tier("device").hit_rate
+
+    def hit_trajectory(self) -> list:
+        """Per-batch device-tier hit fraction, oldest first."""
+        return [r.hit_fraction for r in self.batch_log]
+
+    def generation_trail(self) -> list:
+        """Per-batch pinned cache version, oldest first (monotonic by the
+        adoption contract — asserted in tests/test_gns_server.py)."""
+        return [r.cache_version for r in self.batch_log]
+
+    @property
+    def fill_fraction(self) -> float:
+        """Real rows / padded rows shipped — micro-batching efficiency."""
+        return self.real_rows / self.padded_rows if self.padded_rows else 0.0
+
+    def percentiles(self) -> dict:
+        out = {}
+        for name, buf in (("queue_wait", self._queue_wait),
+                          ("compute", self._compute),
+                          ("total", self._total)):
+            if buf:
+                arr = np.asarray(buf, dtype=np.float64)
+                out[f"{name}_p50_ms"] = round(float(np.percentile(arr, 50)) * 1e3, 3)
+                out[f"{name}_p99_ms"] = round(float(np.percentile(arr, 99)) * 1e3, 3)
+            else:
+                out[f"{name}_p50_ms"] = out[f"{name}_p99_ms"] = None
+        return out
+
+    def snapshot(self) -> dict:
+        """JSON-safe summary (what `bench_serve` and the example print)."""
+        return {
+            "submitted": self.submitted, "served": self.served,
+            "rejected": self.rejected, "expired": self.expired,
+            "deadline_miss": self.deadline_miss, "errors": self.errors,
+            "refresh_failures": self.refresh_failures,
+            "batches": self.batches,
+            "fill_fraction": round(self.fill_fraction, 4),
+            "cache_hit_rate": round(self.cache_hit_rate, 4),
+            "swaps_observed": self.swaps_observed,
+            **self.percentiles(),
+            "traffic": self.traffic.breakdown(),
+        }

@@ -75,27 +75,12 @@ def test_auto_strategy_switches(g):
     assert not np.allclose(p_small, p_deg)
 
 
-# ---------------------------------------------------------------------------
-# deprecated import paths (PR 4): one-release re-export shims
-# ---------------------------------------------------------------------------
-
-def test_core_cache_shims_warn_and_reexport():
-    """`repro.core.cache` / `repro.core.device_cache` are deprecation
-    re-exports: importing them warns once, and every forwarded name is THE
-    featurestore object (not a copy)."""
+def test_core_cache_shims_are_gone():
+    """The PR-4 one-release deprecation shims (`repro.core.cache` /
+    `repro.core.device_cache`) served their release and are removed — the
+    only import path is `repro.featurestore`."""
     import importlib
-    import sys
 
     for mod in ("repro.core.cache", "repro.core.device_cache"):
-        sys.modules.pop(mod, None)
-        with pytest.warns(DeprecationWarning, match="deprecated"):
+        with pytest.raises(ModuleNotFoundError):
             importlib.import_module(mod)
-
-    from repro.core.cache import CacheConfig as ShimConfig
-    from repro.core.cache import sample_cache as shim_sample
-    from repro.core.device_cache import TrafficMeter as ShimMeter
-    from repro.featurestore import CacheConfig, TrafficMeter
-    from repro.featurestore import sample_cache as real_sample
-    assert ShimConfig is CacheConfig
-    assert shim_sample is real_sample
-    assert ShimMeter is TrafficMeter

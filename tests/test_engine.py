@@ -29,7 +29,7 @@ import pytest
 
 from repro.core.sampler import SamplerConfig
 from repro.featurestore import CacheConfig
-from repro.gns import EngineConfig, GNSEngine, collate_groups
+from repro.gns import EngineConfig, GNSEngine, ServeConfig, collate_groups
 from repro.gns.config import DataConfig, MeshConfig, ModelConfig
 from repro.graph.datasets import get_dataset
 
@@ -72,6 +72,9 @@ def test_engine_config_round_trips_through_dict():
                           refresh_timeout_s=1.5),
         model=ModelConfig(hidden_dim=64, input_impl="fused"),
         mesh=MeshConfig(data=2, model=2),
+        serve=ServeConfig(buckets=(16, 64), max_queue=32, max_wait_ms=1.5,
+                          default_deadline_ms=250.0, refresh_every=8,
+                          latency_window=64),
         seed=11, prefetch=True)
     d = cfg.to_dict()
     json.dumps(d)                       # JSON-safe, whole tree
@@ -134,6 +137,26 @@ def test_engine_describe_without_mesh(tiny_ds):
     assert rec["status"] == "ok" and rec["mesh"] is None
     assert rec["cache_rows"] > 0
     assert rec["input_rows_per_batch"] > 0
+
+
+def test_describe_diff_mode(tiny_ds):
+    """gns.describe.diff: identical configs diff as same (volatile keys
+    excluded); a cache-fraction change shows up in BOTH the config layer
+    and the lowering/traffic record layer."""
+    from repro.gns.describe import diff, diff_records
+
+    a = _tiny_cfg()
+    b = dataclasses.replace(a, cache=CacheConfig(fraction=0.2, period=1))
+    same = diff(a, a, dataset_a=tiny_ds, dataset_b=tiny_ds)
+    assert same["same"] and same["record"]["same"], same
+    d = diff(a, b, dataset_a=tiny_ds, dataset_b=tiny_ds)
+    assert not d["same"]
+    assert "cache.fraction" in d["config"]["changed"]
+    assert "cache_rows" in d["record"]["changed"]
+    # records with different keys land in only_a/only_b, not changed
+    r = diff_records({"x": 1, "both": 2}, {"y": 3, "both": 2})
+    assert r["only_a"] == {"x": 1} and r["only_b"] == {"y": 3}
+    assert not r["changed"] and not r["same"]
 
 
 def test_engine_ns_sampler_has_no_store(tiny_ds):
