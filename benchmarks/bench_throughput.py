@@ -17,6 +17,31 @@ FIELDS = ["dataset", "sampler", "f1", "epoch_time_s",
           "input_nodes_per_batch", "speedup_vs_ns"]
 
 
+BACKEND_FIELDS = ["dataset", "sampler", "backend", "f1", "epoch_time_s",
+                  "prefetch_wait_s", "input_nodes_per_batch"]
+
+
+def run_backend(fast: bool = True) -> list:
+    """Host vs device GNS sampling backend, prefetched (ISSUE 6 tentpole).
+
+    Both rows run the same bench_ci GNS config with the prefetcher on; the
+    device backend moves the layer-0 draw + gather into the compiled step,
+    so the host-side sampler does less work per batch — visible as a lower
+    ``prefetch_wait_s`` (time fit() blocked on the sampler thread) and a
+    lower epoch time.
+    """
+    scale = 0.15 if fast else 1.0
+    epochs = 2 if fast else 10
+    rows = []
+    for backend in ("host", "device"):
+        r = run_trainer("ogbn-products", "gns", epochs=epochs, scale=scale,
+                        max_batches=30 if fast else None,
+                        backend=backend, prefetch=True)
+        r["prefetch_wait_s"] = r["breakdown"].get("prefetch_wait_s")
+        rows.append(r)
+    return emit("backend_sampling", rows, BACKEND_FIELDS)
+
+
 def run(fast: bool = True) -> list:
     datasets = ["yelp", "ogbn-products"] if fast else [
         "yelp", "amazon", "oag-paper", "ogbn-products", "ogbn-papers"]
@@ -37,3 +62,4 @@ def run(fast: bool = True) -> list:
 
 if __name__ == "__main__":
     run(fast=True)
+    run_backend(fast=True)

@@ -35,8 +35,8 @@ CI_CACHE_FRACTION = CI_PRESET.cache.fraction
 
 def engine_config(sampler: str, *, batch_size=None, cache_fraction=None,
                   cache_period=None, cache_strategy=None, cache_async=None,
-                  layer_size=None, fanouts=None, seed: int = 0
-                  ) -> EngineConfig:
+                  layer_size=None, fanouts=None, backend=None, prefetch=None,
+                  seed: int = 0) -> EngineConfig:
     """The bench_ci preset with explicit field overrides (None = preset)."""
     cfg = CI_PRESET
     cache = dataclasses.replace(
@@ -48,16 +48,19 @@ def engine_config(sampler: str, *, batch_size=None, cache_fraction=None,
     sampling = dataclasses.replace(
         cfg.sampling,
         **{k: v for k, v in dict(batch_size=batch_size, layer_size=layer_size,
-                                 fanouts=fanouts).items() if v is not None})
+                                 fanouts=fanouts, backend=backend).items()
+           if v is not None})
+    top = {k: v for k, v in dict(prefetch=prefetch).items() if v is not None}
     return dataclasses.replace(cfg, sampler=sampler, sampling=sampling,
-                               cache=cache, seed=seed)
+                               cache=cache, seed=seed, **top)
 
 
 def run_trainer(dataset: str, sampler: str, *, epochs: int = 2,
                 scale: float = 0.25, batch_size: int = None,
                 cache_fraction: float = None, cache_period: int = None,
                 cache_strategy: str = None, cache_async: bool = None,
-                layer_size: int = None, fanouts=None, seed: int = 0,
+                layer_size: int = None, fanouts=None, backend: str = None,
+                prefetch: bool = None, seed: int = 0,
                 eval_batches: int = 8, max_batches=None):
     ds = get_dataset(dataset, scale=scale, seed=seed)
     cfg = engine_config(sampler, batch_size=batch_size,
@@ -65,7 +68,8 @@ def run_trainer(dataset: str, sampler: str, *, epochs: int = 2,
                         cache_period=cache_period,
                         cache_strategy=cache_strategy,
                         cache_async=cache_async, layer_size=layer_size,
-                        fanouts=fanouts, seed=seed)
+                        fanouts=fanouts, backend=backend, prefetch=prefetch,
+                        seed=seed)
     eng = GNSEngine(cfg, dataset=ds)
     t0 = time.perf_counter()
     rep = eng.fit(epochs, max_batches=max_batches, eval_every=epochs,
@@ -73,6 +77,7 @@ def run_trainer(dataset: str, sampler: str, *, epochs: int = 2,
     wall = time.perf_counter() - t0
     return {
         "dataset": dataset, "sampler": sampler, "epochs": epochs,
+        "backend": cfg.sampling.backend,
         "nodes": ds.graph.num_nodes, "edges": ds.graph.num_edges,
         "f1": rep.val_acc[-1] if rep.val_acc else float("nan"),
         "loss": rep.losses[-1],

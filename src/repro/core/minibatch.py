@@ -47,13 +47,25 @@ class LayerBlock:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class DeviceBatch:
-    """The traced pytree a train/eval step consumes."""
+    """The traced pytree a train/eval step consumes.
+
+    The last three fields are populated only by the device-backend GNS
+    sampler (``repro.sampling.device_sampler``): host-sampled fallback
+    lanes for input rows the cache does not cover, and the batch's
+    stateless-RNG key for the on-device layer-0 draw.  Host-backend
+    batches leave them ``None`` (the pytree simply has fewer leaves).
+    """
     blocks: tuple                  # tuple[LayerBlock], input -> output order
     input_cache_slots: np.ndarray  # int32 [S0]  slot in device cache or -1
     input_streamed: np.ndarray     # f32 [S0, F] host-gathered rows (0 for hits)
     input_mask: np.ndarray         # f32 [S0]
     labels: np.ndarray             # int32 [B]
     label_mask: np.ndarray         # f32 [B]
+    input_fb_rows: object = None   # int32 [S0, K0] host-fallback lanes as
+                                   # device-table rows (-1 = dead lane)
+    input_fb_w: object = None      # f32 [S0, K0] fallback lane weights
+    sample_key: object = None      # uint32 [G, 2] per-batch draw key
+                                   # (G = collated DP groups)
 
 
 @dataclasses.dataclass

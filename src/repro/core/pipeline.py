@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Iterator, Optional
 
 import numpy as np
@@ -99,21 +100,38 @@ class EpochLoader:
             if store is not None and self.dp_groups > 1:
                 store.dp_group = i % self.dp_groups
             targets = self.train_idx[perm[i * b:(i + 1) * b]]
-            yield self.sampler.sample(targets, rng)
+            # per-batch seeded generator: batch (epoch, i) draws the same
+            # sample no matter how the prefetcher thread interleaves with
+            # cache refreshes or how many batches preceded it — the
+            # host-vs-device statistical parity tests (and any replay)
+            # depend on this; the epoch rng above stays dedicated to the
+            # permutation + cache lifecycle
+            batch_rng = np.random.default_rng(
+                np.random.SeedSequence((self.seed & 0xFFFFFFFF, epoch, i)))
+            yield self.sampler.sample(targets, batch_rng)
 
 
 class Prefetcher:
-    """Bounded-queue background prefetch with straggler timeout."""
+    """Bounded-queue background prefetch with straggler timeout.
+
+    ``wait_s`` accumulates the consumer's time blocked on the queue — the
+    *sampler-stall* metric (ROADMAP item 2): when the host sampler is the
+    bottleneck the consumer idles here instead of stepping the device.
+    With ``meter`` set, the same time lands on
+    ``TrafficMeter.t_prefetch_wait`` so the benchmark breakdown reports it.
+    """
 
     _SENTINEL = object()
 
     def __init__(self, it: Iterator[MiniBatch], depth: int = 2,
-                 timeout_s: Optional[float] = None):
+                 timeout_s: Optional[float] = None, meter=None):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._timeout = timeout_s
+        self._meter = meter
         self._err: Optional[BaseException] = None
         self._last: Optional[MiniBatch] = None
         self.reused = 0                       # straggler-mitigation reuse count
+        self.wait_s = 0.0                     # consumer time blocked on queue
         self._thread = threading.Thread(target=self._run, args=(it,), daemon=True)
         self._thread.start()
 
@@ -126,18 +144,29 @@ class Prefetcher:
         finally:
             self._q.put(self._SENTINEL)
 
+    def _note_wait(self, dt: float):
+        self.wait_s += dt
+        if self._meter is not None:
+            self._meter.t_prefetch_wait += dt
+
     def __iter__(self):
         while True:
+            t0 = time.perf_counter()
             try:
                 item = self._q.get(timeout=self._timeout)
             except queue.Empty:
+                self._note_wait(time.perf_counter() - t0)
                 # straggler: reuse the last batch instead of stalling the step
                 if self._last is None:
+                    t1 = time.perf_counter()
                     item = self._q.get()      # nothing to reuse yet: block
+                    self._note_wait(time.perf_counter() - t1)
                 else:
                     self.reused += 1
                     yield self._last
                     continue
+            else:
+                self._note_wait(time.perf_counter() - t0)
             if item is self._SENTINEL:
                 if self._err is not None:
                     raise self._err

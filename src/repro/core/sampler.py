@@ -47,6 +47,10 @@ class SamplerConfig:
     # GNS
     cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
     importance_mode: str = "ht"            # "ht" | "paper"  (see importance.py)
+    backend: str = "host"                  # "host" | "device" — where the GNS
+                                           # input layer draws (device = the
+                                           # fused Pallas/jnp sampler over the
+                                           # generation's cache_adj CSR)
     # LADIES
     layer_size: int = 512                  # nodes sampled per layer
     lane_cap: int = 32                     # max edges kept per dst row (HT-subsampled)
@@ -520,6 +524,12 @@ def make_sampler(name: str, graph: CSRGraph, cfg: SamplerConfig,
                  train_idx: Optional[np.ndarray] = None,
                  store: Optional[FeatureStore] = None):
     if name == "gns":
+        if getattr(cfg, "backend", "host") == "device":
+            # lazy import: keeps core.sampler importable without jax and
+            # avoids the sampler <-> sampling package cycle
+            from repro.sampling.device_sampler import DeviceGNSSampler
+            return DeviceGNSSampler(graph, cfg, features, labels,
+                                    train_idx=train_idx, store=store)
         return GNSSampler(graph, cfg, features, labels, train_idx=train_idx,
                           store=store)
     return SAMPLERS[name](graph, cfg, features, labels)

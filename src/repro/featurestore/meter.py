@@ -67,6 +67,10 @@ class TrafficMeter:
     t_copy: float = 0.0
     t_compute: float = 0.0
     t_refresh: float = 0.0         # background cache-generation build time
+    t_prefetch_wait: float = 0.0   # consumer time blocked on the prefetch
+                                   # queue (sampler-stall; ROADMAP item 2's
+                                   # success metric — device-backend sampling
+                                   # exists to drive this to ~0)
     steps: int = 0
     tiers: Dict[str, TierStats] = dataclasses.field(default_factory=dict)
     group_hist: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
@@ -128,6 +132,7 @@ class TrafficMeter:
             "compute_s": round(self.t_compute, 4),
             "total_s": round(total, 4),
             "refresh_s": round(self.t_refresh, 4),
+            "prefetch_wait_s": round(self.t_prefetch_wait, 4),
             "bytes_streamed": self.bytes_streamed,
             "bytes_cache_fill": self.bytes_cache_fill,
             "bytes_cache_upload": self.bytes_cache_upload,

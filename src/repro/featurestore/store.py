@@ -228,6 +228,12 @@ class Generation:
     staged_idx: int             # which double-buffer half `staged` is
     lam: Optional[float] = None  # calibrated inclusion λ (importance.py)
     cache_adj: object = None    # induced cached-neighbor CSR (GNS §3.3)
+    device_adj: object = None   # repro.sampling.DeviceCacheAdj — the same
+                                # CSR restricted to cached nodes as DEVICE
+                                # arrays in device-row order (backend="device"
+                                # sampling); rides the atomic swap with the
+                                # table so structure and features publish
+                                # together
     retired: bool = False       # staging half recycled by a newer build
 
     @property
@@ -241,7 +247,9 @@ class Generation:
         scale.  The sampler adopts each new generation long before its
         predecessor's staging half is recycled, so nothing reads these
         fields from a retired generation (gather_rows falls back to the
-        host tier)."""
+        host tier).  ``device_adj`` is KEPT: like the table it is
+        device-resident (no O(V) host memory) and a queued batch replayed
+        against this generation still needs its draw structure."""
         self.retired = True
         self.cache_adj = None
         self.state.probs = None
@@ -296,6 +304,10 @@ class FeatureStore:
         self.dtype = dtype
         self.importance_mode = importance_mode
         self.build_adjacency = build_adjacency
+        self.build_device_adj = False   # also materialize the device-row
+                                        # cache_adj CSR per generation
+                                        # (backend="device" sampling; set by
+                                        # DeviceGNSSampler before first build)
         self.size = cfg.size(graph.num_nodes)
         self.feat_dim = features.shape[1]
         self._row_bytes = self.feat_dim * 4
@@ -572,8 +584,16 @@ class FeatureStore:
         lam = self._solve_lambda(probs)
         adj = (self.graph.induced_cache_adjacency(state.in_cache)
                if self.build_adjacency else None)
+        dev_adj = None
+        if self.build_device_adj and adj is not None:
+            # lazy import: featurestore stays jax-free until a device
+            # generation is actually built
+            from repro.sampling.adjacency import build_device_cache_adj
+            dev_adj = build_device_cache_adj(state, adj, self.graph.degrees,
+                                             lam=lam)
         gen = Generation(state=state, table=tbl, staged=buf,
-                         staged_idx=staged_idx, lam=lam, cache_adj=adj)
+                         staged_idx=staged_idx, lam=lam, cache_adj=adj,
+                         device_adj=dev_adj)
         self._staging_owner[staged_idx] = gen
         self.meter.bytes_cache_fill += n * self._row_bytes
         self.meter.t_refresh += time.perf_counter() - t0

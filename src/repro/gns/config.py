@@ -64,6 +64,10 @@ class ModelConfig:
     aggregate_impl: str = "reference"   # "reference" | "pallas"
     input_impl: str = "where"           # "where" | "fused"
     input_kernel: str = "pallas"        # fused backend: "pallas" | "reference"
+    sample_kernel: str = "auto"         # device-sampling gather backend:
+                                        # "auto" (pallas on TPU, jnp
+                                        # reference elsewhere) | "pallas" |
+                                        # "reference"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +106,25 @@ class ServeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class RefreshConfig:
+    """ONE async-refresh schedule for every surface that kicks refreshes.
+
+    Before this, the training path (``CacheConfig.period`` /
+    ``async_refresh``) and the serving path (``ServeConfig.refresh_every``)
+    were configured independently and could disagree on whether refreshes
+    run at all.  ``EngineConfig.refresh`` is the single hint: when set, it
+    overrides the corresponding fields of both sub-configs at build time
+    (:meth:`EngineConfig.cache_config` / :meth:`EngineConfig.serve_config`).
+    When ``None``, the sub-configs stand alone exactly as before.
+    """
+    period: int = 1                 # training: refresh every N epochs
+    async_refresh: bool = False     # training: build next gen off-thread
+    serve_every: Optional[int] = None
+                                    # serving: async refresh every N served
+                                    # batches (None = never while serving)
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """One declarative description of a GNS run (see module docstring)."""
     sampler: str = "gns"                # ns | gns | ladies | lazygcn
@@ -114,15 +137,35 @@ class EngineConfig:
         default_factory=lambda: AdamConfig(lr=3e-3))
     mesh: Optional[MeshConfig] = None
     serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
+    refresh: Optional[RefreshConfig] = None
+                                        # unified refresh hint (overrides
+                                        # cache.period/async_refresh AND
+                                        # serve.refresh_every when set)
     seed: int = 0
     prefetch: bool = False              # fit() default (overridable per call)
 
     # ------------------------------------------------------------------
+    def cache_config(self) -> CacheConfig:
+        """``EngineConfig.cache`` with the unified refresh hint applied."""
+        if self.refresh is None:
+            return self.cache
+        return dataclasses.replace(self.cache, period=self.refresh.period,
+                                   async_refresh=self.refresh.async_refresh)
+
+    def serve_config(self) -> ServeConfig:
+        """``EngineConfig.serve`` with the unified refresh hint applied."""
+        if self.refresh is None:
+            return self.serve
+        return dataclasses.replace(self.serve,
+                                   refresh_every=self.refresh.serve_every)
+
     def sampler_config(self) -> SamplerConfig:
         """The sampler config with THE cache config injected — the one
         object handed to ``make_sampler``/``FeatureStore`` so
-        ``EngineConfig.cache`` and ``sampling.cache`` cannot diverge."""
-        return dataclasses.replace(self.sampling, cache=self.cache)
+        ``EngineConfig.cache`` and ``sampling.cache`` cannot diverge (and,
+        via :meth:`cache_config`, so the refresh hint reaches the sampler
+        path too)."""
+        return dataclasses.replace(self.sampling, cache=self.cache_config())
 
     # ------------------------------------------------------------------
     # dict round-trip (JSON-safe)
@@ -197,6 +240,7 @@ _NESTED = {
     (EngineConfig, "optim"): AdamConfig,
     (EngineConfig, "mesh"): MeshConfig,
     (EngineConfig, "serve"): ServeConfig,
+    (EngineConfig, "refresh"): RefreshConfig,
     (SamplerConfig, "cache"): CacheConfig,
 }
 

@@ -27,7 +27,8 @@ from repro.core.minibatch import block_pad_sizes
 from repro.optim.adam import AdamConfig
 
 
-def batch_structs(mesh, batch, fanouts, feat_dim, cache_axis=None):
+def batch_structs(mesh, batch, fanouts, feat_dim, cache_axis=None,
+                  backend="host"):
     """ShapeDtypeStruct DeviceBatch + shardings (batch dims on the DP axes).
 
     Group-aware: ``batch`` is the GLOBAL target count; block pads are built
@@ -35,6 +36,11 @@ def batch_structs(mesh, batch, fanouts, feat_dim, cache_axis=None):
     group-first, exactly the layout ``gns.engine.collate_groups`` produces —
     so the lowered step is the one the engine runs.  The global shapes match
     the ungrouped pads (the pad chain is multiplicative in the batch).
+
+    ``backend="device"`` lowers the device-sampler batch: the input block is
+    the placeholder (one dead lane, src == dst == D0 — no layer-0 neighbor
+    lanes ship) and the batch carries the fallback lanes + per-group sample
+    key the fused draw consumes.
     """
     import jax
     import jax.numpy as jnp
@@ -57,9 +63,13 @@ def batch_structs(mesh, batch, fanouts, feat_dim, cache_axis=None):
     def sh(*parts):
         return NamedSharding(mesh, P(*parts))
 
+    device = backend == "device"
     blocks, blocks_sh = [], []
     for li, (d, s) in enumerate(pads):
-        k = fanouts[li]
+        if li == 0 and device:
+            k, s = 1, d              # placeholder input block (device draw)
+        else:
+            k = fanouts[li]
         blocks.append(LayerBlock(
             nbr_idx=sd((groups * d, k), jnp.int32),
             nbr_w=sd((groups * d, k), jnp.float32),
@@ -67,21 +77,28 @@ def batch_structs(mesh, batch, fanouts, feat_dim, cache_axis=None):
         blocks_sh.append(LayerBlock(
             nbr_idx=sh(dp, None), nbr_w=sh(dp, None), dst_mask=sh(dp),
             num_src=s, num_dst=d))
-    s0 = groups * pads[0][1]
+    s0 = groups * (pads[0][0] if device else pads[0][1])
+    k0 = fanouts[0]
     batch_struct = DeviceBatch(
         blocks=tuple(blocks),
         input_cache_slots=sd((s0,), jnp.int32),
         input_streamed=sd((s0, feat_dim), jnp.float32),
         input_mask=sd((s0,), jnp.float32),
         labels=sd((batch,), jnp.int32),
-        label_mask=sd((batch,), jnp.float32))
+        label_mask=sd((batch,), jnp.float32),
+        input_fb_rows=sd((s0, k0), jnp.int32) if device else None,
+        input_fb_w=sd((s0, k0), jnp.float32) if device else None,
+        sample_key=sd((groups, 2), jnp.uint32) if device else None)
     batch_sh = DeviceBatch(
         blocks=tuple(blocks_sh),
         input_cache_slots=sh(dp),
         input_streamed=sh(dp, None),
         input_mask=sh(dp),
         labels=sh(dp),
-        label_mask=sh(dp))
+        label_mask=sh(dp),
+        input_fb_rows=sh(dp, None) if device else None,
+        input_fb_w=sh(dp, None) if device else None,
+        sample_key=sh(dp, None) if device else None)
     home_struct = sd((groups,), jnp.int32)
     home_sh = sh(dp)
     return batch_struct, batch_sh, home_struct, home_sh
@@ -139,16 +156,25 @@ def placement_traffic_sim(cache_rows: int, n_shards: int, n_groups: int,
 
 def traffic_report(*, num_nodes: int, feat_dim: int, cache_frac: float,
                    batch: int, fanouts, n_shards: int = 1,
-                   meter=None) -> dict:
-    """Host-side subset of the record: no mesh, no lowering."""
+                   meter=None, backend: str = "host") -> dict:
+    """Host-side subset of the record: no mesh, no lowering.
+
+    ``backend="device"`` reports the device-resident sampling lowering: the
+    input block degenerates to its dst rows (the layer-0 neighbor lanes are
+    drawn inside the step against the generation's cache_adj CSR), so the
+    per-batch input rows — and the worst-case streamed bytes — shrink by
+    the (1 + k0) input-fanout factor.
+    """
     from repro.featurestore import FeatureStore
 
     cache_rows = FeatureStore.padded_rows(num_nodes, cache_frac,
                                           multiple=max(n_shards, 1))
     table_bytes = cache_rows * feat_dim * 4
-    s0 = block_pad_sizes(batch, fanouts)[0][1]
+    pads = block_pad_sizes(batch, fanouts)
+    s0 = pads[0][0] if backend == "device" else pads[0][1]
     rec = {
         "arch": "gnn-graphsage-gns", "status": "ok", "mesh": None,
+        "sampler_backend": backend,
         "cache_rows": cache_rows, "cache_table_bytes": table_bytes,
         "input_rows_per_batch": s0,
         "streamed_bytes_per_batch_worstcase": s0 * feat_dim * 4,
@@ -164,12 +190,22 @@ def describe_lowering(*, mesh, num_nodes: int, feat_dim: int,
                       input_impl: str = "fused",
                       input_kernel: str = "reference",
                       fast_path: str = "dynamic",
+                      backend: str = "host",
+                      sample_kernel: str = "reference",
+                      avg_degree: int = 16,
                       optim: AdamConfig = None) -> dict:
     """Lower + compile the engine train step on ``mesh``; return the record.
 
     ``batch`` is global (one minibatch per DP group, collated); the step
     lowered is ``gns.engine.make_train_step`` — byte-for-byte the function
     ``GNSEngine`` jits in process.
+
+    ``backend="device"`` lowers the device-resident sampling step instead:
+    the batch structs carry the placeholder input block + fallback lanes +
+    sample key, a replicated :class:`~repro.sampling.DeviceCacheAdj` struct
+    (``avg_degree`` sizes its indices capacity — shapes only, no data)
+    feeds the fused draw→gather, and the input-row/streamed-bytes terms
+    shrink by the (1 + k0) factor the device draw removes.
     """
     import jax
     import jax.numpy as jnp
@@ -194,6 +230,7 @@ def describe_lowering(*, mesh, num_nodes: int, feat_dim: int,
                                 num_layers=len(fanouts),
                                 input_impl=input_impl,
                                 input_kernel=input_kernel,
+                                sample_kernel=sample_kernel,
                                 cache_shard_axis=cache_axis,
                                 num_groups=groups)
     opt = AdamW(optim or AdamConfig(lr=3e-3))
@@ -212,10 +249,35 @@ def describe_lowering(*, mesh, num_nodes: int, feat_dim: int,
     cache_struct = jax.ShapeDtypeStruct((cache_rows, feat_dim), jnp.float32)
     cache_sh = NamedSharding(mesh, P(cache_axis, None))    # row-sharded cache
     b_structs, b_sh, home_struct, home_sh = batch_structs(
-        mesh, batch, fanouts, feat_dim, cache_axis)
+        mesh, batch, fanouts, feat_dim, cache_axis, backend=backend)
+
+    adj_struct = adj_sh = None
+    if backend == "device":
+        # the device CSR structs (replicated — the draw stays global, only
+        # the gather shard_maps); indices capacity mirrors the power-of-two
+        # sizing of build_device_cache_adj at the estimated nnz
+        from repro.sampling.adjacency import DeviceCacheAdj
+        nnz = max(1024, cache_rows * avg_degree)
+        cap = 1 << (nnz - 1).bit_length()
+        repl = NamedSharding(mesh, P())
+        adj_struct = DeviceCacheAdj(
+            indptr=jax.ShapeDtypeStruct((cache_rows + 1,), jnp.int32),
+            indices=jax.ShapeDtypeStruct((cap,), jnp.int32),
+            deg=jax.ShapeDtypeStruct((cache_rows,), jnp.float32),
+            hitp=jax.ShapeDtypeStruct((cache_rows,), jnp.float32))
+        adj_sh = DeviceCacheAdj(indptr=repl, indices=repl, deg=repl,
+                                hitp=repl)
 
     base_step = make_train_step(mcfg, opt)
-    if fast_path == "dynamic":
+    if fast_path == "dynamic" and backend == "device":
+        def train_step(params, opt_state, batch_, cache_table, home, adj):
+            p, o, loss, _ = base_step(params, opt_state, batch_, cache_table,
+                                      home, adj)
+            return p, o, loss
+        args = (p_structs, o_structs, b_structs, cache_struct, home_struct,
+                adj_struct)
+        in_sh = (p_sh, o_sh, b_sh, cache_sh, home_sh, adj_sh)
+    elif fast_path == "dynamic":
         def train_step(params, opt_state, batch_, cache_table, home):
             p, o, loss, _ = base_step(params, opt_state, batch_, cache_table,
                                       home)
@@ -265,13 +327,16 @@ def describe_lowering(*, mesh, num_nodes: int, feat_dim: int,
     n_dp_groups = max(chips // n_shards, 1)
     placement_sim = placement_traffic_sim(cache_rows, n_shards,
                                           min(n_dp_groups, 64))
-    s0_rows = groups * block_pad_sizes(batch // groups, fanouts)[0][1]
+    pads0 = block_pad_sizes(batch // groups, fanouts)[0]
+    s0_rows = groups * (pads0[0] if backend == "device" else pads0[1])
     row_bytes = feat_dim * 4
     rec = {
         "arch": "gnn-graphsage-gns", "shape": "train_1k",
         "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
         "chips": chips,
         "status": "ok", "kind": "train",
+        "sampler_backend": backend,
+        "input_rows_per_batch": s0_rows,
         "input_impl": mcfg.input_impl, "cache_shard_axis": cache_axis,
         "dp_groups": groups,
         "fast_path": fast_path,

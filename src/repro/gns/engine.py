@@ -65,11 +65,15 @@ def make_train_step(mcfg: graphsage.SageConfig, opt: AdamW):
     ``home_shards`` is the device-resident per-group home-shard vector (or
     None to lower the plain psum input path); it is a TRACED operand, so the
     jitted step never retraces when a batch's home shard changes.
+    ``device_adj`` (a DeviceCacheAdj pytree, or None for host-backend runs)
+    switches layer 0 to the on-device GNS draw — it is also traced, so
+    generation swaps reuse the same compiled step.
     """
-    def train_step(params, opt_state, batch, cache_table, home_shards):
+    def train_step(params, opt_state, batch, cache_table, home_shards,
+                   device_adj=None):
         (loss, acc), grads = jax.value_and_grad(
             graphsage.loss_fn, has_aux=True)(params, batch, cache_table,
-                                             mcfg, home_shards)
+                                             mcfg, home_shards, device_adj)
         params, opt_state = opt.update(grads, opt_state, params)
         return params, opt_state, loss, acc
     return train_step
@@ -111,15 +115,23 @@ def collate_groups(mbs: Sequence[MiniBatch], fused: bool
             nbr_w=np.concatenate([b.nbr_w for b in bs]),
             dst_mask=np.concatenate([b.dst_mask for b in bs]),
             num_src=s, num_dst=d))
+    def _cat(field):
+        vals = [getattr(mb.device, field) for mb in mbs]
+        return None if vals[0] is None else np.concatenate(vals)
+
     dev = DeviceBatch(
         blocks=tuple(blocks),
-        input_cache_slots=np.concatenate(
-            [mb.device.input_cache_slots for mb in mbs]),
-        input_streamed=np.concatenate(
-            [mb.device.input_streamed for mb in mbs]),
-        input_mask=np.concatenate([mb.device.input_mask for mb in mbs]),
-        labels=np.concatenate([mb.device.labels for mb in mbs]),
-        label_mask=np.concatenate([mb.device.label_mask for mb in mbs]))
+        input_cache_slots=_cat("input_cache_slots"),
+        input_streamed=_cat("input_streamed"),
+        input_mask=_cat("input_mask"),
+        labels=_cat("labels"),
+        label_mask=_cat("label_mask"),
+        # device-backend fields: fallback lanes concat like any row array;
+        # the [1, 2] per-batch keys stack to [G, 2] (draw_lanes indexes the
+        # key by group, counters by group-LOCAL row)
+        input_fb_rows=_cat("input_fb_rows"),
+        input_fb_w=_cat("input_fb_w"),
+        sample_key=_cat("sample_key"))
     home = np.array([mb.local_shard if mb.local_shard is not None else -1
                      for mb in mbs], np.int32)
     out = MiniBatch(
@@ -153,15 +165,25 @@ class GNSEngine:
         self.mesh = mesh
         self.seed = cfg.seed
         self.scfg = cfg.sampler_config()
+        if getattr(self.scfg, "backend", "host") == "device":
+            assert cfg.sampler == "gns", (
+                "backend='device' is the GNS device sampler — "
+                f"sampler={cfg.sampler!r} has no device backend")
         mcfg = model_cfg
         if mcfg is None:
             m = cfg.model
+            sk = getattr(m, "sample_kernel", "auto")
+            if sk == "auto":
+                # interpret-mode Pallas grids at bench shapes are
+                # uncompilably slow off-TPU; the jnp reference is the
+                # production path there (same bits — see sampling/rng.py)
+                sk = "pallas" if jax.default_backend() == "tpu" else "reference"
             mcfg = graphsage.SageConfig(
                 feat_dim=self.ds.feat_dim, hidden_dim=m.hidden_dim,
                 num_classes=self.ds.num_classes,
                 num_layers=len(self.scfg.fanouts),
                 aggregate_impl=m.aggregate_impl, input_impl=m.input_impl,
-                input_kernel=m.input_kernel)
+                input_kernel=m.input_kernel, sample_kernel=sk)
         self.meter = TrafficMeter()
         if cfg.sampler == "gns":
             # the facade owns all three feature tiers + the refresh lifecycle
@@ -174,9 +196,11 @@ class GNSEngine:
         else:
             self.store = None
         if (self.store is not None and mesh is not None
-                and mcfg.input_impl == "fused"
-                and mcfg.cache_shard_axis is None):
-            # fused steps must psum over the SAME axis the upload shards on
+                and mcfg.cache_shard_axis is None
+                and (mcfg.input_impl == "fused"
+                     or getattr(self.scfg, "backend", "host") == "device")):
+            # fused input AND device sampling must psum over the SAME axis
+            # the upload shards on
             mcfg = dataclasses.replace(mcfg,
                                        cache_shard_axis=self.store.shard_axis)
         # DP groups: one minibatch per group per step, collated (module doc)
@@ -212,12 +236,14 @@ class GNSEngine:
         mcfg_eval = self.mcfg_eval
 
         @jax.jit
-        def eval_step(params, batch, cache_table):
-            return graphsage.loss_fn(params, batch, cache_table, mcfg_eval)
+        def eval_step(params, batch, cache_table, device_adj=None):
+            return graphsage.loss_fn(params, batch, cache_table, mcfg_eval,
+                                     None, device_adj)
 
         @jax.jit
-        def logits_step(params, batch, cache_table):
-            return graphsage.forward(params, batch, cache_table, mcfg_eval)
+        def logits_step(params, batch, cache_table, device_adj=None):
+            return graphsage.forward(params, batch, cache_table, mcfg_eval,
+                                     None, device_adj)
 
         self._eval_step = eval_step
         self._logits_step = logits_step
@@ -241,6 +267,16 @@ class GNSEngine:
         if gen is not None:
             return gen.table
         return self._dummy_cache
+
+    @staticmethod
+    def _device_adj(mb: Optional[MiniBatch]):
+        """The batch's pinned generation's device CSR (None = host backend).
+
+        Resolved from ``cache_gen`` exactly like :meth:`_cache_table`, so a
+        mid-swap batch draws against the SAME generation it gathers from.
+        """
+        gen = getattr(mb, "cache_gen", None) if mb is not None else None
+        return getattr(gen, "device_adj", None) if gen is not None else None
 
     def run_batch(self, mb: MiniBatch,
                   home_shards: Optional[np.ndarray] = None
@@ -266,7 +302,8 @@ class GNSEngine:
         with shlib.use_mesh(self.mesh):     # no-op scope when mesh is None
             self.params, self.opt_state, loss, acc = self._train_step(
                 self.params, self.opt_state, dev_batch, self._cache_table(mb),
-                jax.numpy.asarray(home_shards, jax.numpy.int32))
+                jax.numpy.asarray(home_shards, jax.numpy.int32),
+                self._device_adj(mb))
         loss = float(loss)
         m.t_compute += time.perf_counter() - t0
         return loss, float(acc)
@@ -293,7 +330,7 @@ class GNSEngine:
             # epoch start (cache refresh happens in sampler.start_epoch)
             it = loader.epoch(ep)
             if prefetch:
-                it = Prefetcher(it, depth=2)
+                it = Prefetcher(it, depth=2, meter=self.meter)
             else:
                 it = self._timed(it)
             ep_losses = []
@@ -374,7 +411,8 @@ class GNSEngine:
                 with shlib.use_mesh(self.mesh):
                     _, acc = self._eval_step(self.params,
                                              jax.device_put(mb.device),
-                                             self._cache_table(mb))
+                                             self._cache_table(mb),
+                                             self._device_adj(mb))
                 correct += float(acc)
                 total += 1.0
         finally:
@@ -453,7 +491,8 @@ class GNSEngine:
         with shlib.use_mesh(self.mesh):
             logits = self._logits_step(self.params,
                                        jax.device_put(mb.device),
-                                       self._cache_table(mb))
+                                       self._cache_table(mb),
+                                       self._device_adj(mb))
         return np.asarray(logits)
 
     @property
@@ -462,10 +501,16 @@ class GNSEngine:
         return self._logits_step
 
     def serve(self, serve_cfg=None):
-        """A :class:`repro.serve.GNSServer` over this engine (not started)."""
+        """A :class:`repro.serve.GNSServer` over this engine (not started).
+
+        The default config goes through :meth:`EngineConfig.serve_config`,
+        so the unified ``EngineConfig.refresh`` hint (when set) decides
+        ``refresh_every`` for serving exactly as it decides the training
+        path's cache period.
+        """
         from repro.serve import GNSServer
         return GNSServer(self, serve_cfg if serve_cfg is not None
-                         else self.cfg.serve)
+                         else self.cfg.serve_config())
 
     def infer(self, node_ids: np.ndarray) -> np.ndarray:
         """Mini-batch inference over arbitrary node ids.  [N, classes] f32.
@@ -514,7 +559,8 @@ class GNSEngine:
                 cache_frac=self.scfg.cache.fraction,
                 batch=self.scfg.batch_size, fanouts=self.scfg.fanouts,
                 n_shards=(self.store.n_shards if self.store else 1),
-                meter=self.meter)
+                meter=self.meter,
+                backend=getattr(self.scfg, "backend", "host"))
         return describe_lowering(
             mesh=self.mesh, num_nodes=self.ds.graph.num_nodes,
             feat_dim=self.ds.feat_dim, num_classes=self.ds.num_classes,
@@ -523,4 +569,6 @@ class GNSEngine:
             fanouts=tuple(self.scfg.fanouts),
             hidden_dim=self.mcfg.hidden_dim,
             input_impl=self.mcfg.input_impl,
+            backend=getattr(self.scfg, "backend", "host"),
+            sample_kernel=getattr(self.mcfg, "sample_kernel", "reference"),
             optim=self.cfg.optim)

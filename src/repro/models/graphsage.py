@@ -45,6 +45,10 @@ class SageConfig:
                                        # (the pod dry-run lowers "reference" —
                                        # interpret-mode grids at paper scale
                                        # are uncompilable from a CPU host)
+    sample_kernel: str = "reference"   # device-sampling gather backend:
+                                       # "pallas" | "reference" (same split as
+                                       # input_kernel; engine resolves "auto"
+                                       # by jax.default_backend())
     cache_shard_axis: Optional[str] = None
                                        # mesh axis the cache table is row-
                                        # sharded over; with a mesh in scope
@@ -129,7 +133,7 @@ def _dst_rows(num_groups: int, blk: LayerBlock) -> Optional[np.ndarray]:
 
 
 def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
-            cfg: SageConfig, local_shard=None) -> jnp.ndarray:
+            cfg: SageConfig, local_shard=None, device_adj=None) -> jnp.ndarray:
     """Returns logits [B_padded, num_classes].
 
     ``local_shard`` forwards the locality fast-path gate to the fused input
@@ -138,13 +142,39 @@ def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
     ``FeatureStore.assemble_input``), or a TRACED int32 home-shard vector
     (one entry per DP group, -1 = no contract) — the device-resident form
     that lets one compiled step serve any mix of home shards (GNSEngine).
+
+    ``device_adj`` (a :class:`repro.sampling.DeviceCacheAdj`, paired with a
+    ``backend="device"`` batch carrying ``sample_key``) switches layer 0 to
+    the on-device GNS draw: the neighbor aggregate comes straight from the
+    fused draw→gather op and the batch ships NO layer-0 neighbor lanes.
     """
     agg = _get_aggregate(cfg.aggregate_impl)
-    fused = cfg.input_impl == "fused"
-    h = None if fused else assemble_input(batch, cache_table)
+    device = device_adj is not None and batch.sample_key is not None
+    fused = cfg.input_impl == "fused" and not device
+    h = None if (fused or device) else assemble_input(batch, cache_table)
     for i, (blk, layer) in enumerate(zip(batch.blocks, params["layers"])):
         dst_rows = _dst_rows(cfg.num_groups, blk)
-        if i == 0 and fused:
+        if i == 0 and device:
+            # device-resident GNS input layer: draw + importance weights +
+            # feature gather inside the step (repro.sampling.kernels).  The
+            # aggregate has no parameter dependence — stop_gradient keeps
+            # the backward out of the (forward-only) Pallas op entirely.
+            from repro.launch.sharding import current_mesh
+            from repro.sampling.kernels import gns_sample_agg
+            mesh = current_mesh()
+            axis = cfg.cache_shard_axis
+            if mesh is None or axis not in getattr(mesh, "axis_names", ()):
+                mesh = axis = None
+            sg = jax.lax.stop_gradient
+            a = gns_sample_agg(
+                jax.tree_util.tree_map(sg, device_adj), sg(cache_table),
+                sg(batch.input_cache_slots), sg(batch.input_fb_rows),
+                sg(batch.input_fb_w), sg(batch.sample_key),
+                impl=cfg.sample_kernel, mesh=mesh, shard_axis=axis,
+                num_groups=cfg.num_groups)
+            h_dst = assemble_input(batch, cache_table,
+                                   prefix=blk.num_dst, rows=dst_rows)
+        elif i == 0 and fused:
             # one Pallas pass: cache/streamed select + layer-0 gather-agg;
             # self rows come from a statically-sliced prefix assembly.  On a
             # mesh with the cache table row-sharded over cfg.cache_shard_axis
@@ -181,9 +211,10 @@ def forward(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
 
 
 def loss_fn(params: dict, batch: DeviceBatch, cache_table: jnp.ndarray,
-            cfg: SageConfig,
-            local_shard=None) -> tuple[jnp.ndarray, jnp.ndarray]:
-    logits = forward(params, batch, cache_table, cfg, local_shard=local_shard)
+            cfg: SageConfig, local_shard=None,
+            device_adj=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    logits = forward(params, batch, cache_table, cfg, local_shard=local_shard,
+                     device_adj=device_adj)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, batch.labels[:, None].astype(jnp.int32),
                                axis=-1)[:, 0]

@@ -1,0 +1,30 @@
+"""Device-resident GNS sampling subsystem (ROADMAP item 2).
+
+Layer map:
+
+* :mod:`repro.sampling.rng` — counter-based stateless RNG (fmix32 chain).
+* :mod:`repro.sampling.adjacency` — per-generation ``cache_adj`` CSR as
+  device arrays in placement (device-row) order.
+* :mod:`repro.sampling.kernels` — fused draw → slot lookup → layer-0 gather
+  (Pallas kernel + shard_map dispatch), plus the plain-jnp ``draw_lanes``.
+* :mod:`repro.sampling.ref` — jnp oracle for the gather kernel.
+* :mod:`repro.sampling.device_sampler` — the ``backend="device"`` sampler
+  the engine instantiates via ``make_sampler``.
+"""
+from repro.sampling.adjacency import DeviceCacheAdj, build_device_cache_adj
+from repro.sampling.device_sampler import DeviceGNSSampler
+from repro.sampling.kernels import draw_lanes, gns_sample_agg, slot_gather_agg_pallas
+from repro.sampling.ref import slot_gather_agg_ref
+from repro.sampling.rng import mix32, murmur_fmix
+
+__all__ = [
+    "DeviceCacheAdj",
+    "DeviceGNSSampler",
+    "build_device_cache_adj",
+    "draw_lanes",
+    "gns_sample_agg",
+    "mix32",
+    "murmur_fmix",
+    "slot_gather_agg_pallas",
+    "slot_gather_agg_ref",
+]

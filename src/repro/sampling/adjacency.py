@@ -1,0 +1,106 @@
+"""Device-resident ``cache_adj``: the induced cached-neighbor CSR as device
+arrays, rows reordered by the placement permutation.
+
+The host :class:`~repro.graph.csr.CacheAdjacency` spans the FULL node-id
+space (|V|+1 row pointers) because the host sampler queries arbitrary node
+ids.  The device sampler only ever starts from rows of the device cache
+table, so the device CSR is restricted to — and indexed by — **device rows**
+(the slot→(shard, local row) permutation the placement solver produced):
+row ``r`` of the table is row ``r`` of the CSR, and its adjacency list holds
+the device rows of its cached neighbors.  That makes the fused kernel's
+layer-0 draw a pure table-row computation — no node ids, no host lookups —
+and keeps a shard's hot rows contiguous in both the table AND the structure
+(the carried placement-aware ``cache_adj`` item): a locality-placed
+generation's frequent dst rows and their neighbor lists live in the same
+shard block the feature rows do.
+
+Built once per generation (``FeatureStore._build``), uploaded alongside the
+feature table, and carried on :class:`~repro.featurestore.store.Generation`
+so the atomic swap publishes structure and features together — a batch
+sampled against generation *g* draws from *g*'s CSR and gathers *g*'s rows,
+mid-swap or not.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.importance import cache_hit_prob
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeviceCacheAdj:
+    """The per-generation device CSR over cache-table rows (all leaves).
+
+    ``indices`` is padded to a power-of-two capacity (min 1024) so the edge
+    count drifting between generations does not retrace the compiled step
+    for every new nnz — only when it crosses a power of two.
+    """
+    indptr: jnp.ndarray   # int32 [table_rows + 1]  device-row order
+    indices: jnp.ndarray  # int32 [cap]  neighbor DEVICE rows (pad = 0)
+    deg: jnp.ndarray      # f32 [table_rows]  FULL-graph degree of the row's
+                          # node (eq. 10's deg(v); 0 for unoccupied pad rows)
+    hitp: jnp.ndarray     # f32 [table_rows]  cache-inclusion probability
+                          # p_u^C (eq. 11 / calibrated λ) of the row's node
+
+    @property
+    def table_rows(self) -> int:
+        return self.indptr.shape[0] - 1
+
+
+def build_device_cache_adj(state, host_adj, degrees: np.ndarray,
+                           lam=None) -> DeviceCacheAdj:
+    """Materialize one generation's device CSR from the host induced CSR.
+
+    Args:
+      state: the generation's :class:`CacheState` (membership + placement).
+      host_adj: ``graph.induced_cache_adjacency`` over the full id space.
+      degrees: full-graph degree per node (the eq. 10 normalizer).
+      lam: the generation's calibrated inclusion λ (None = eq. 11).
+
+    All importance inputs that the host sampler computes per batch
+    (``probs[nbrs]`` → ``cache_hit_prob``) are precomputed here per ROW in
+    float64 and stored as f32 — the device draw then never touches the O(V)
+    probability vector.
+    """
+    rows = state.table_rows if state.table_rows else state.size
+    dr = state.device_rows(np.arange(state.size))
+    node_of_row = np.full(rows, -1, dtype=np.int64)
+    node_of_row[dr] = state.node_ids
+    occ = node_of_row >= 0
+    nodes = node_of_row[occ]
+
+    counts = np.zeros(rows, dtype=np.int64)
+    counts[occ] = host_adj.indptr[nodes + 1] - host_adj.indptr[nodes]
+    indptr = np.zeros(rows + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    nnz = int(indptr[-1])
+
+    # flat ragged gather: row r's slice of the host CSR, in device-row order
+    rep = np.repeat(np.arange(rows), counts)
+    off = np.arange(nnz, dtype=np.int64) - np.repeat(indptr[:-1], counts)
+    starts = host_adj.indptr[np.maximum(node_of_row, 0)]
+    nbr_ids = host_adj.indices[starts[rep] + off]
+    # neighbors of a cached node's induced list are cached by construction,
+    # so slot_of >= 0 and the device-row map is total
+    nbr_rows = state.device_rows(state.slot_of[nbr_ids]).astype(np.int32)
+
+    cap = max(1024, nnz)
+    cap = 1 << (cap - 1).bit_length()
+    indices = np.zeros(cap, dtype=np.int32)
+    indices[:nnz] = nbr_rows
+
+    deg = np.zeros(rows, dtype=np.float32)
+    deg[occ] = degrees[nodes]
+    hitp = np.zeros(rows, dtype=np.float32)
+    hitp[occ] = cache_hit_prob(state.probs[nodes], state.size, lam=lam)
+
+    return DeviceCacheAdj(
+        indptr=jnp.asarray(indptr.astype(np.int32)),
+        indices=jnp.asarray(indices),
+        deg=jnp.asarray(deg),
+        hitp=jnp.asarray(hitp))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the device-sampling kernels (the allclose targets
+and the off-TPU production path — ``SageConfig.sample_kernel="reference"``)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slot_gather_agg_ref(cache_table: jax.Array, lane_rows: jax.Array,
+                        w: jax.Array) -> jax.Array:
+    """out[b] = Σ_k w[b,k] · cache_table[lane_rows[b,k]]; dead lanes
+    (``lane_rows < 0``) contribute exactly 0.
+
+    Sequential f32 accumulation over k — the same association order as the
+    Pallas kernel's K-innermost grid — so interpret-mode parity is bitwise
+    whenever per-step products are exactly representable (see
+    ``kernels.ref.cache_lookup_agg_ref`` for the FMA caveat).
+    """
+    lr = lane_rows.astype(jnp.int32)
+    rows = jnp.take(cache_table, jnp.clip(lr, 0), axis=0).astype(jnp.float32)
+    wf = jnp.where(lr >= 0, w.astype(jnp.float32), 0.0)
+    out = jnp.zeros((lr.shape[0], cache_table.shape[1]), jnp.float32)
+    for k in range(lr.shape[1]):       # static K; matches kernel accum order
+        out = out + wf[:, k:k + 1] * rows[:, k]
+    return out

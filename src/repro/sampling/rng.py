@@ -1,0 +1,48 @@
+"""Counter-based stateless RNG for the device-resident GNS sampler.
+
+Replay contract: the device draw for destination row ``r`` of the batch
+sampled with key ``(lo, hi)`` depends ONLY on ``(lo, hi, r, lane)`` — never
+on program order, device count, or how many draws other rows made.  The
+host hands each batch a fresh 64-bit key (``DeviceGNSSampler.sample``
+draws it from the per-batch seeded generator of the epoch loader), so
+
+  * re-running a batch reproduces its sample bit-for-bit (replay-stable),
+  * the same step sharded over any number of devices draws the same lanes
+    (the counter is the GLOBAL row index, not a per-device stream), and
+  * two batches with different keys are independent.
+
+The generator is the murmur3 finalizer (fmix32) chained over the key and
+counter words — a full-avalanche 32-bit mixer whose Pallas lowering is four
+shifts/xors and two multiplies per word, identical in plain jnp, so the
+kernel and the reference path produce the SAME bits (the bitwise-parity
+test relies on this).  jax's threefry would also work but keys/counters
+thread awkwardly through scalar-prefetch SMEM; fmix32 keeps the whole draw
+expressible on values already in registers.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def murmur_fmix(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3's 32-bit finalizer: bijective, full avalanche."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def mix32(*words: jnp.ndarray) -> jnp.ndarray:
+    """Hash any number of uint32 words (broadcast together) to uint32 bits.
+
+    ``mix32(key_lo, key_hi, row, lane)`` is the device sampler's per-lane
+    counter stream.  Chaining fmix32 over the words (seeded with the golden
+    ratio so a single zero word still avalanches) keeps every word's bits
+    influencing the result.
+    """
+    h = jnp.uint32(0x9E3779B9)
+    for w in words:
+        h = murmur_fmix(h ^ w.astype(jnp.uint32))
+    return h
