@@ -1,0 +1,21 @@
+"""``gnscheck`` — repo-specific static analysis + runtime sanitizer.
+
+Static passes (``python -m repro.analysis``): trace purity, lock
+discipline, generation pinning, retrace hazards, plus a warning-tier
+TrafficMeter-pairing lint.  Runtime half (imported by the annotated
+subsystems): the ``@guarded_by`` registry and the debug-mode lock
+sanitizer.
+
+Only the runtime symbols are re-exported here — the annotated packages
+(``featurestore``, ``serve``, ``core``) import this at module load, so it
+must stay stdlib-only and must NOT pull the AST passes (or jax) in.
+"""
+from .runtime import (LockDisciplineError, LockOrderError, TrackedLock,
+                      enable_sanitizer, guarded_by, holds_lock,
+                      reset_lock_order, sanitizer_enabled)
+
+__all__ = [
+    "guarded_by", "holds_lock", "enable_sanitizer", "sanitizer_enabled",
+    "reset_lock_order", "TrackedLock", "LockDisciplineError",
+    "LockOrderError",
+]

@@ -1,0 +1,89 @@
+"""Warning-tier lint — TrafficMeter pairing.
+
+The whole paper is an argument about *bytes moved between tiers*; the repo
+encodes that in ``TrafficMeter``.  A host↔device transfer that skips the
+books silently corrupts every ``upload_ratio`` / ``bytes_per_batch``
+acceptance number downstream, so: any function in ``featurestore/`` or
+``sampling/`` that issues a device transfer (``jax.device_put``,
+``jnp.asarray``/``jnp.array`` on host data, ``make_array_from_callback``)
+must also touch a meter in the same function body.
+
+Warning tier: it never fails the build unless ``--strict-warnings`` — new
+tiers (ROADMAP item 3) should see the nag immediately but a prototype can
+still land behind a suppression.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .common import RepoIndex, Violation, dotted, parents
+
+TRANSFER_CALLS = {"device_put", "make_array_from_callback",
+                  "make_array_from_single_device_arrays"}
+ARRAY_CTORS = {"jnp.asarray", "jnp.array"}
+SCOPE_PREFIXES = ("repro/featurestore/", "repro/sampling/",
+                  "featurestore/", "sampling/")
+# traced modules: jnp.asarray there is device-side math, not a tier transfer
+EXCLUDE_SUFFIXES = ("kernels.py", "ref.py", "rng.py", "ops.py")
+METER_MARKERS = {"meter", "bytes_cache_upload", "bytes_adj_upload",
+                 "bytes_gather", "account", "record_upload"}
+
+
+def _fn_has_meter(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and (
+                node.attr in METER_MARKERS
+                or node.attr.startswith("bytes_")
+                or node.attr.startswith("t_")):
+            return True
+        if isinstance(node, ast.Name) and node.id in METER_MARKERS:
+            return True
+        if isinstance(node, ast.arg) and node.arg == "meter":
+            return True
+    return False
+
+
+def run(index: RepoIndex) -> List[Violation]:
+    out: List[Violation] = []
+    for mi in index.modules.values():
+        # scoped to the tier-transfer packages inside the repro tree; an
+        # arbitrary scan root (the analyzer's own test fixtures) is all in
+        # scope — there is no package structure to scope by
+        in_repro = mi.name.split(".")[0] == "repro"
+        if in_repro and not mi.path.startswith(SCOPE_PREFIXES):
+            continue
+        if mi.path.endswith(EXCLUDE_SUFFIXES):
+            continue
+        for local, fi in mi.functions.items():
+            fn = fi.node
+            transfers: List[ast.Call] = []
+            for node in ast.walk(fn):
+                if node is not fn and isinstance(
+                        node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func)
+                if d is None:
+                    continue
+                tail = d.split(".")[-1]
+                if tail in TRANSFER_CALLS or d in ARRAY_CTORS:
+                    transfers.append(node)
+            if not transfers:
+                continue
+            if _fn_has_meter(fn):
+                continue
+            first = transfers[0]
+            sup = mi.suppressed(first.lineno)
+            if "meter-unpaired-transfer" in sup or "*" in sup:
+                continue
+            out.append(Violation(
+                rule="meter-unpaired-transfer", path=mi.path,
+                line=first.lineno, symbol=local,
+                message=(f"{len(transfers)} device transfer(s) "
+                         f"(`{dotted(first.func)}`) with no TrafficMeter "
+                         "accounting in the same function — unbooked "
+                         "tier traffic"),
+                detail=local, severity="warning"))
+    return out

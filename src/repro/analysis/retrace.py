@@ -1,0 +1,216 @@
+"""Pass 4 — retrace hazards.
+
+PR 4/5 assert *dynamically* (via compile counters) that steady state incurs
+zero recompilation; this pass guards the same property *statically*:
+
+``retrace-scalar-arg``
+    a jit root whose parameter is annotated / defaulted as a Python scalar
+    (``int``/``bool``/``float``/``str``) but is NOT listed in
+    ``static_argnums``/``static_argnames``.  Python scalars hash into the
+    jit cache key only when static; passed dynamically they are weak-typed
+    tracers and every distinct *value that changes rank/shape decisions*
+    upstream means a silent retrace.
+``retrace-scalar-flow``
+    ``len(...)`` / ``int(...)`` / ``.item()`` / ``.shape[...]`` expressions
+    used directly as arguments at a call site of a known-jitted callable —
+    runtime-derived scalars entering a traced signature positionally.
+``retrace-pad-registry``
+    structural markers over the shape-padding sites the zero-recompile
+    guarantee rests on.  Each registry entry pins a function to a required
+    source idiom; if a refactor drops the idiom (e.g. the power-of-two
+    rounding in ``build_device_cache_adj``), the pass fails *here* instead
+    of the serving benchmark failing three PRs later.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from .common import RepoIndex, Violation, dotted, find_trace_roots
+
+SCALAR_ANNOTS = {"int", "bool", "str"}   # float params are usually traced
+                                         # weights (lr, temp) — exempt
+
+# (path-suffix, function-local-name, required-substring, reason)
+PAD_REGISTRY: List[Tuple[str, str, str, str]] = [
+    ("sampling/adjacency.py", "build_device_cache_adj", "bit_length",
+     "DeviceCacheAdj capacity must stay power-of-two padded "
+     "(zero-recompile across refreshes)"),
+    ("serve/batcher.py", "MicroBatcher.bucket_for", "self.buckets",
+     "serve batches must quantize to the fixed bucket ladder"),
+    ("featurestore/store.py", "CacheConfig.size", "%",
+     "cache size must stay quantized (device-count multiple)"),
+]
+
+
+def _scalar_annotation(arg: ast.arg) -> Optional[str]:
+    a = arg.annotation
+    if a is None:
+        return None
+    d = dotted(a)
+    if d in SCALAR_ANNOTS:
+        return d
+    # Optional[int] / int | None
+    if isinstance(a, ast.Subscript) and dotted(a.value) in ("Optional",
+                                                            "typing.Optional"):
+        inner = dotted(a.slice)
+        if inner in SCALAR_ANNOTS:
+            return inner
+    if isinstance(a, ast.BinOp) and isinstance(a.op, ast.BitOr):
+        for side in (a.left, a.right):
+            d = dotted(side)
+            if d in SCALAR_ANNOTS:
+                return d
+    return None
+
+
+def _scalar_default(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value,
+                                                     (int, bool, str)) \
+            and not isinstance(node.value, float) and node.value is not None:
+        return type(node.value).__name__
+    return None
+
+
+def run(index: RepoIndex) -> List[Violation]:
+    out: List[Violation] = []
+    roots = find_trace_roots(index)
+
+    # --- retrace-scalar-arg ------------------------------------------------
+    seen: Set[str] = set()
+    for root in roots:
+        if root.kind != "jit":
+            continue  # pallas/shard_map have their own argument regimes
+        fi = index.func(root.ref)
+        if fi is None or not isinstance(fi.node, (ast.FunctionDef,
+                                                  ast.AsyncFunctionDef)):
+            continue
+        mi = fi.module
+        sym = fi.qualname.split(":", 1)[1]
+        a = fi.node.args
+        params = [*a.posonlyargs, *a.args]
+        names = [p.arg for p in params]
+        if names and names[0] == "self":
+            params, names = params[1:], names[1:]
+        static = set(root.static_names)
+        for i in root.static_nums:
+            if 0 <= i < len(names):
+                static.add(names[i])
+        # defaults align to the tail of params
+        defaults: List[Optional[ast.AST]] = \
+            [None] * (len(params) - len(a.defaults)) + list(a.defaults)
+        for p, dflt in zip(params, defaults):
+            if p.arg in static:
+                continue
+            why = _scalar_annotation(p)
+            if why is None and dflt is not None:
+                why = _scalar_default(dflt)
+            if why is None:
+                continue
+            key = f"{root.ref}:{p.arg}"
+            if key in seen:
+                continue
+            seen.add(key)
+            sup = mi.suppressed(p.lineno)
+            if "retrace-scalar-arg" in sup or "*" in sup:
+                continue
+            out.append(Violation(
+                rule="retrace-scalar-arg", path=mi.path, line=p.lineno,
+                symbol=sym,
+                message=(f"jit parameter `{p.arg}: {why}` is not in "
+                         "static_argnums/static_argnames — every new value "
+                         "is a potential retrace; mark it static or pass "
+                         "an array"),
+                detail=p.arg))
+
+    # --- retrace-scalar-flow ----------------------------------------------
+    jitted_names: Set[str] = set()
+    for root in roots:
+        fi = index.func(root.ref)
+        if fi is not None:
+            jitted_names.add(fi.name)
+    # names jit results are bound to: f = jax.jit(g) / self._step = jax.jit(...)
+    for mi in index.modules.values():
+        for node in ast.walk(mi.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                d = dotted(node.value.func)
+                if d in ("jax.jit", "jit"):
+                    for t in node.targets:
+                        td = dotted(t)
+                        if td:
+                            jitted_names.add(td.split(".")[-1])
+    for mi in index.modules.values():
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d is None or d.split(".")[-1] not in jitted_names:
+                continue
+            for arg in node.args:
+                bad = None
+                if isinstance(arg, ast.Call):
+                    ad = dotted(arg.func)
+                    if ad in ("len", "int"):
+                        bad = f"{ad}(...)"
+                    elif isinstance(arg.func, ast.Attribute) \
+                            and arg.func.attr == "item":
+                        bad = ".item()"
+                if bad is None:
+                    continue
+                sup = mi.suppressed(node.lineno)
+                if "retrace-scalar-flow" in sup or "*" in sup:
+                    continue
+                sym_fn = None
+                cur = node
+                from .common import parents as _parents
+                for p in _parents(node):
+                    if isinstance(p, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                        cls = None
+                        for q in _parents(p):
+                            if isinstance(q, ast.ClassDef):
+                                cls = q.name
+                                break
+                        sym_fn = f"{cls}.{p.name}" if cls else p.name
+                        break
+                out.append(Violation(
+                    rule="retrace-scalar-flow", path=mi.path,
+                    line=node.lineno, symbol=sym_fn or "<module>",
+                    message=(f"runtime scalar `{bad}` flows positionally "
+                             f"into jitted `{d}` — pad to a static shape "
+                             "or mark the parameter static"),
+                    detail=f"{d.split('.')[-1]}:{bad}"))
+
+    # --- retrace-pad-registry ----------------------------------------------
+    for suffix, local, needle, reason in PAD_REGISTRY:
+        hit_module = None
+        for mi in index.modules.values():
+            if mi.path.endswith(suffix):
+                hit_module = mi
+                break
+        if hit_module is None:
+            continue  # file moved: the baseline ratchet will catch churn
+        fi = hit_module.functions.get(local)
+        if fi is None:
+            out.append(Violation(
+                rule="retrace-pad-registry", path=hit_module.path, line=1,
+                symbol=local,
+                message=(f"pad-registry function `{local}` not found in "
+                         f"{suffix} — {reason}"),
+                detail=f"{local}:missing"))
+            continue
+        seg = ast.get_source_segment(
+            "\n".join(hit_module.source_lines), fi.node)
+        if seg is None:
+            start = fi.node.lineno - 1
+            end = getattr(fi.node, "end_lineno", start + 1)
+            seg = "\n".join(hit_module.source_lines[start:end])
+        if needle not in seg:
+            out.append(Violation(
+                rule="retrace-pad-registry", path=hit_module.path,
+                line=fi.node.lineno, symbol=local,
+                message=(f"`{local}` lost its `{needle}` padding idiom — "
+                         f"{reason}"),
+                detail=f"{local}:{needle}"))
+    return out

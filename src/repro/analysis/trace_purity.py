@@ -1,0 +1,236 @@
+"""Pass 1 — trace purity.
+
+Walks the call graph rooted at every function handed to ``jax.jit`` /
+``shard_map`` / ``pallas_call`` and flags Python-side nondeterminism or
+state inside the traced region.  This is the contract ``sampling/rng.py``'s
+counter-based RNG exists to uphold: everything a trace observes must be a
+pure function of its (traced or static) inputs, or retraces silently produce
+different programs than the one the tests blessed.
+
+Rules
+-----
+``trace-nondeterminism``
+    ``random.*``, unseeded ``np.random.*``, ``time.*`` (incl. ``sleep``),
+    ``datetime.now``/``utcnow``, ``uuid.*``, ``os.urandom`` anywhere in the
+    traced call graph.
+``trace-global-state``
+    ``global`` / ``nonlocal`` declarations inside traced functions.
+``trace-self-mutation``
+    assignment / augmented-assignment to ``self.<attr>`` inside a traced
+    method — traced code runs once per compilation, not once per step, so
+    instance state mutated here is a correctness bug.
+``trace-mutation``
+    mutating method calls (``append``/``update``/``pop``/...) on names not
+    bound locally in the function — closed-over mutable state.
+``trace-host-branch``
+    ``if``/``while`` tests that name a root parameter which is not listed in
+    ``static_argnums``/``static_argnames`` (root functions only: deeper in
+    the graph we can't tell tracers from Python values without type
+    inference, and the root signature is where the hazard enters).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .common import (FuncInfo, ModuleInfo, RepoIndex, TraceRoot, Violation,
+                     dotted, find_trace_roots, parents)
+
+NONDET_CALLS = {
+    "random.random", "random.randint", "random.randrange", "random.choice",
+    "random.choices", "random.shuffle", "random.sample", "random.uniform",
+    "random.gauss", "random.normalvariate", "random.getrandbits",
+    "np.random.rand", "np.random.randn", "np.random.randint",
+    "np.random.random", "np.random.choice", "np.random.permutation",
+    "np.random.shuffle", "np.random.uniform", "np.random.normal",
+    "numpy.random.rand", "numpy.random.randn", "numpy.random.randint",
+    "numpy.random.random", "numpy.random.choice", "numpy.random.permutation",
+    "time.time", "time.perf_counter", "time.monotonic", "time.sleep",
+    "time.process_time", "time.time_ns", "time.perf_counter_ns",
+    "datetime.now", "datetime.utcnow", "datetime.datetime.now",
+    "datetime.datetime.utcnow", "uuid.uuid4", "uuid.uuid1", "os.urandom",
+}
+
+MUTATING_METHODS = {
+    "append", "extend", "insert", "add", "update", "pop", "popitem",
+    "clear", "remove", "discard", "setdefault", "sort", "reverse",
+}
+
+# names whose use in a branch test never forces a host read of a tracer
+_BRANCH_SAFE_CALLS = {"isinstance", "len", "hasattr", "getattr", "callable",
+                      "issubclass", "type"}
+
+
+def _local_bindings(fn: ast.AST) -> Set[str]:
+    """Names bound inside the function (params, assigns, for, with, comps)."""
+    out: Set[str] = set()
+    node = fn
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        a = node.args
+        for arg in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+            out.add(arg.arg)
+        if a.vararg:
+            out.add(a.vararg.arg)
+        if a.kwarg:
+            out.add(a.kwarg.arg)
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store,)):
+            out.add(n.id)
+        elif isinstance(n, (ast.For, ast.AsyncFor)):
+            for t in ast.walk(n.target):
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+        elif isinstance(n, ast.comprehension):
+            for t in ast.walk(n.target):
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+        elif isinstance(n, ast.withitem) and n.optional_vars is not None:
+            for t in ast.walk(n.optional_vars):
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _root_param_names(fi: FuncInfo) -> List[str]:
+    node = fi.node
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return []
+    a = node.args
+    names = [arg.arg for arg in (*a.posonlyargs, *a.args)]
+    if names and names[0] == "self":
+        names = names[1:]
+    return names
+
+
+def _branch_names(test: ast.AST) -> Set[str]:
+    """Bare names read in a branch test, minus safe-call arguments and
+    `x is None` patterns (shape/None dispatch is static by construction)."""
+    skip: Set[int] = set()
+    for n in ast.walk(test):
+        if isinstance(n, ast.Call):
+            fname = dotted(n.func)
+            if fname in _BRANCH_SAFE_CALLS:
+                for sub in ast.walk(n):
+                    skip.add(id(sub))
+        elif isinstance(n, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in n.ops):
+            for sub in ast.walk(n):
+                skip.add(id(sub))
+        elif isinstance(n, ast.Attribute):
+            # obj.shape / obj.ndim / cfg.flag — attribute reads are either
+            # static metadata or config, not a tracer-value read
+            for sub in ast.walk(n):
+                skip.add(id(sub))
+    out: Set[str] = set()
+    for n in ast.walk(test):
+        if (isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+                and id(n) not in skip):
+            out.add(n.id)
+    return out
+
+
+def _check_function(fi: FuncInfo, mi: ModuleInfo,
+                    root: Optional[TraceRoot]) -> List[Violation]:
+    out: List[Violation] = []
+    fn = fi.node
+    local = _local_bindings(fn)
+    sym = fi.qualname.split(":", 1)[1]
+
+    def emit(rule: str, line: int, msg: str, detail: str) -> None:
+        if rule in mi.suppressed(line) or "*" in mi.suppressed(line):
+            return
+        out.append(Violation(rule=rule, path=mi.path, line=line,
+                             symbol=sym, message=msg, detail=detail))
+
+    for node in ast.walk(fn):
+        # don't descend into nested defs here; they are separate graph nodes
+        if node is not fn and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            emit("trace-global-state", node.lineno,
+                 f"`{type(node).__name__.lower()} {', '.join(node.names)}` "
+                 "inside a traced function",
+                 ",".join(node.names))
+        elif isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d is None:
+                continue
+            # normalize through the import map's first component
+            norm = d
+            head = d.split(".")[0]
+            imp = mi.imports.get(head)
+            if imp is not None:
+                norm = imp + d[len(head):]
+            if d in NONDET_CALLS or norm in NONDET_CALLS:
+                emit("trace-nondeterminism", node.lineno,
+                     f"call to nondeterministic `{d}` in traced code — use "
+                     "the counter-based RNG (sampling/rng.py) instead",
+                     d)
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in MUTATING_METHODS
+                  and isinstance(getattr(node, "_gns_parent", None),
+                                 ast.Expr)):
+                # result-discarded call: the stdlib mutators return None, so
+                # a bare `x.update(...)` statement is mutation — while
+                # `new = opt.update(...)` is the pure-functional idiom
+                base = dotted(node.func.value)
+                if base is not None and base.split(".")[0] not in local \
+                        and not base.startswith("self."):
+                    emit("trace-mutation", node.lineno,
+                         f"mutating call `{d}()` on non-local `{base}` — "
+                         "closed-over mutable state in a traced region",
+                         d)
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                td = dotted(t)
+                if td is not None and td.startswith("self.") \
+                        and td.count(".") == 1:
+                    emit("trace-self-mutation", node.lineno,
+                         f"write to `{td}` inside traced code runs once per "
+                         "compile, not once per step",
+                         td)
+
+    # host branching on non-static root params (roots only)
+    if root is not None and root.kind == "jit":
+        params = _root_param_names(fi)
+        static = set(root.static_names)
+        for i in root.static_nums:
+            if 0 <= i < len(params):
+                static.add(params[i])
+        dyn = set(params) - static
+        for node in ast.walk(fn):
+            if node is not fn and isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(node, (ast.If, ast.While)):
+                hit = _branch_names(node.test) & dyn
+                for name in sorted(hit):
+                    emit("trace-host-branch", node.lineno,
+                         f"`if {name}: ...` branches on jit parameter "
+                         f"`{name}` — mark it static_argnames or use "
+                         "`jnp.where`/`lax.cond`",
+                         name)
+    return out
+
+
+def run(index: RepoIndex) -> List[Violation]:
+    roots = find_trace_roots(index)
+    by_ref = {}
+    for r in roots:
+        by_ref.setdefault(r.ref, r)
+    reachable = index.reachable([r.ref for r in roots])
+    out: List[Violation] = []
+    seen_keys: Set[str] = set()
+    for ref in sorted(reachable):
+        fi = index.func(ref)
+        if fi is None:
+            continue
+        for v in _check_function(fi, fi.module, by_ref.get(ref)):
+            k = v.key() + f"@{v.line}"
+            if k not in seen_keys:
+                seen_keys.add(k)
+                out.append(v)
+    return out

@@ -29,6 +29,7 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+from repro.analysis import guarded_by
 from repro.core.minibatch import MiniBatch
 
 
@@ -111,6 +112,7 @@ class EpochLoader:
             yield self.sampler.sample(targets, batch_rng)
 
 
+@guarded_by("_lock", writes_only=("_err",))
 class Prefetcher:
     """Bounded-queue background prefetch with straggler timeout.
 
@@ -128,6 +130,10 @@ class Prefetcher:
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._timeout = timeout_s
         self._meter = meter
+        self._lock = threading.Lock()   # guards the producer's _err publish
+                                        # (consumer reads it lock-free after
+                                        # the SENTINEL — queue.put/get is the
+                                        # happens-before edge)
         self._err: Optional[BaseException] = None
         self._last: Optional[MiniBatch] = None
         self.reused = 0                       # straggler-mitigation reuse count
@@ -140,7 +146,8 @@ class Prefetcher:
             for item in it:
                 self._q.put(item)
         except BaseException as e:  # surfaced on the consumer side
-            self._err = e
+            with self._lock:
+                self._err = e
         finally:
             self._q.put(self._SENTINEL)
 

@@ -55,6 +55,12 @@ class TrafficMeter:
                                    # bytes actually landed on each device — a
                                    # shard-aware upload pays table/n_shards per
                                    # device, a replicated one pays the full table
+    bytes_adj_upload: int = 0      # per-generation cache-adjacency CSR
+                                   # host->device transfer (backend="device"
+                                   # sampling) — kept separate from
+                                   # bytes_cache_upload so the 1/n sharded-
+                                   # upload acceptance ratio stays a pure
+                                   # feature-table number
     uploads: int = 0               # device-table uploads (one per generation)
     lanes_local: int = 0           # cache hits served by the requesting
                                    # group's home shard (no cache-axis hop)
@@ -136,6 +142,7 @@ class TrafficMeter:
             "bytes_streamed": self.bytes_streamed,
             "bytes_cache_fill": self.bytes_cache_fill,
             "bytes_cache_upload": self.bytes_cache_upload,
+            "bytes_adj_upload": self.bytes_adj_upload,
             "uploads": self.uploads,
             "steps": self.steps,
             "lanes_local": self.lanes_local,

@@ -35,6 +35,8 @@ from typing import Dict, Optional, Sequence, Type
 
 import numpy as np
 
+from repro.analysis import guarded_by
+
 
 # ---------------------------------------------------------------------------
 # probability constructions (pure functions, formerly repro.core.cache)
@@ -201,6 +203,7 @@ class ReversePageRankPolicy(CachePolicy):
 
 
 @register_policy
+@guarded_by("_lock", "_ema", "_prior")
 class AdaptivePolicy(CachePolicy):
     """EMA of observed request traffic, degree prior for cold start.
 
@@ -235,9 +238,13 @@ class AdaptivePolicy(CachePolicy):
                 self._prior = degree_cache_probs(graph)
 
     def observe(self, ids: np.ndarray) -> None:
-        if self._ema is None or len(ids) == 0:
+        if len(ids) == 0:
             return
         with self._lock:
+            # the not-yet-bound check belongs INSIDE the lock: bind() may be
+            # concurrently installing the EMA buffer from the builder thread
+            if self._ema is None:
+                return
             np.add.at(self._ema, np.asarray(ids, dtype=np.int64), 1.0)
 
     def scores(self, graph, train_idx=None) -> np.ndarray:

@@ -57,6 +57,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.analysis import guarded_by
 from repro.featurestore.meter import TrafficMeter
 from repro.featurestore.placement import (PlacementMap, home_shard,
                                           identity_placement, solve_placement)
@@ -257,8 +258,19 @@ class Generation:
         self.state.slot_of = None
 
 
+@guarded_by("_lock", "_shadow", "_thread", "_refresh_err",
+            writes_only=("_live", "swaps", "refreshes"))
 class FeatureStore:
-    """Facade over the three feature tiers + the cache refresh lifecycle."""
+    """Facade over the three feature tiers + the cache refresh lifecycle.
+
+    Concurrency contract (machine-checked by ``gnscheck``): the refresh
+    thread, the serving worker, and the training loop coordinate through
+    ``_lock``.  ``_shadow``/``_thread``/``_refresh_err`` are read AND
+    written under it; ``_live`` and the monotonic counters follow the
+    publish/snapshot idiom — writes are locked so the reference swap and
+    increments are atomic, while lock-free snapshot reads (the
+    ``generation`` property, test assertions on ``swaps``) are the API.
+    """
 
     def __init__(self, features: np.ndarray, graph, cfg: CacheConfig, *,
                  policy: Optional[CachePolicy] = None,
@@ -366,7 +378,8 @@ class FeatureStore:
 
     @property
     def refreshing(self) -> bool:
-        t = self._thread
+        with self._lock:
+            t = self._thread
         return t is not None and t.is_alive()
 
     # ------------------------------------------------------------------
@@ -590,14 +603,15 @@ class FeatureStore:
             # generation is actually built
             from repro.sampling.adjacency import build_device_cache_adj
             dev_adj = build_device_cache_adj(state, adj, self.graph.degrees,
-                                             lam=lam)
+                                             lam=lam, meter=self.meter)
         gen = Generation(state=state, table=tbl, staged=buf,
                          staged_idx=staged_idx, lam=lam, cache_adj=adj,
                          device_adj=dev_adj)
         self._staging_owner[staged_idx] = gen
         self.meter.bytes_cache_fill += n * self._row_bytes
         self.meter.t_refresh += time.perf_counter() - t0
-        self.refreshes += 1
+        with self._lock:      # builder thread + owner thread both count
+            self.refreshes += 1
         return gen
 
     def _upload(self, buf: np.ndarray, state: Optional[CacheState] = None):
@@ -664,7 +678,11 @@ class FeatureStore:
         """Synchronous refresh: build and immediately publish as live."""
         if rng is None:
             rng = self._rng
-        if self.refreshing or self._shadow is not None:
+        with self._lock:
+            t = self._thread
+            pending = (t is not None and t.is_alive()) \
+                or self._shadow is not None
+        if pending:
             # absorb any in-flight async build first — two concurrent builds
             # would interleave writes into the same staging half
             self.wait_refresh()
@@ -679,13 +697,8 @@ class FeatureStore:
                       version: int = 0) -> bool:
         """Kick an async build of the next generation (shadow).  Returns False
         if a refresh is already in flight or awaiting swap."""
-        if self.refreshing or self._shadow is not None:
-            return False
-        # derive an independent child rng NOW (in the caller's thread) so the
-        # caller's stream is never mutated concurrently by the builder
-        seed = (rng if rng is not None else self._rng).integers(0, 2**63 - 1)
-        child = np.random.default_rng(seed)
-        staged_idx = self._free_staging_idx()
+        child = None
+        staged_idx = 0
 
         def _run():
             try:
@@ -693,14 +706,28 @@ class FeatureStore:
                 with self._lock:
                     self._shadow = gen
             except BaseException as e:   # surfaced at the next swap point
-                self._refresh_err = e
+                with self._lock:
+                    self._refresh_err = e
 
         t = threading.Thread(target=_run, daemon=True,
                              name="featurestore-refresh")
-        # publish + start under the lock: a concurrent wait_refresh (e.g.
-        # the serving loop kicks refreshes from its worker thread while the
-        # owner waits) must never see a created-but-unstarted thread
+        # one locked region from the pending-check through t.start(): the
+        # old check-then-start window let two callers both see "idle" and
+        # interleave builds into the same staging half, and a concurrent
+        # wait_refresh must never see a created-but-unstarted thread
         with self._lock:
+            cur = self._thread
+            if (cur is not None and cur.is_alive()) \
+                    or self._shadow is not None:
+                return False
+            # derive an independent child rng NOW (in the caller's thread,
+            # and only on the path that actually starts a build, so a False
+            # return never perturbs the caller's stream) so the caller's
+            # stream is never mutated concurrently by the builder
+            seed = (rng if rng is not None else self._rng).integers(
+                0, 2**63 - 1)
+            child = np.random.default_rng(seed)
+            staged_idx = self._free_staging_idx()
             self._thread = t
             t.start()
         return True
@@ -708,15 +735,18 @@ class FeatureStore:
     def swap_if_ready(self) -> bool:
         """Atomically publish a completed shadow generation.  Called between
         train steps — never concurrently with a reader holding a snapshot."""
-        if self._refresh_err is not None:
-            err, self._refresh_err = self._refresh_err, None
-            raise err
         with self._lock:
-            if self._shadow is None:
-                return False
-            self._live, self._shadow = self._shadow, None
-            self.swaps += 1
-            return True
+            # error take-and-clear inside the lock: the old lock-free read
+            # could race the builder's error publish and drop it
+            err = self._refresh_err
+            self._refresh_err = None
+            if err is None:
+                if self._shadow is None:
+                    return False
+                self._live, self._shadow = self._shadow, None
+                self.swaps += 1
+                return True
+        raise err
 
     def wait_refresh(self, timeout: Optional[float] = None) -> bool:
         """Block until an in-flight refresh finishes, then swap it in."""

@@ -53,7 +53,7 @@ class DeviceCacheAdj:
 
 
 def build_device_cache_adj(state, host_adj, degrees: np.ndarray,
-                           lam=None) -> DeviceCacheAdj:
+                           lam=None, meter=None) -> DeviceCacheAdj:
     """Materialize one generation's device CSR from the host induced CSR.
 
     Args:
@@ -61,6 +61,10 @@ def build_device_cache_adj(state, host_adj, degrees: np.ndarray,
       host_adj: ``graph.induced_cache_adjacency`` over the full id space.
       degrees: full-graph degree per node (the eq. 10 normalizer).
       lam: the generation's calibrated inclusion λ (None = eq. 11).
+      meter: optional :class:`~repro.featurestore.meter.TrafficMeter`; the
+        four array uploads below land on ``bytes_adj_upload`` (separate from
+        ``bytes_cache_upload`` so the sharded-upload ratio stays a pure
+        feature-table number).
 
     All importance inputs that the host sampler computes per batch
     (``probs[nbrs]`` → ``cache_hit_prob``) are precomputed here per ROW in
@@ -99,8 +103,13 @@ def build_device_cache_adj(state, host_adj, degrees: np.ndarray,
     hitp = np.zeros(rows, dtype=np.float32)
     hitp[occ] = cache_hit_prob(state.probs[nodes], state.size, lam=lam)
 
-    return DeviceCacheAdj(
+    adj = DeviceCacheAdj(
         indptr=jnp.asarray(indptr.astype(np.int32)),
         indices=jnp.asarray(indices),
         deg=jnp.asarray(deg),
         hitp=jnp.asarray(hitp))
+    if meter is not None:
+        meter.bytes_adj_upload += sum(
+            int(np.asarray(a).nbytes)
+            for a in (adj.indptr, adj.indices, adj.deg, adj.hitp))
+    return adj

@@ -27,6 +27,7 @@ from typing import Deque, Optional
 
 import numpy as np
 
+from repro.analysis import guarded_by
 from repro.featurestore.meter import TrafficMeter
 
 
@@ -41,8 +42,15 @@ class BatchRecord:
     hit_fraction: float         # device-tier hits / requested input nodes
 
 
+@guarded_by("lock", "submitted", "rejected")
 class ServeMeter:
-    """Latency + traffic accounting for one :class:`GNSServer`."""
+    """Latency + traffic accounting for one :class:`GNSServer`.
+
+    ``submitted``/``rejected`` are written from arbitrary client threads
+    (``GNSServer.submit``) and so live under ``lock`` — for reads too:
+    ``snapshot()`` runs on whatever thread asks for it.  Every other
+    counter is worker-only by construction and stays lock-free.
+    """
 
     def __init__(self, latency_window: int = 2048):
         self.traffic = TrafficMeter()       # serving-side tier view
@@ -114,9 +122,11 @@ class ServeMeter:
 
     def snapshot(self) -> dict:
         """JSON-safe summary (what `bench_serve` and the example print)."""
+        with self.lock:   # admission counters race client submit() threads
+            submitted, rejected = self.submitted, self.rejected
         return {
-            "submitted": self.submitted, "served": self.served,
-            "rejected": self.rejected, "expired": self.expired,
+            "submitted": submitted, "served": self.served,
+            "rejected": rejected, "expired": self.expired,
             "deadline_miss": self.deadline_miss, "errors": self.errors,
             "refresh_failures": self.refresh_failures,
             "batches": self.batches,

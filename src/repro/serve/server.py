@@ -36,6 +36,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.analysis import guarded_by
 from repro.serve.batcher import MicroBatcher
 from repro.serve.metrics import BatchRecord, ServeMeter
 
@@ -60,12 +61,15 @@ class ServeResult:
     cache_version: int = -1         # generation its batch was pinned to
 
 
+@guarded_by("_lock", writes_only=("_result", "_err"))
 class ServeFuture:
     """Completion handle for one submitted request.
 
     Completion is first-wins: a second ``_complete``/``_fail`` is ignored
     (a request is served OR failed, never re-resolved — defense in depth
-    for shutdown edges)."""
+    for shutdown edges).  ``_result``/``_err`` are written under ``_lock``;
+    ``result()`` reads them lock-free, which is safe because ``_ev.set()``
+    happens-after the write and ``_ev.wait()`` happens-before the read."""
 
     def __init__(self):
         self._ev = threading.Event()
@@ -108,6 +112,7 @@ class _Pending:
     deadline: Optional[float]         # absolute monotonic, None = unbounded
 
 
+@guarded_by("_state_lock", writes_only=("refresh_error", "_accepting"))
 class GNSServer:
     """The persistent serving loop over one :class:`~repro.gns.GNSEngine`.
 
@@ -133,6 +138,10 @@ class GNSServer:
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._drain = True
+        self._state_lock = threading.Lock()
+                              # guards WRITES of the worker->client flags
+                              # (refresh_error, _accepting): clients read
+                              # them lock-free as snapshots
         self._accepting = False
         self._last_version = -1
         self.refresh_error: Optional[BaseException] = None
@@ -148,7 +157,8 @@ class GNSServer:
         # not pay the generation build
         self.engine.ensure_cache(self._rng)
         self._stop.clear()
-        self._accepting = True
+        with self._state_lock:
+            self._accepting = True
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="gns-serve")
         self._thread.start()
@@ -161,7 +171,8 @@ class GNSServer:
         instead; queued requests are cancelled AFTER the join (never
         concurrently with the worker — a request must not be served and
         failed at the same time)."""
-        self._accepting = False
+        with self._state_lock:
+            self._accepting = False
         self._drain = drain
         self._stop.set()
         t = self._thread
@@ -286,7 +297,8 @@ class GNSServer:
                         store.begin_refresh(self._rng,
                                             version=store.version + 1)
                 except BaseException as e:
-                    self.refresh_error = e
+                    with self._state_lock:   # publish to client threads
+                        self.refresh_error = e
                     self.meter.refresh_failures += 1
             if self._stop.is_set() and (not self._drain
                                         or self.batcher.qsize() == 0):

@@ -1,0 +1,18 @@
+"""Fixture: meter-pairing warning (never imported — parsed only).
+
+Lives under a path the meter lint scopes to via --root; the scan root for
+fixtures makes every file in scope.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def unbooked_upload(buf, sharding):
+    tbl = jax.device_put(jnp.asarray(buf), sharding)   # meter-unpaired-transfer
+    return tbl
+
+
+def booked_upload(buf, sharding, meter):
+    tbl = jax.device_put(jnp.asarray(buf), sharding)
+    meter.bytes_cache_upload += int(tbl.nbytes)        # paired: clean
+    return tbl

@@ -1,0 +1,21 @@
+"""Fixture: retrace-hazard violations (never imported — parsed only)."""
+import functools
+
+import jax
+
+
+@jax.jit
+def stepper(params, batch, n_steps: int):     # retrace-scalar-arg: n_steps
+    return params, batch, n_steps
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def stepper_ok(params, batch, n_steps: int):  # static: clean
+    return params, batch, n_steps
+
+
+def drive(params, batches):
+    out = []
+    for b in batches:
+        out.append(stepper(params, b, len(b)))   # retrace-scalar-flow
+    return out

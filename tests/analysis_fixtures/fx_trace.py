@@ -1,0 +1,33 @@
+"""Fixture: trace-purity violations (never imported — parsed only)."""
+import random
+import time
+
+import jax
+
+_EVENTS = []
+
+
+@jax.jit
+def impure_step(x, flag):
+    if flag:                         # trace-host-branch: `flag` not static
+        x = x + 1
+    noise = random.random()          # trace-nondeterminism
+    t0 = time.perf_counter()         # trace-nondeterminism
+    _EVENTS.append(t0)               # trace-mutation (closed-over list)
+    return x * noise
+
+
+@jax.jit
+def counting_step(x):
+    global _COUNT                    # trace-global-state
+    _COUNT = 1
+    return x
+
+
+class Model:
+    def __call__(self, x):
+        return jax.jit(self._fwd)(x)
+
+    def _fwd(self, x):
+        self.calls = 0               # trace-self-mutation
+        return x

@@ -1,0 +1,22 @@
+"""Suite-wide test wiring: the gnscheck runtime lock sanitizer.
+
+Armed BEFORE any repro class is instantiated (locks are wrapped in
+ownership-tracking proxies at assignment time, i.e. inside ``__init__``):
+every test in the suite then runs with
+
+* unguarded writes to ``@guarded_by`` attributes raising
+  :class:`~repro.analysis.LockDisciplineError` at the faulting line, and
+* the global lock-acquisition order recorded, so the first A->B / B->A
+  inversion anywhere in the suite raises
+  :class:`~repro.analysis.LockOrderError` deterministically
+
+— the PR-5 ``begin_refresh``/``wait_refresh`` race class as a plain test
+failure instead of a stress-test lottery.
+"""
+import os
+
+os.environ.setdefault("REPRO_LOCK_SANITIZER", "1")
+
+from repro.analysis import enable_sanitizer  # noqa: E402
+
+enable_sanitizer(True)

@@ -1,0 +1,293 @@
+"""gnscheck's own coverage: every rule fires on its fixture (positive),
+the repo at HEAD is clean against the checked-in baseline (negative), the
+baseline ratchet rejects both new and stale entries, and the runtime lock
+sanitizer actually raises on unguarded writes and lock-order inversions.
+"""
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (LockDisciplineError, LockOrderError, TrackedLock,
+                            enable_sanitizer, guarded_by, holds_lock,
+                            reset_lock_order, sanitizer_enabled)
+from repro.analysis.baseline import compare, keyed, load, write
+from repro.analysis.common import RepoIndex, Violation, find_trace_roots
+from repro.analysis.__main__ import main, run_passes
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+SRC = REPO / "src" / "repro"
+
+
+@pytest.fixture(scope="module")
+def fixture_violations():
+    index = RepoIndex(FIXTURES, package_prefix="analysis_fixtures")
+    return run_passes(index)
+
+
+def _rules(violations, path=None):
+    return {v.rule for v in violations
+            if path is None or v.path == path}
+
+
+# ---------------------------------------------------------------------------
+# positive: one known violation per rule class
+# ---------------------------------------------------------------------------
+
+def test_trace_purity_rules_fire(fixture_violations):
+    rules = _rules(fixture_violations, "fx_trace.py")
+    assert {"trace-nondeterminism", "trace-host-branch", "trace-mutation",
+            "trace-global-state", "trace-self-mutation"} <= rules
+
+
+def test_lock_rules_fire(fixture_violations):
+    got = [(v.rule, v.symbol) for v in fixture_violations
+           if v.path == "fx_locks.py" and v.rule.startswith("lock-")]
+    assert ("lock-unguarded-write", "Store._refresh") in got   # _pending
+    assert ("lock-unguarded-read", "Store.peek") in got        # _shadow
+    assert ("lock-unguarded-write", "Store.publish") in got    # writes_only
+    assert ("lock-unguarded-read", "poll") in got              # external
+    # the correctly locked method is NOT flagged
+    assert all(sym != "Store.swap" for _, sym in got)
+
+
+def test_generation_rules_fire(fixture_violations):
+    vs = [v for v in fixture_violations if v.path == "fx_generation.py"]
+    assert {"gen-chained-read", "gen-multi-read",
+            "gen-direct-private"} <= {v.rule for v in vs}
+    # the pinned-snapshot idiom stays clean
+    assert all(v.symbol != "pinned_batch" for v in vs)
+
+
+def test_retrace_rules_fire(fixture_violations):
+    vs = [v for v in fixture_violations if v.path == "fx_retrace.py"]
+    assert {"retrace-scalar-arg", "retrace-scalar-flow"} <= \
+        {v.rule for v in vs}
+    # static_argnames exempts the annotated twin
+    assert all(v.symbol != "stepper_ok" for v in vs)
+
+
+def test_meter_lint_is_warning_tier(fixture_violations):
+    vs = [v for v in fixture_violations if v.path == "fx_meter.py"]
+    assert [v.rule for v in vs] == ["meter-unpaired-transfer"]
+    assert vs[0].severity == "warning"
+    assert vs[0].symbol == "unbooked_upload"
+
+
+def test_pad_registry_guards_the_padding_idiom():
+    # the real adjacency module still carries its power-of-two idiom …
+    index = RepoIndex(SRC, package_prefix="repro")
+    from repro.analysis import retrace
+    assert not [v for v in retrace.run(index)
+                if v.rule == "retrace-pad-registry"]
+    # … and a stripped copy of the function is caught
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        pkg = Path(td) / "sampling"
+        pkg.mkdir()
+        (pkg / "adjacency.py").write_text(
+            "def build_device_cache_adj(state, host_adj, degrees,"
+            " lam=None, meter=None):\n"
+            "    cap = max(1024, 7)\n"         # padding idiom dropped
+            "    return cap\n")
+        broken = RepoIndex(Path(td), package_prefix="x")
+        vs = [v for v in retrace.run(broken)
+              if v.rule == "retrace-pad-registry"]
+        assert vs and "bit_length" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# negative: the repo at HEAD is clean
+# ---------------------------------------------------------------------------
+
+def test_repo_is_clean_against_baseline():
+    index = RepoIndex(SRC, package_prefix="repro")
+    violations = run_passes(index)
+    base = load(REPO / ".github" / "gnscheck-baseline.txt")
+    new, stale = compare(violations, base)
+    assert not new, "\n".join(v.render() for v in new)
+    assert not stale, stale
+
+
+def test_trace_roots_cover_the_jit_surface():
+    index = RepoIndex(SRC, package_prefix="repro")
+    roots = find_trace_roots(index)
+    kinds = {r.kind for r in roots}
+    assert {"jit", "pallas", "shard_map"} <= kinds
+    # the sites the ISSUE names must be in the walked region
+    refs = {r.ref for r in roots}
+    assert "repro.gns.engine:make_train_step.train_step" in refs
+    assert any("pallas" == r.kind for r in roots)
+    reach = index.reachable([r.ref for r in roots])
+    assert len(reach) >= 40   # the traced call graph, not just the roots
+
+
+# ---------------------------------------------------------------------------
+# CLI + baseline ratchet
+# ---------------------------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path):
+    # fixtures: violations, no baseline -> nonzero
+    assert main(["--root", str(FIXTURES)]) == 1
+    # write a baseline, rerun against it -> zero (all baselined)
+    bl = tmp_path / "bl.txt"
+    assert main(["--root", str(FIXTURES), "--baseline", str(bl),
+                 "--write-baseline"]) == 0
+    assert main(["--root", str(FIXTURES), "--baseline", str(bl)]) == 0
+    # a stale entry (violation fixed but entry kept) -> nonzero
+    bl.write_text(bl.read_text() + "bogus-rule|gone.py|fn|x\n")
+    assert main(["--root", str(FIXTURES), "--baseline", str(bl)]) == 1
+    # warnings only fail under --strict-warnings
+    clean = tmp_path / "clean"
+    clean.mkdir()
+    (clean / "m.py").write_text(
+        "import jax, jax.numpy as jnp\n"
+        "def up(buf, sh):\n"
+        "    return jax.device_put(jnp.asarray(buf), sh)\n")
+    assert main(["--root", str(clean)]) == 0
+    assert main(["--root", str(clean), "--strict-warnings"]) == 1
+
+
+def test_cli_module_entrypoint_runs_clean_on_repo():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         "--baseline", str(REPO / ".github" / "gnscheck-baseline.txt")],
+        capture_output=True, text=True, cwd=str(REPO))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_baseline_keys_are_line_number_free(tmp_path):
+    v1 = Violation("r", "p.py", 10, "f", "m", detail="d")
+    v2 = Violation("r", "p.py", 99, "f", "m", detail="d")  # moved 89 lines
+    assert v1.key() == v2.key()
+    assert keyed([v1, v2]) == ["r|p.py|f|d", "r|p.py|f|d#2"]
+    bl = tmp_path / "b.txt"
+    write(bl, [v1, v2])
+    assert load(bl) == sorted(["r|p.py|f|d", "r|p.py|f|d#2"])
+    new, stale = compare([v2, v1], load(bl))
+    assert not new and not stale
+
+
+def test_suppression_comment():
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        (Path(td) / "m.py").write_text(
+            "import jax, time\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    t = time.time()  # gnscheck: ignore[trace-nondeterminism]\n"
+            "    u = time.time()\n"
+            "    return x\n")
+        index = RepoIndex(Path(td), package_prefix="x")
+        vs = [v for v in run_passes(index)
+              if v.rule == "trace-nondeterminism"]
+        assert len(vs) == 1 and vs[0].line == 5
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer
+# ---------------------------------------------------------------------------
+
+def test_sanitizer_is_armed_under_pytest():
+    assert sanitizer_enabled()    # conftest.py switched it on
+
+
+def test_unguarded_write_raises():
+    @guarded_by("_lock", "value")
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.value = 0        # __init__ is exempt (pre-publication)
+
+        def good(self, v):
+            with self._lock:
+                self.value = v
+
+        def bad(self, v):
+            self.value = v
+
+    b = Box()
+    assert isinstance(b._lock, TrackedLock)
+    b.good(7)
+    with pytest.raises(LockDisciplineError):
+        b.bad(8)
+    assert b.value == 7           # the faulting write never landed
+
+
+def test_writes_only_attrs_allow_lockfree_reads():
+    @guarded_by("_lock", writes_only=("live",))
+    class Pub:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.live = None
+
+        def publish(self, g):
+            with self._lock:
+                self.live = g
+
+    p = Pub()
+    p.publish(42)
+    assert p.live == 42           # snapshot read, no lock, no raise
+    with pytest.raises(LockDisciplineError):
+        p.live = 43               # but a bare write still needs the lock
+
+
+def test_holds_lock_decorator_enforces_ownership():
+    @guarded_by("_lock", "n")
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0
+
+        @holds_lock("_lock")
+        def _bump_locked(self):
+            self.n += 1
+
+        def bump(self):
+            with self._lock:
+                self._bump_locked()
+
+    c = C()
+    c.bump()
+    assert c.n == 1
+    with pytest.raises(LockDisciplineError):
+        c._bump_locked()          # called without the lock
+
+
+def test_lock_order_cycle_raises():
+    reset_lock_order()
+    try:
+        a = TrackedLock(threading.Lock(), "A.lock")
+        b = TrackedLock(threading.Lock(), "B.lock")
+        with a:
+            with b:               # records A -> B
+                pass
+        with pytest.raises(LockOrderError):
+            with b:
+                with a:           # B -> A closes the cycle
+                    pass
+        assert not a.locked()     # released before the raise
+    finally:
+        reset_lock_order()
+
+
+def test_real_featurestore_locks_are_tracked():
+    """The annotated production class actually gets wrapped locks, and its
+    refresh lifecycle runs clean under the sanitizer."""
+    import numpy as np
+    from repro.featurestore import CacheConfig, FeatureStore
+    from repro.graph.generate import powerlaw_graph
+
+    g = powerlaw_graph(300, avg_degree=4, seed=0)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 8)).astype(np.float32)
+    store = FeatureStore(feats, g, CacheConfig(fraction=0.2),
+                         train_idx=np.arange(100))
+    assert isinstance(store._lock, TrackedLock)
+    store.refresh(np.random.default_rng(0), version=0)
+    assert store.begin_refresh(np.random.default_rng(1), version=1)
+    assert store.wait_refresh(timeout=30.0)
+    assert store.swaps == 2 and store.refreshes == 2

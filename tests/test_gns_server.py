@@ -138,7 +138,8 @@ def test_server_submit_result_roundtrip(tiny_ds):
 def test_server_rejects_when_queue_full(tiny_ds):
     eng = _engine(tiny_ds, serve=ServeConfig(buckets=(8,), max_queue=2))
     srv = GNSServer(eng)
-    srv._accepting = True                 # accept without a worker draining
+    with srv._state_lock:                 # accept without a worker draining
+        srv._accepting = True
     srv.submit([1]); srv.submit([2])
     with pytest.raises(QueueFull):
         srv.submit([3])
@@ -150,7 +151,8 @@ def test_server_rejects_oversized_and_closed(tiny_ds):
     srv = GNSServer(eng)
     with pytest.raises(ServerClosed):
         srv.submit([1])                   # never started
-    srv._accepting = True
+    with srv._state_lock:
+        srv._accepting = True
     with pytest.raises(ValueError):
         srv.submit(np.arange(33))         # > largest bucket
     with pytest.raises(ValueError):
@@ -160,7 +162,8 @@ def test_server_rejects_oversized_and_closed(tiny_ds):
 def test_deadline_expiry_never_touches_the_device(tiny_ds):
     eng = _engine(tiny_ds)
     srv = GNSServer(eng)
-    srv._accepting = True
+    with srv._state_lock:
+        srv._accepting = True
     fut = srv.submit([1, 2, 3], deadline_ms=1.0)
     time.sleep(0.05)                      # expire while queued (no worker)
     srv.start()
