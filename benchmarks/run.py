@@ -8,6 +8,7 @@
   Fig 3    bench_convergence       F1 vs epoch, 4 samplers
   §Roofline bench_roofline         aggregates dry-run JSONs (no compute)
   Serving  bench_serve             micro-batched GNSServer vs infer() loop
+  Fabric   bench_fabric            multi-tenant fairness/isolation/routing
 
 ``python -m benchmarks.run`` runs all at CI scale (--full for paper scale);
 each prints CSV and persists JSON under benchmarks/results/.
@@ -27,9 +28,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_breakdown, bench_cache_sensitivity,
-                            bench_convergence, bench_input_nodes,
-                            bench_isolated, bench_roofline, bench_serve,
-                            bench_throughput)
+                            bench_convergence, bench_fabric,
+                            bench_input_nodes, bench_isolated,
+                            bench_roofline, bench_serve, bench_throughput)
     all_benches = {
         "throughput": bench_throughput.run,
         "input_nodes": bench_input_nodes.run,
@@ -39,6 +40,7 @@ def main(argv=None) -> None:
         "convergence": bench_convergence.run,
         "roofline": bench_roofline.run,
         "serve": bench_serve.run,
+        "fabric": bench_fabric.run,
     }
     names = (args.only.split(",") if args.only else list(all_benches))
     for name in names:

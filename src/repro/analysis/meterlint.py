@@ -1,16 +1,18 @@
-"""Warning-tier lint — TrafficMeter pairing.
+"""Error-tier lint — TrafficMeter pairing.
 
 The whole paper is an argument about *bytes moved between tiers*; the repo
 encodes that in ``TrafficMeter``.  A host↔device transfer that skips the
 books silently corrupts every ``upload_ratio`` / ``bytes_per_batch``
-acceptance number downstream, so: any function in ``featurestore/`` or
-``sampling/`` that issues a device transfer (``jax.device_put``,
-``jnp.asarray``/``jnp.array`` on host data, ``make_array_from_callback``)
-must also touch a meter in the same function body.
+acceptance number downstream, so: any function in the tier-transfer
+packages (``featurestore/``, ``sampling/``, ``gns/``, ``serve/``) that
+issues a device transfer (``jax.device_put``, ``jnp.asarray``/``jnp.array``
+on host data, ``make_array_from_callback``) must also touch a meter in the
+same function body.
 
-Warning tier: it never fails the build unless ``--strict-warnings`` — new
-tiers (ROADMAP item 3) should see the nag immediately but a prototype can
-still land behind a suppression.
+Error tier since the fabric PR: every engine transfer now funnels through
+``GNSEngine._put_batch`` (metered), so an unpaired transfer is a
+regression, not a nag — new code books its copy or lands behind an
+explicit suppression/baseline entry.
 """
 from __future__ import annotations
 
@@ -23,7 +25,8 @@ TRANSFER_CALLS = {"device_put", "make_array_from_callback",
                   "make_array_from_single_device_arrays"}
 ARRAY_CTORS = {"jnp.asarray", "jnp.array"}
 SCOPE_PREFIXES = ("repro/featurestore/", "repro/sampling/",
-                  "featurestore/", "sampling/")
+                  "repro/gns/", "repro/serve/",
+                  "featurestore/", "sampling/", "gns/", "serve/")
 # traced modules: jnp.asarray there is device-side math, not a tier transfer
 EXCLUDE_SUFFIXES = ("kernels.py", "ref.py", "rng.py", "ops.py")
 METER_MARKERS = {"meter", "bytes_cache_upload", "bytes_adj_upload",
@@ -85,5 +88,5 @@ def run(index: RepoIndex) -> List[Violation]:
                          f"(`{dotted(first.func)}`) with no TrafficMeter "
                          "accounting in the same function — unbooked "
                          "tier traffic"),
-                detail=local, severity="warning"))
+                detail=local, severity="error"))
     return out

@@ -14,8 +14,10 @@ Public surface:
   observed per-DP-group traffic (``CacheConfig(placement="locality")``).
 """
 from repro.featurestore.meter import TierStats, TrafficMeter
-from repro.featurestore.placement import (PlacementMap, home_shard,
-                                          identity_placement, solve_placement)
+from repro.featurestore.placement import (PlacementMap, RoutingTable,
+                                          home_shard, identity_placement,
+                                          routing_table_from_state,
+                                          solve_placement)
 from repro.featurestore.policies import (CachePolicy, POLICIES, make_policy,
                                          register_policy, degree_cache_probs,
                                          random_walk_cache_probs,
@@ -32,4 +34,5 @@ __all__ = [
     "reverse_pagerank_cache_probs", "uniform_cache_probs",
     "TrafficMeter", "TierStats",
     "PlacementMap", "home_shard", "identity_placement", "solve_placement",
+    "RoutingTable", "routing_table_from_state",
 ]

@@ -231,3 +231,47 @@ def solve_placement(group_traffic: np.ndarray,
     return PlacementMap(device_row_of_slot=dev, slot_of_device_row=inv,
                         n_shards=int(n_shards),
                         rows_per_shard=int(rows_per_shard))
+
+
+# ---------------------------------------------------------------------------
+# serving-side routing table
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoutingTable:
+    """Node -> owning cache shard, derived from one live generation.
+
+    This is the placement solver's output re-indexed for a request router:
+    ``shard_of_node[v]`` is the shard whose device-table block holds node
+    ``v``'s cached row (``-1`` = not cached this generation).  A serving
+    fabric sends each request to the worker whose home shard owns the most
+    of its ids, so cross-shard gathers become cross-worker hops only on
+    misses — the DGL dist-KV "route to the partition owner" shape, with the
+    partition book coming from observed traffic instead of a static graph
+    cut.
+    """
+    shard_of_node: np.ndarray   # int16 [num_nodes]; -1 = uncached
+    n_shards: int
+    version: int                # generation it was derived from
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of nodes with a known owner shard."""
+        n = len(self.shard_of_node)
+        return float((self.shard_of_node >= 0).sum()) / n if n else 0.0
+
+    def owners(self, node_ids: np.ndarray) -> np.ndarray:
+        """Owning shard per id (-1 where uncached)."""
+        return self.shard_of_node[np.asarray(node_ids, dtype=np.int64)]
+
+
+def routing_table_from_state(state, num_nodes: int) -> RoutingTable:
+    """Build the router's view of one (live, un-retired) generation."""
+    shard = np.full(int(num_nodes), -1, dtype=np.int16)
+    size = len(state.node_ids)
+    if size:
+        slots = np.arange(size, dtype=np.int32)
+        shard[state.node_ids] = state.shard_of(slots).astype(np.int16)
+    return RoutingTable(shard_of_node=shard,
+                        n_shards=max(int(state.n_shards), 1),
+                        version=int(state.version))

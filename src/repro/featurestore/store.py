@@ -59,8 +59,10 @@ import numpy as np
 
 from repro.analysis import guarded_by
 from repro.featurestore.meter import TrafficMeter
-from repro.featurestore.placement import (PlacementMap, home_shard,
-                                          identity_placement, solve_placement)
+from repro.featurestore.placement import (PlacementMap, RoutingTable,
+                                          home_shard, identity_placement,
+                                          routing_table_from_state,
+                                          solve_placement)
 from repro.featurestore.policies import CachePolicy, make_policy
 
 
@@ -381,6 +383,20 @@ class FeatureStore:
         with self._lock:
             t = self._thread
         return t is not None and t.is_alive()
+
+    def routing_table(self) -> Optional["RoutingTable"]:
+        """Node -> owning-shard view of the LIVE generation (None pre-build).
+
+        Derived from the live ``CacheState`` (whose ``slot_of`` is intact —
+        only retired generations drop it), so a serving router can re-adopt
+        it at every swap: the placement solver moves rows toward the DP
+        group that requests them, and this table is how the router learns
+        where they went.
+        """
+        gen = self._live
+        if gen is None:
+            return None
+        return routing_table_from_state(gen.state, self.graph.num_nodes)
 
     # ------------------------------------------------------------------
     # accounting modes

@@ -22,13 +22,15 @@ Quickstart::
     logits = engine.infer(node_ids)      # serves from the live cache
     print(engine.describe())
 """
-from repro.gns.config import (DataConfig, EngineConfig, MeshConfig,
-                              ModelConfig, PRESETS, ServeConfig)
+from repro.gns.config import (DataConfig, EngineConfig, FabricConfig,
+                              MeshConfig, ModelConfig, PRESETS, ServeConfig,
+                              TenantConfig)
 from repro.gns.engine import (GNSEngine, TrainReport, collate_groups,
                               make_train_step)
 
 __all__ = [
     "EngineConfig", "DataConfig", "MeshConfig", "ModelConfig", "ServeConfig",
+    "FabricConfig", "TenantConfig",
     "PRESETS",
     "GNSEngine", "TrainReport", "collate_groups", "make_train_step",
 ]

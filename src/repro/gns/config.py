@@ -71,6 +71,52 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class TenantConfig:
+    """One serving tenant: its fair-share weight and its admission quota.
+
+    ``weight`` sets the tenant's share of worker throughput under
+    saturation (stride scheduling: a weight-2 tenant is dequeued twice as
+    often as a weight-1 tenant).  ``max_queue`` bounds how many of the
+    tenant's requests may wait on any ONE worker — the per-tenant
+    backpressure that keeps a flooding tenant's QueueFull its own problem.
+    """
+    name: str
+    weight: float = 1.0
+    max_queue: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """Declarative multi-tenant serving fabric (``repro.serve.ServeFabric``).
+
+    Scales the single ``GNSServer`` worker to a fleet over ONE shared cache
+    generation: each worker owns a DP group (and therefore a home shard of
+    the sharded cache), requests are routed to the worker whose shard owns
+    their hot rows, and per-tenant weighted-fair queues isolate tenants
+    from each other's bursts.
+    """
+    workers: int = 2                # fleet size; worker i serves DP group i
+    tenants: Sequence[TenantConfig] = ()
+                                    # declared tenants; unknown tenants are
+                                    # auto-registered with the defaults below
+    default_weight: float = 1.0
+    default_quota: int = 64         # per-tenant per-worker queue bound for
+                                    # auto-registered tenants
+    routing: str = "locality"       # "locality" (placement-derived routing
+                                    # table + ownership vote) | "spread"
+                                    # (least-loaded, ignores the table)
+    stall_timeout_ms: float = 1000.0
+                                    # a worker whose heartbeat is older than
+                                    # this while it owes work is STALLED:
+                                    # routed around + its queue re-routed
+    watch_interval_ms: float = 20.0
+                                    # watchdog poll period (health checks,
+                                    # generation swaps, refresh kicks)
+    max_retries: int = 2            # failover re-routes per request before
+                                    # its future fails with WorkerDown
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Declarative serving sub-block (``repro.serve.GNSServer``).
 
@@ -103,6 +149,10 @@ class ServeConfig:
                                     # serving.
     latency_window: int = 2048      # rolling per-request latency records
                                     # kept for the p50/p99 view
+    fabric: Optional[FabricConfig] = None
+                                    # multi-tenant fleet settings; None means
+                                    # ``GNSEngine.serve_fabric()`` falls back
+                                    # to FabricConfig() defaults
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,8 +270,13 @@ def _build(cls_, d):
             continue
         v = d[f.name]
         sub = _NESTED.get((cls_, f.name))
+        seq_sub = _NESTED_SEQ.get((cls_, f.name))
         if sub is not None:
             kw[f.name] = _build(sub, v)
+        elif seq_sub is not None and v is not None:
+            kw[f.name] = tuple(
+                _build(seq_sub, el) if isinstance(el, dict) else el
+                for el in v)
         elif f.name in _TUPLE_FIELDS and v is not None:
             kw[f.name] = tuple(v)
         elif cls_ is AdamConfig and f.name == "moment_dtype" \
@@ -242,6 +297,12 @@ _NESTED = {
     (EngineConfig, "serve"): ServeConfig,
     (EngineConfig, "refresh"): RefreshConfig,
     (SamplerConfig, "cache"): CacheConfig,
+    (ServeConfig, "fabric"): FabricConfig,
+}
+
+# sequence-of-dataclass fields: rebuilt element-wise into a tuple
+_NESTED_SEQ = {
+    (FabricConfig, "tenants"): TenantConfig,
 }
 
 

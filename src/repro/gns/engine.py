@@ -185,6 +185,12 @@ class GNSEngine:
                 aggregate_impl=m.aggregate_impl, input_impl=m.input_impl,
                 input_kernel=m.input_kernel, sample_kernel=sk)
         self.meter = TrafficMeter()
+        # side-channel transfer meters: eval and one-shot-inference copies
+        # must book their wall time SOMEWHERE (the meterlint pass pairs
+        # every transfer with an accounting write) without skewing the
+        # training breakdown the paper's tables are built from
+        self.meter_eval = TrafficMeter()
+        self.meter_infer = TrafficMeter()
         if cfg.sampler == "gns":
             # the facade owns all three feature tiers + the refresh lifecycle
             self.store = FeatureStore(
@@ -268,6 +274,20 @@ class GNSEngine:
             return gen.table
         return self._dummy_cache
 
+    def _put_batch(self, host_batch, meter: Optional[TrafficMeter] = None):
+        """Host->device transfer with paired accounting.
+
+        Every engine transfer funnels through here so each copy's wall
+        time books to exactly one :class:`TrafficMeter` — training by
+        default, the eval/infer side meters or a serving meter when passed.
+        The meterlint pass enforces the pairing repo-wide (error tier).
+        """
+        m = meter if meter is not None else self.meter
+        t0 = time.perf_counter()
+        out = jax.device_put(host_batch)
+        m.t_copy += time.perf_counter() - t0
+        return out
+
     @staticmethod
     def _device_adj(mb: Optional[MiniBatch]):
         """The batch's pinned generation's device CSR (None = host backend).
@@ -294,9 +314,7 @@ class GNSEngine:
             home_shards = np.full(max(self.num_groups, 1), -1, np.int32)
             home_shards[0] = ls
         m = self.meter
-        t0 = time.perf_counter()
-        dev_batch = jax.device_put(mb.device)
-        m.t_copy += time.perf_counter() - t0
+        dev_batch = self._put_batch(mb.device)
         m.add_batch(mb.bytes_streamed)
         t0 = time.perf_counter()
         with shlib.use_mesh(self.mesh):     # no-op scope when mesh is None
@@ -409,10 +427,10 @@ class GNSEngine:
                 targets = idx[lo:lo + b]
                 mb = self.sampler.sample(targets, rng)
                 with shlib.use_mesh(self.mesh):
-                    _, acc = self._eval_step(self.params,
-                                             jax.device_put(mb.device),
-                                             self._cache_table(mb),
-                                             self._device_adj(mb))
+                    _, acc = self._eval_step(
+                        self.params,
+                        self._put_batch(mb.device, meter=self.meter_eval),
+                        self._cache_table(mb), self._device_adj(mb))
                 correct += float(acc)
                 total += 1.0
         finally:
@@ -480,19 +498,26 @@ class GNSEngine:
             sampler.adopt_generation()    # follow the live gen (monotonic)
         return sampler.sample(ids, rng)
 
-    def infer_compute(self, mb: MiniBatch) -> np.ndarray:
+    def infer_compute(self, mb: MiniBatch,
+                      meter: Optional[TrafficMeter] = None) -> np.ndarray:
         """Run the compiled inference step on a prepared batch.
 
         Returns logits ``[bucket, classes]`` (padded rows included — slice
         the leading real rows off).  One jit cache entry per bucket shape:
         the device table is an UNTRACED operand resolved per batch from the
         batch's pinned generation, so generation swaps never retrace.
+
+        ``meter`` receives the host->device copy time (serving callers pass
+        their own so concurrent workers never race one meter; default is
+        the engine's inference side meter).
         """
         with shlib.use_mesh(self.mesh):
-            logits = self._logits_step(self.params,
-                                       jax.device_put(mb.device),
-                                       self._cache_table(mb),
-                                       self._device_adj(mb))
+            logits = self._logits_step(
+                self.params,
+                self._put_batch(mb.device,
+                                meter=meter if meter is not None
+                                else self.meter_infer),
+                self._cache_table(mb), self._device_adj(mb))
         return np.asarray(logits)
 
     @property
@@ -511,6 +536,14 @@ class GNSEngine:
         from repro.serve import GNSServer
         return GNSServer(self, serve_cfg if serve_cfg is not None
                          else self.cfg.serve_config())
+
+    def serve_fabric(self, fabric_cfg=None, serve_cfg=None):
+        """A :class:`repro.serve.ServeFabric` fleet over this engine (not
+        started).  Defaults come from ``EngineConfig.serve.fabric`` (per
+        :meth:`EngineConfig.serve_config`, so the unified refresh hint
+        applies) — a bare ``FabricConfig()`` when unset."""
+        from repro.serve import ServeFabric
+        return ServeFabric(self, cfg=fabric_cfg, serve_cfg=serve_cfg)
 
     def infer(self, node_ids: np.ndarray) -> np.ndarray:
         """Mini-batch inference over arbitrary node ids.  [N, classes] f32.

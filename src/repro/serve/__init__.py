@@ -16,6 +16,12 @@ Public surface:
   cache-hit trajectory.
 * :class:`ServeResult` / :class:`ServeFuture` and the control-flow errors
   :class:`QueueFull` / :class:`ServerClosed`.
+* :class:`ServeFabric` — the multi-tenant, multi-worker fleet over ONE
+  engine: per-tenant weighted-fair scheduling (:class:`FairScheduler`),
+  placement-aware routing (:class:`Router`), watchdog failover
+  (:class:`WorkerDown` on exhausted retries), per-tenant/per-route
+  meter breakdowns.  Configured by ``FabricConfig``
+  (``EngineConfig.serve.fabric``); built via ``engine.serve_fabric()``.
 
 Quickstart::
 
@@ -27,14 +33,21 @@ Quickstart::
         logits = fut.result(timeout=10).logits
     print(server.meter.snapshot())             # p50/p99, hit rate, rejects
 """
-from repro.gns.config import ServeConfig
+from repro.gns.config import FabricConfig, ServeConfig, TenantConfig
 from repro.serve.batcher import MicroBatcher
-from repro.serve.metrics import BatchRecord, ServeMeter
+from repro.serve.fabric import (FabricWorker, ServeFabric, WorkerDown,
+                                WorkerKilled)
+from repro.serve.metrics import BatchRecord, ServeMeter, TenantStats
+from repro.serve.router import RouteDecision, Router
 from repro.serve.server import (GNSServer, QueueFull, ServeFuture,
                                 ServeResult, ServerClosed)
+from repro.serve.tenancy import FairScheduler, UnknownTenant
 
 __all__ = [
     "GNSServer", "ServeConfig", "MicroBatcher",
-    "ServeMeter", "BatchRecord",
+    "ServeMeter", "BatchRecord", "TenantStats",
     "ServeResult", "ServeFuture", "QueueFull", "ServerClosed",
+    "ServeFabric", "FabricWorker", "FabricConfig", "TenantConfig",
+    "FairScheduler", "UnknownTenant",
+    "Router", "RouteDecision", "WorkerDown", "WorkerKilled",
 ]

@@ -226,11 +226,9 @@ class GNSServer:
             node_ids=ids, future=ServeFuture(), t_submit=now,
             deadline=now + deadline_ms * 1e-3 if deadline_ms is not None
             else None)
-        with self.meter.lock:               # submit races across clients
-            self.meter.submitted += 1
+        self.meter.observe_submit()         # locked: races across clients
         if not self.batcher.offer(pending):
-            with self.meter.lock:
-                self.meter.rejected += 1
+            self.meter.observe_reject()
             raise QueueFull(
                 f"request queue at capacity ({self.cfg.max_queue})")
         if not self._accepting:
@@ -267,7 +265,7 @@ class GNSServer:
                 (expired if p.deadline is not None and p.deadline < t_start
                  else live).append(p)
             for p in expired:
-                self.meter.expired += 1
+                self.meter.observe_expired(t_start - p.t_submit)
                 p.future._complete(ServeResult(
                     logits=None, status="expired",
                     queue_wait_s=t_start - p.t_submit,
@@ -277,7 +275,7 @@ class GNSServer:
             try:
                 self._serve_batch(live, t_start)
             except BaseException as e:    # keep the loop alive; fail the batch
-                self.meter.errors += len(live)
+                self.meter.observe_error(len(live))
                 for p in live:
                     p.future._fail(e)
             # swap point: publish a completed async refresh BETWEEN batches
@@ -289,17 +287,18 @@ class GNSServer:
             if store is not None:
                 try:
                     if store.swap_if_ready():
-                        self.meter.swaps_observed += 1
+                        self.meter.observe_swap()
+                    n_batches = self.meter.batch_count()
                     due = (self.cfg.refresh_every is not None
-                           and self.meter.batches > 0
-                           and self.meter.batches % self.cfg.refresh_every == 0)
+                           and n_batches > 0
+                           and n_batches % self.cfg.refresh_every == 0)
                     if due and not store.refreshing and not self._stop.is_set():
                         store.begin_refresh(self._rng,
                                             version=store.version + 1)
                 except BaseException as e:
                     with self._state_lock:   # publish to client threads
                         self.refresh_error = e
-                    self.meter.refresh_failures += 1
+                    self.meter.observe_refresh_failure()
             if self._stop.is_set() and (not self._drain
                                         or self.batcher.qsize() == 0):
                 return
@@ -316,7 +315,9 @@ class GNSServer:
                 mb = eng.infer_prepare(ids, bucket=bucket, rng=self._rng)
         else:
             mb = eng.infer_prepare(ids, bucket=bucket, rng=self._rng)
-        logits = eng.infer_compute(mb)     # the per-bucket compiled step
+        # the per-bucket compiled step; its host->device copy books to the
+        # serving traffic meter alongside the tier accounting above
+        logits = eng.infer_compute(mb, meter=self.meter.traffic)
         compute_s = time.perf_counter() - t0
         t_done = time.monotonic()
         version = mb.cache_version
@@ -336,11 +337,9 @@ class GNSServer:
                 total_s=t_done - p.t_submit, bucket=bucket,
                 cache_version=version)
             lo += n
-            self.meter.served += 1
-            if p.deadline is not None and t_done > p.deadline:
-                self.meter.deadline_miss += 1
-            self.meter.observe_request(res.queue_wait_s, res.compute_s,
-                                       res.total_s)
+            self.meter.observe_request(
+                res.queue_wait_s, res.compute_s, res.total_s,
+                late=p.deadline is not None and t_done > p.deadline)
             p.future._complete(res)
 
     def _cancel_queued(self) -> None:

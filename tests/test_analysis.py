@@ -70,10 +70,13 @@ def test_retrace_rules_fire(fixture_violations):
     assert all(v.symbol != "stepper_ok" for v in vs)
 
 
-def test_meter_lint_is_warning_tier(fixture_violations):
+def test_meter_lint_is_error_tier(fixture_violations):
+    # promoted from warning tier in the fabric PR: every engine transfer
+    # funnels through the metered GNSEngine._put_batch, so unpaired
+    # transfers are regressions now
     vs = [v for v in fixture_violations if v.path == "fx_meter.py"]
     assert [v.rule for v in vs] == ["meter-unpaired-transfer"]
-    assert vs[0].severity == "warning"
+    assert vs[0].severity == "error"
     assert vs[0].symbol == "unbooked_upload"
 
 
@@ -140,15 +143,19 @@ def test_cli_exit_codes(tmp_path):
     # a stale entry (violation fixed but entry kept) -> nonzero
     bl.write_text(bl.read_text() + "bogus-rule|gone.py|fn|x\n")
     assert main(["--root", str(FIXTURES), "--baseline", str(bl)]) == 1
-    # warnings only fail under --strict-warnings
+    # an unpaired transfer is error tier now: it fails outright, and the
+    # baseline ratchet (not --strict-warnings) is the only way to carry it
     clean = tmp_path / "clean"
     clean.mkdir()
     (clean / "m.py").write_text(
         "import jax, jax.numpy as jnp\n"
         "def up(buf, sh):\n"
         "    return jax.device_put(jnp.asarray(buf), sh)\n")
-    assert main(["--root", str(clean)]) == 0
-    assert main(["--root", str(clean), "--strict-warnings"]) == 1
+    assert main(["--root", str(clean)]) == 1
+    bl2 = tmp_path / "bl2.txt"
+    assert main(["--root", str(clean), "--baseline", str(bl2),
+                 "--write-baseline"]) == 0
+    assert main(["--root", str(clean), "--baseline", str(bl2)]) == 0
 
 
 def test_cli_module_entrypoint_runs_clean_on_repo():
