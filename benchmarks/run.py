@@ -9,6 +9,7 @@
   §Roofline bench_roofline         aggregates dry-run JSONs (no compute)
   Serving  bench_serve             micro-batched GNSServer vs infer() loop
   Fabric   bench_fabric            multi-tenant fairness/isolation/routing
+  Stream   bench_stream            serve-while-mutating temporal replay
 
 ``python -m benchmarks.run`` runs all at CI scale (--full for paper scale);
 each prints CSV and persists JSON under benchmarks/results/.
@@ -30,7 +31,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_breakdown, bench_cache_sensitivity,
                             bench_convergence, bench_fabric,
                             bench_input_nodes, bench_isolated,
-                            bench_roofline, bench_serve, bench_throughput)
+                            bench_roofline, bench_serve, bench_stream,
+                            bench_throughput)
     all_benches = {
         "throughput": bench_throughput.run,
         "input_nodes": bench_input_nodes.run,
@@ -41,6 +43,7 @@ def main(argv=None) -> None:
         "roofline": bench_roofline.run,
         "serve": bench_serve.run,
         "fabric": bench_fabric.run,
+        "stream": bench_stream.run,
     }
     names = (args.only.split(",") if args.only else list(all_benches))
     for name in names:

@@ -259,6 +259,20 @@ class GNSSampler:
             "generation adoption must be monotonic",
             gen.version, self._gen.version)
         self._gen = gen
+        # streaming ingest: structure rides the swap.  A generation built
+        # after a delta merge carries the post-merge graph (Generation.graph);
+        # adopting it here — and only here — means every batch sampled before
+        # this call used the pre-merge CSR end to end, and every batch after
+        # sees the merged one, with the grown feature/label tiers adopted in
+        # the same step.
+        g = getattr(gen, "graph", None)
+        if g is not None and g is not self.g:
+            if g.num_nodes != self.g.num_nodes:
+                self._stamp = _Stamp(g.num_nodes)
+            self.g = g
+            self.features = self.store.features
+            if self.store.labels is not None:
+                self.labels = self.store.labels
         return True
 
     def ensure_cache(self, rng: Optional[np.random.Generator] = None):

@@ -1,4 +1,8 @@
-"""Data substrate: synthetic token corpus, sharded loaders, vocab cache."""
+"""Data substrate: synthetic token corpus, sharded loaders, vocab cache,
+temporal event streams (the serve-while-mutating ingest workload)."""
+from repro.data.temporal import (EventBatch, TemporalEventStream,
+                                 temporal_event_stream)
 from repro.data.tokens import SyntheticCorpus, TokenPipeline
 
-__all__ = ["SyntheticCorpus", "TokenPipeline"]
+__all__ = ["SyntheticCorpus", "TokenPipeline",
+           "EventBatch", "TemporalEventStream", "temporal_event_stream"]

@@ -61,6 +61,12 @@ class TrafficMeter:
                                    # bytes_cache_upload so the 1/n sharded-
                                    # upload acceptance ratio stays a pure
                                    # feature-table number
+    bytes_delta_upload: int = 0    # streaming-ingest payload absorbed at
+                                   # generation merges (edge-op log + new-
+                                   # node feature/label rows) — separate
+                                   # from bytes_cache_upload/bytes_adj_upload
+                                   # for the same reason: the 1/n upload-
+                                   # ratio assert must never see ingest bytes
     uploads: int = 0               # device-table uploads (one per generation)
     lanes_local: int = 0           # cache hits served by the requesting
                                    # group's home shard (no cache-axis hop)
@@ -102,8 +108,15 @@ class TrafficMeter:
         if len(ids) == 0:
             return
         hist = self.group_hist.get(group)
-        if hist is None or len(hist) != num_nodes:
+        if hist is None or len(hist) > num_nodes:
             hist = self.group_hist[group] = np.zeros(num_nodes, np.float64)
+        elif len(hist) < num_nodes:
+            # id space grew (streaming merge): PAD, never reset — the
+            # placement solver's demand signal must survive the merge or
+            # every generation after an ingest would cold-start contiguous
+            grown = np.zeros(num_nodes, np.float64)
+            grown[:len(hist)] = hist
+            hist = self.group_hist[group] = grown
         np.add.at(hist, np.asarray(ids, dtype=np.int64), 1.0)
 
     def group_slot_traffic(self, node_ids: np.ndarray,
@@ -116,9 +129,14 @@ class TrafficMeter:
         if not self.group_hist:
             return None
         groups = sorted(self.group_hist)
+        node_ids = np.asarray(node_ids, dtype=np.int64)
         out = np.zeros((len(groups), table_rows), np.float64)
         for gi, g in enumerate(groups):
-            out[gi, :len(node_ids)] = self.group_hist[g][node_ids]
+            hist = self.group_hist[g]
+            # ids beyond the histogram are nodes merged in after the last
+            # observation — zero demand until traffic touches them
+            known = node_ids < len(hist)
+            out[gi, :len(node_ids)][known] = hist[node_ids[known]]
         return out
 
     def group_ids(self) -> list:
@@ -143,6 +161,7 @@ class TrafficMeter:
             "bytes_cache_fill": self.bytes_cache_fill,
             "bytes_cache_upload": self.bytes_cache_upload,
             "bytes_adj_upload": self.bytes_adj_upload,
+            "bytes_delta_upload": self.bytes_delta_upload,
             "uploads": self.uploads,
             "steps": self.steps,
             "lanes_local": self.lanes_local,

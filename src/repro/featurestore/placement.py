@@ -104,7 +104,8 @@ def identity_placement(n_shards: int, table_rows: int) -> PlacementMap:
 def _assign(total: np.ndarray, pref_shard: np.ndarray, n_shards: int,
             rows_per_shard: int,
             seed: int = 0,
-            alt_prefs: Optional[np.ndarray] = None
+            alt_prefs: Optional[np.ndarray] = None,
+            pin_shard: Optional[np.ndarray] = None
             ) -> tuple[np.ndarray, np.ndarray]:
     """Greedy hot-row-first capacity assignment.
 
@@ -121,6 +122,11 @@ def _assign(total: np.ndarray, pref_shard: np.ndarray, n_shards: int,
     choice fall back to the remaining capacity in shard order, as before.
     Fully vectorized per pass (the dry-run solves paper-scale |C| ~ 1.1M
     rows; passes are bounded by ``alt_prefs`` columns).
+
+    ``pin_shard`` (incremental re-solve, streaming ingest): rows with a
+    non-negative entry claim THAT shard ahead of every preference pass —
+    hot-first under the same capacity bound, overflow falls through to the
+    normal passes.  ``None`` is bit-for-bit the original solve.
     """
     rows = len(total)
     assert rows == n_shards * rows_per_shard, (rows, n_shards, rows_per_shard)
@@ -129,12 +135,31 @@ def _assign(total: np.ndarray, pref_shard: np.ndarray, n_shards: int,
     order = np.lexsort((tiebreak, -np.asarray(total, dtype=np.float64)))
 
     pref = np.asarray(pref_shard, dtype=np.int64)[order]
-    # first-choice pass: the i-th row (in traffic order) wanting shard s gets
-    # it iff fewer than rows_per_shard hotter rows already claimed s
-    rank_in_pref = _cumcount(pref, n_shards)
-    got_pref = rank_in_pref < rows_per_shard
-    shard_ordered = np.where(got_pref, pref, -1)
-    free = rows_per_shard - np.bincount(pref[got_pref], minlength=n_shards)
+    if pin_shard is not None and (np.asarray(pin_shard) >= 0).any():
+        # pass 0 — pinned rows (unchanged since the last solve) keep their
+        # shard, bounding the migration set to rows that actually changed
+        pin = np.asarray(pin_shard, dtype=np.int64)[order]
+        shard_ordered = np.full(rows, -1, dtype=np.int64)
+        free = np.full(n_shards, rows_per_shard, dtype=np.int64)
+        pr = np.where(pin >= 0)[0]
+        cand = pin[pr]
+        ok = _cumcount(cand, n_shards) < free[cand]
+        shard_ordered[pr[ok]] = cand[ok]
+        free -= np.bincount(cand[ok], minlength=n_shards)
+        # first-choice pass for the remainder, against residual capacity
+        un = np.where(shard_ordered < 0)[0]
+        cand = pref[un]
+        ok = _cumcount(cand, n_shards) < free[cand]
+        shard_ordered[un[ok]] = cand[ok]
+        free -= np.bincount(cand[ok], minlength=n_shards)
+    else:
+        # first-choice pass: the i-th row (in traffic order) wanting shard s
+        # gets it iff fewer than rows_per_shard hotter rows already claimed s
+        rank_in_pref = _cumcount(pref, n_shards)
+        got_pref = rank_in_pref < rows_per_shard
+        shard_ordered = np.where(got_pref, pref, -1)
+        free = rows_per_shard - np.bincount(pref[got_pref],
+                                            minlength=n_shards)
 
     # ranked-alternative passes: unassigned rows (still hot-first) contend
     # for their c-th choice against whatever capacity the earlier passes
@@ -174,7 +199,8 @@ def _cumcount(values: np.ndarray, n_values: int) -> np.ndarray:
 def solve_placement(group_traffic: np.ndarray,
                     n_shards: int, rows_per_shard: int, *,
                     group_ids: Optional[Sequence[int]] = None,
-                    seed: int = 0) -> PlacementMap:
+                    seed: int = 0,
+                    pin_shard: Optional[np.ndarray] = None) -> PlacementMap:
     """Balanced locality assignment from per-group slot request counts.
 
     Args:
@@ -194,6 +220,9 @@ def solve_placement(group_traffic: np.ndarray,
     assignment is capacity-bounded so each shard ends with exactly
     ``rows_per_shard`` rows.  All-zero histograms decay to
     :func:`identity_placement`.
+
+    ``pin_shard`` (int [table_rows], ``-1`` = free) pre-claims shards for
+    unchanged rows — see :func:`solve_placement_incremental`.
     """
     traffic = np.asarray(group_traffic, dtype=np.float64)
     assert traffic.ndim == 2, traffic.shape
@@ -220,7 +249,8 @@ def solve_placement(group_traffic: np.ndarray,
                              ranked_homes[1:], -1).T               # [rows, G-1]
 
     shard_of, order = _assign(total, pref, n_shards, rows_per_shard,
-                              seed=seed, alt_prefs=alt_prefs)
+                              seed=seed, alt_prefs=alt_prefs,
+                              pin_shard=pin_shard)
     # local rows: order of assignment within each shard (hot rows first),
     # derived from the SAME visit order the shards were assigned in
     local = np.empty(rows, dtype=np.int64)
@@ -231,6 +261,28 @@ def solve_placement(group_traffic: np.ndarray,
     return PlacementMap(device_row_of_slot=dev, slot_of_device_row=inv,
                         n_shards=int(n_shards),
                         rows_per_shard=int(rows_per_shard))
+
+
+def solve_placement_incremental(group_traffic: np.ndarray,
+                                n_shards: int, rows_per_shard: int, *,
+                                pin_shard: np.ndarray,
+                                group_ids: Optional[Sequence[int]] = None,
+                                seed: int = 0) -> PlacementMap:
+    """Bounded-migration re-solve for streaming ingest.
+
+    ``pin_shard[s]`` is the shard slot ``s``'s row held at the LAST solve
+    when its demand signature (hottest group + degree) is unchanged since
+    then, else ``-1``.  Pinned rows keep their shard (hot-first under the
+    capacity bound — ties can spill a cold pinned row, keeping shards
+    exactly balanced); only changed/new rows are re-assigned through the
+    normal preference passes.  Because an unchanged row's previous shard
+    was already the home shard of its hottest group, pinning preserves the
+    locality the full solve achieved — ``route_local_fraction`` cannot
+    regress beyond the changed set (CI-asserted in the stream smoke).
+    """
+    return solve_placement(group_traffic, n_shards, rows_per_shard,
+                           group_ids=group_ids, seed=seed,
+                           pin_shard=np.asarray(pin_shard, dtype=np.int64))
 
 
 # ---------------------------------------------------------------------------

@@ -62,7 +62,8 @@ from repro.featurestore.meter import TrafficMeter
 from repro.featurestore.placement import (PlacementMap, RoutingTable,
                                           home_shard, identity_placement,
                                           routing_table_from_state,
-                                          solve_placement)
+                                          solve_placement,
+                                          solve_placement_incremental)
 from repro.featurestore.policies import CachePolicy, make_policy
 
 
@@ -237,6 +238,12 @@ class Generation:
                                 # sampling); rides the atomic swap with the
                                 # table so structure and features publish
                                 # together
+    graph: object = None        # the CSRGraph this generation was built
+                                # against (streaming ingest: a merge swaps
+                                # the store's graph at a build boundary, and
+                                # samplers adopt structure WITH the
+                                # generation — pre-merge batches keep
+                                # sampling the pre-merge graph)
     retired: bool = False       # staging half recycled by a newer build
 
     @property
@@ -255,13 +262,15 @@ class Generation:
         against this generation still needs its draw structure."""
         self.retired = True
         self.cache_adj = None
+        self.graph = None     # samplers adopted long ago; don't pin O(E)
         self.state.probs = None
         self.state.in_cache = None
         self.state.slot_of = None
 
 
 @guarded_by("_lock", "_shadow", "_thread", "_refresh_err",
-            writes_only=("_live", "swaps", "refreshes"))
+            writes_only=("_live", "swaps", "refreshes",
+                         "merges_applied", "rows_migrated"))
 class FeatureStore:
     """Facade over the three feature tiers + the cache refresh lifecycle.
 
@@ -343,6 +352,19 @@ class FeatureStore:
         self._rng = np.random.default_rng(seed)
         self.refreshes = 0
         self.swaps = 0
+        # --- streaming ingest (attach_stream) ----------------------------
+        self.labels: Optional[np.ndarray] = None
+                                    # host label array, grown alongside
+                                    # `features` at merges (set by the engine;
+                                    # plain ref-swap like `features`)
+        self._stream = None         # DeltaBuffer | None — staged mutations
+        self.stream_cfg = None      # StreamConfig | None
+        self._merge_listeners: list = []
+        self._placement_sig: Optional[dict] = None
+                                    # previous solve's per-row demand
+                                    # signature (incremental re-solve pins)
+        self.merges_applied = 0
+        self.rows_migrated = 0      # rows the incremental re-solve moved
         self.record = True          # False: suspend meter + policy feedback
                                     # (evaluation must not skew training
                                     # metrics or the adaptive traffic EMA)
@@ -519,7 +541,11 @@ class FeatureStore:
         # and holding our own reference keeps the array alive mid-read
         sl_map = gen.state.slot_of if gen is not None else None
         if gen is not None and not gen.retired and sl_map is not None:
-            sl = sl_map[ids]
+            # ids past the map are nodes merged in AFTER this generation was
+            # drawn (streaming ingest): pure misses, served by the host tier
+            sl = np.full(len(ids), -1, dtype=sl_map.dtype)
+            known = ids < len(sl_map)
+            sl[known] = sl_map[ids[known]]
             hit = sl >= 0
             rows[hit] = gen.staged[sl[hit]]
             if gen.retired:
@@ -563,7 +589,8 @@ class FeatureStore:
         return lam
 
     def _solve_placement(self, state: CacheState,
-                         rng: np.random.Generator) -> Optional[PlacementMap]:
+                         rng: np.random.Generator,
+                         graph=None) -> Optional[PlacementMap]:
         """Locality placement for one generation (None = stay contiguous).
 
         Uses the meter's per-DP-group request histograms restricted to the
@@ -571,6 +598,13 @@ class FeatureStore:
         store whose batches never went through ``assemble_input``) the
         layout stays contiguous, so reproducibility-sensitive runs get the
         PR 2 blocks for free.
+
+        Streaming stores (``attach_stream`` with ``incremental_placement``)
+        re-solve **incrementally**: every row whose demand signature
+        (hottest requesting group + degree) is unchanged since the previous
+        solve keeps its shard via the solver's pin pass, so only rows the
+        ingest actually touched migrate — bounded migration per merge, and
+        the serving router's local fraction cannot collapse on a swap.
         """
         if self.cfg.placement != "locality" or self.n_shards <= 1:
             return None
@@ -578,19 +612,149 @@ class FeatureStore:
                                                 state.table_rows)
         if traffic is None:
             return None
-        return solve_placement(traffic, self.n_shards, state.rows_per_shard,
-                               group_ids=self.meter.group_ids(),
-                               seed=int(rng.integers(2 ** 31)))
+        if graph is None:
+            graph = self.graph
+        seed = int(rng.integers(2 ** 31))
+        gids = list(self.meter.group_ids())
+        node_ids = np.asarray(state.node_ids, dtype=np.int64)
+        n = len(node_ids)
+        # per-slot demand signature: hottest group (-1 when untouched) + degree
+        total = traffic.sum(axis=0)
+        hot = np.asarray(gids, dtype=np.int64)[np.argmax(traffic, axis=0)]
+        hot = np.where(total > 0, hot, -1)[:n]
+        deg = np.asarray(graph.degrees)[node_ids].astype(np.int64)
+        prev = self._placement_sig
+        scfg = self.stream_cfg
+        pin = None
+        if (prev is not None and len(prev["node_ids"])
+                and scfg is not None and scfg.incremental_placement):
+            pos = np.searchsorted(prev["node_ids"], node_ids)
+            pos = np.clip(pos, 0, len(prev["node_ids"]) - 1)
+            common = prev["node_ids"][pos] == node_ids
+            same = common & (prev["hot"][pos] == hot) \
+                & (prev["degree"][pos] == deg)
+            pin = np.full(state.table_rows, -1, dtype=np.int64)
+            pin[:n][same] = prev["shard"][pos[same]]
+        if pin is not None and (pin >= 0).any():
+            pm = solve_placement_incremental(
+                traffic, self.n_shards, state.rows_per_shard,
+                pin_shard=pin, group_ids=gids, seed=seed)
+        else:
+            pm = solve_placement(traffic, self.n_shards,
+                                 state.rows_per_shard,
+                                 group_ids=gids, seed=seed)
+        new_shard = (np.asarray(pm.device_row_of_slot[:n], dtype=np.int64)
+                     // state.rows_per_shard)
+        if prev is not None and len(prev["node_ids"]):
+            pos = np.searchsorted(prev["node_ids"], node_ids)
+            pos = np.clip(pos, 0, len(prev["node_ids"]) - 1)
+            common = prev["node_ids"][pos] == node_ids
+            moved = int((new_shard[common]
+                         != prev["shard"][pos[common]]).sum())
+            if moved:
+                with self._lock:
+                    self.rows_migrated += moved
+        order = np.argsort(node_ids, kind="stable")
+        self._placement_sig = {"node_ids": node_ids[order],
+                               "shard": new_shard[order],
+                               "hot": hot[order],
+                               "degree": deg[order]}
+        return pm
+
+    # ------------------------------------------------------------------
+    # streaming ingest (repro.stream)
+    # ------------------------------------------------------------------
+    def attach_stream(self, buffer, cfg=None) -> None:
+        """Wire a :class:`repro.stream.DeltaBuffer` into the refresh cycle.
+
+        Producers stage mutations into ``buffer`` at any time; every
+        subsequent generation build drains it FIRST (``_absorb_deltas``), so
+        structure changes only ever publish through the atomic swap and
+        in-flight batches pinned to older generations replay bitwise
+        identically.  Set once, before serving starts.
+        """
+        from repro.gns.config import StreamConfig
+        self._stream = buffer
+        self.stream_cfg = cfg if cfg is not None else StreamConfig()
+
+    def add_merge_listener(self, cb) -> None:
+        """``cb(store, batch)`` runs on the builder thread right after a
+        drained :class:`DeltaBatch` is folded into the host tiers (the
+        engine uses this to keep its dataset view in sync)."""
+        self._merge_listeners.append(cb)
+
+    def pending_deltas(self) -> int:
+        """Ops staged in the attached stream buffer (0 when none attached)."""
+        buf = self._stream
+        return buf.pending() if buf is not None else 0
+
+    def stream_merge_due(self) -> bool:
+        """True when enough deltas are staged to justify kicking a refresh
+        (the fabric watchdog's drain trigger)."""
+        cfg = self.stream_cfg
+        if self._stream is None or cfg is None:
+            return False
+        return self.pending_deltas() >= max(int(cfg.merge_min_pending), 1)
+
+    def _absorb_deltas(self) -> bool:
+        """Drain the stream buffer and fold it into the host tiers.
+
+        Runs at the top of ``_build`` — generation builds are serialized
+        (``begin_refresh`` single-flight + ``refresh`` absorbing in-flight
+        builds), so this is the ONLY writer of ``graph``/``features``/
+        ``labels``, and each is republished by a single reference swap
+        (features strictly before graph: any reader that can see post-merge
+        node ids must also see their feature rows).  Pre-merge readers keep
+        their own refs via the pinned generation and never observe the swap.
+        """
+        buf = self._stream
+        if buf is None or buf.pending() == 0:
+            return False
+        batch = buf.drain()
+        if batch is None:
+            return False
+        # lazy import: keeps featurestore <-> stream from importing cyclically
+        from repro.stream.merge import merge_delta_csr
+        cfg = self.stream_cfg
+        sym = cfg.symmetrize if cfg is not None else True
+        new_graph = merge_delta_csr(self.graph, batch, symmetrize=sym)
+        feats = self.features
+        if batch.num_new_nodes:
+            feats = np.concatenate(
+                [np.asarray(self.features),
+                 batch.node_feats.astype(np.float32)])
+            if self.labels is not None:
+                lbl = (batch.node_labels if batch.node_labels is not None
+                       else np.zeros(batch.num_new_nodes, np.int64))
+                self.labels = np.concatenate(
+                    [self.labels, lbl.astype(self.labels.dtype)])
+        self.features = feats           # features BEFORE graph (see above)
+        self.graph = new_graph
+        self.policy.bind(new_graph, self.train_idx)
+        # structure changed: every cached score/λ is stale
+        self._static_probs = None
+        self._lam_cache = None
+        self.meter.bytes_delta_upload += batch.payload_bytes
+        with self._lock:
+            self.merges_applied += 1
+        for cb in list(self._merge_listeners):
+            cb(self, batch)
+        return True
 
     def _build(self, rng: np.random.Generator, version: int,
                staged_idx: int) -> Generation:
         """Build one full generation: score → draw → place → gather → upload."""
         t0 = time.perf_counter()
+        self._absorb_deltas()
+        g = self.graph      # ONE snapshot: everything this generation carries
+                            # (membership, probs, adjacency, routing) must
+                            # come from the same structure
         probs = self._policy_probs()
-        state = sample_cache(self.graph, self.cfg, rng,
+        state = sample_cache(g, self.cfg, rng,
                              train_idx=self.train_idx, probs=probs,
-                             version=version)
-        state.placement = self._solve_placement(state, rng)
+                             version=version,
+                             n_shards=self.n_shards, table_rows=self.size)
+        state.placement = self._solve_placement(state, rng, graph=g)
         # recycle this staging half: retire its previous owner BEFORE writing
         # so stale snapshots fall back to the host tier instead of reading
         # another generation's rows (see gather_rows)
@@ -611,18 +775,18 @@ class FeatureStore:
             time.sleep(self.refresh_delay)            # test hook
         tbl = self._upload(buf, state)
         lam = self._solve_lambda(probs)
-        adj = (self.graph.induced_cache_adjacency(state.in_cache)
+        adj = (g.induced_cache_adjacency(state.in_cache)
                if self.build_adjacency else None)
         dev_adj = None
         if self.build_device_adj and adj is not None:
             # lazy import: featurestore stays jax-free until a device
             # generation is actually built
             from repro.sampling.adjacency import build_device_cache_adj
-            dev_adj = build_device_cache_adj(state, adj, self.graph.degrees,
+            dev_adj = build_device_cache_adj(state, adj, g.degrees,
                                              lam=lam, meter=self.meter)
         gen = Generation(state=state, table=tbl, staged=buf,
                          staged_idx=staged_idx, lam=lam, cache_adj=adj,
-                         device_adj=dev_adj)
+                         device_adj=dev_adj, graph=g)
         self._staging_owner[staged_idx] = gen
         self.meter.bytes_cache_fill += n * self._row_bytes
         self.meter.t_refresh += time.perf_counter() - t0

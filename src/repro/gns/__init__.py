@@ -24,13 +24,13 @@ Quickstart::
 """
 from repro.gns.config import (DataConfig, EngineConfig, FabricConfig,
                               MeshConfig, ModelConfig, PRESETS, ServeConfig,
-                              TenantConfig)
+                              StreamConfig, TenantConfig)
 from repro.gns.engine import (GNSEngine, TrainReport, collate_groups,
                               make_train_step)
 
 __all__ = [
     "EngineConfig", "DataConfig", "MeshConfig", "ModelConfig", "ServeConfig",
-    "FabricConfig", "TenantConfig",
+    "FabricConfig", "StreamConfig", "TenantConfig",
     "PRESETS",
     "GNSEngine", "TrainReport", "collate_groups", "make_train_step",
 ]

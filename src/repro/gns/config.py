@@ -175,6 +175,31 @@ class RefreshConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Declarative streaming-ingest sub-block (``repro.stream``).
+
+    Governs the :class:`~repro.stream.DeltaBuffer` the engine's
+    ``ingest()`` surface stages edge/node deltas into, and when/how the
+    store folds them into the live structure.  Deltas are merged ONLY at a
+    generation boundary (``FeatureStore._build``), so the atomic swap that
+    already carries features carries structure too — in-flight batches
+    stay pinned to the pre-merge generation, bitwise-identical.
+    """
+    max_pending: int = 4096         # DeltaBuffer admission bound: ops staged
+                                    # beyond this are REJECTED (QueueFull —
+                                    # the serving tier's discipline)
+    merge_min_pending: int = 1      # the fabric watchdog kicks a merging
+                                    # refresh once this many ops are buffered
+    incremental_placement: bool = True
+                                    # locality re-solve touches only rows
+                                    # whose traffic/degree changed since the
+                                    # last solve (bounded migration set);
+                                    # False = full re-solve every generation
+    symmetrize: bool = True         # mirror each delta op (undirected CSR —
+                                    # matches CSRGraph.from_edges)
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """One declarative description of a GNS run (see module docstring)."""
     sampler: str = "gns"                # ns | gns | ladies | lazygcn
@@ -191,6 +216,10 @@ class EngineConfig:
                                         # unified refresh hint (overrides
                                         # cache.period/async_refresh AND
                                         # serve.refresh_every when set)
+    stream: Optional[StreamConfig] = None
+                                        # streaming-ingest settings; None
+                                        # still allows ``engine.ingest()``
+                                        # (lazy-attached with defaults)
     seed: int = 0
     prefetch: bool = False              # fit() default (overridable per call)
 
@@ -296,6 +325,7 @@ _NESTED = {
     (EngineConfig, "mesh"): MeshConfig,
     (EngineConfig, "serve"): ServeConfig,
     (EngineConfig, "refresh"): RefreshConfig,
+    (EngineConfig, "stream"): StreamConfig,
     (SamplerConfig, "cache"): CacheConfig,
     (ServeConfig, "fabric"): FabricConfig,
 }
@@ -333,4 +363,15 @@ PRESETS: dict = {
         sampling=SamplerConfig(batch_size=512, fanouts=(5, 10, 15),
                                layer_size=512),
         cache=CacheConfig(fraction=0.05, period=1)),
+    # benchmarks/bench_stream.py + the temporal-event replay scenario:
+    # serve-while-mutating with locality placement over a sharded cache,
+    # deltas drained by the fabric watchdog at generation boundaries
+    "stream_replay": EngineConfig(
+        sampler="gns",
+        data=DataConfig(name="ogbn-products", scale=0.25),
+        sampling=SamplerConfig(batch_size=256, fanouts=(5, 10)),
+        cache=CacheConfig(fraction=0.05, strategy="adaptive",
+                          placement="locality", shards=2),
+        serve=ServeConfig(buckets=(32, 128), max_wait_ms=2.0),
+        stream=StreamConfig(merge_min_pending=1)),
 }

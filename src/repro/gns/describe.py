@@ -377,8 +377,10 @@ def _gnn_cfg_stub():
 # ---------------------------------------------------------------------------
 
 # keys that vary run-to-run without the configuration changing: wall-clock
-# measurements and per-process memory analysis have no place in a diff
-_VOLATILE = ("compile_s", "memory_analysis", "meter")
+# measurements, per-process memory analysis, and streaming-ingest run state
+# (staged/merged/migrated counts) have no place in a diff
+_VOLATILE = ("compile_s", "memory_analysis", "meter",
+             "pending_deltas", "merges_applied", "rows_migrated")
 
 
 def _flatten(d: dict, prefix: str = "") -> dict:

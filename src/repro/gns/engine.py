@@ -259,6 +259,11 @@ class GNSEngine:
         # while jax.jit keys the one logits step per bucket shape (a small
         # fixed set of compiled steps, never retraced in steady state)
         self._bucket_samplers: dict = {}
+        # streaming ingest (repro.stream): wired eagerly when the config
+        # declares it, lazily on the first ingest() otherwise
+        self._stream = None
+        if cfg.stream is not None and self.store is not None:
+            self._init_stream(cfg.stream)
 
     # ------------------------------------------------------------------
     def _cache_table(self, mb: Optional[MiniBatch] = None):
@@ -577,6 +582,94 @@ class GNSEngine:
         return out
 
     # ------------------------------------------------------------------
+    # streaming ingest (repro.stream)
+    # ------------------------------------------------------------------
+    def _init_stream(self, scfg=None):
+        """Attach a :class:`repro.stream.DeltaBuffer` to the store."""
+        from repro.gns.config import StreamConfig
+        from repro.stream import DeltaBuffer
+        assert self.store is not None, (
+            "streaming ingest rides the GNS feature store's generation "
+            f"machinery — sampler={self.cfg.sampler!r} has no store")
+        if scfg is None:
+            scfg = (self.cfg.stream if self.cfg.stream is not None
+                    else StreamConfig())
+        buf = DeltaBuffer(self.ds.graph.num_nodes, self.ds.feat_dim,
+                          max_pending=scfg.max_pending)
+        self.store.labels = self.ds.labels
+        self.store.attach_stream(buf, scfg)
+        self.store.add_merge_listener(self._on_merge)
+        self._stream = buf
+        return buf
+
+    def _on_merge(self, store, batch) -> None:
+        """Builder-thread merge callback: re-point the engine's dataset view
+        at the post-merge host tiers (pure reference swaps — samplers adopt
+        structure separately, at their own swap point)."""
+        self.ds.graph = store.graph
+        self.ds.features = store.features
+        if store.labels is not None:
+            self.ds.labels = store.labels
+
+    @property
+    def stream(self):
+        """The delta staging buffer (created on first touch)."""
+        return self._stream if self._stream is not None \
+            else self._init_stream()
+
+    @property
+    def pending_deltas(self) -> int:
+        """Staged mutations awaiting the next generation merge."""
+        return self.store.pending_deltas() if self.store is not None else 0
+
+    def ingest(self, src, dst, op: str = "insert") -> int:
+        """Stage edge mutations for the next generation merge.
+
+        Non-blocking and thread-safe (serving stays live); raises
+        :class:`repro.serve.QueueFull` past ``stream.max_pending``.  The
+        edges become visible to sampling/serving only when a generation
+        built after the merge is adopted — in-flight batches replay
+        bitwise-identically against their pinned pre-merge generation.
+        Returns the first assigned sequence number.
+        """
+        buf = self.stream
+        if op == "insert":
+            return buf.add_edges(src, dst)
+        assert op == "delete", f"op must be insert|delete, got {op!r}"
+        return buf.delete_edges(src, dst)
+
+    def ingest_nodes(self, features: np.ndarray,
+                     labels: Optional[np.ndarray] = None) -> np.ndarray:
+        """Stage new nodes (+feature rows); returns their assigned ids.
+
+        Ids are allocated contiguously above the current id space, so
+        staged edges may reference them immediately.
+        """
+        return self.stream.add_nodes(features, labels)
+
+    def ingest_events(self, ev) -> int:
+        """Stage one :class:`repro.data.temporal.EventBatch` (nodes first,
+        then the edges that may reference them)."""
+        buf = self.stream
+        if ev.node_feats is not None and len(ev.node_feats):
+            ids = buf.add_nodes(ev.node_feats, ev.node_labels)
+            assert int(ids[0]) == ev.node_base, (
+                "event batches must be ingested in stream order",
+                int(ids[0]), ev.node_base)
+        return buf.add_edges(ev.src, ev.dst)
+
+    def merge_deltas(self):
+        """Force a merge NOW: synchronous refresh (drains the buffer at the
+        build boundary) + adoption by the training sampler.  The serving
+        path instead lets the fabric watchdog kick an ASYNC refresh when
+        ``store.stream_merge_due()`` — same machinery, no pause.
+        """
+        assert self.store is not None
+        gen = self.store.refresh(version=self.store.version + 1)
+        self.sampler.adopt_generation()
+        return gen
+
+    # ------------------------------------------------------------------
     def describe(self) -> dict:
         """Lowering/traffic report for THIS config (what dryrun_gnn prints).
 
@@ -587,21 +680,35 @@ class GNSEngine:
         """
         from repro.gns.describe import describe_lowering, traffic_report
         if self.mesh is None:
-            return traffic_report(
+            rec = traffic_report(
                 num_nodes=self.ds.graph.num_nodes, feat_dim=self.ds.feat_dim,
                 cache_frac=self.scfg.cache.fraction,
                 batch=self.scfg.batch_size, fanouts=self.scfg.fanouts,
                 n_shards=(self.store.n_shards if self.store else 1),
                 meter=self.meter,
                 backend=getattr(self.scfg, "backend", "host"))
-        return describe_lowering(
-            mesh=self.mesh, num_nodes=self.ds.graph.num_nodes,
-            feat_dim=self.ds.feat_dim, num_classes=self.ds.num_classes,
-            cache_frac=self.scfg.cache.fraction,
-            batch=self.scfg.batch_size * max(self.num_groups, 1),
-            fanouts=tuple(self.scfg.fanouts),
-            hidden_dim=self.mcfg.hidden_dim,
-            input_impl=self.mcfg.input_impl,
-            backend=getattr(self.scfg, "backend", "host"),
-            sample_kernel=getattr(self.mcfg, "sample_kernel", "reference"),
-            optim=self.cfg.optim)
+        else:
+            rec = describe_lowering(
+                mesh=self.mesh, num_nodes=self.ds.graph.num_nodes,
+                feat_dim=self.ds.feat_dim, num_classes=self.ds.num_classes,
+                cache_frac=self.scfg.cache.fraction,
+                batch=self.scfg.batch_size * max(self.num_groups, 1),
+                fanouts=tuple(self.scfg.fanouts),
+                hidden_dim=self.mcfg.hidden_dim,
+                input_impl=self.mcfg.input_impl,
+                backend=getattr(self.scfg, "backend", "host"),
+                sample_kernel=getattr(self.mcfg, "sample_kernel", "reference"),
+                optim=self.cfg.optim)
+        if self._stream is not None and self.store is not None:
+            # run-state fields are volatile by design — repro.gns.describe's
+            # diff() excludes them by name, like meter/compile_s
+            rec["stream"] = {
+                "enabled": True,
+                "max_pending": self.store.stream_cfg.max_pending,
+                "incremental_placement":
+                    self.store.stream_cfg.incremental_placement,
+                "pending_deltas": self.store.pending_deltas(),
+                "merges_applied": self.store.merges_applied,
+                "rows_migrated": self.store.rows_migrated,
+            }
+        return rec

@@ -511,8 +511,9 @@ class ServeFabric:
                 f"{d.worker}"))
 
     def _poll_store(self) -> None:
-        """Swap point + refresh cadence (the single-server loop's tail,
-        centralized so N workers never race the swap)."""
+        """Swap point + refresh cadence + streaming-ingest drain (the
+        single-server loop's tail, centralized so N workers never race the
+        swap)."""
         store = self.engine.store
         if store is None:
             return
@@ -528,6 +529,13 @@ class ServeFabric:
                     self._last_refresh_batches = n
                     store.begin_refresh(self._refresh_rng,
                                         version=store.version + 1)
+            # streaming ingest: staged deltas past the merge threshold kick
+            # an ASYNC build (which drains the buffer at its boundary) —
+            # serving never pauses, the swap above publishes the merge
+            if (not self._stop.is_set() and store.stream_merge_due()
+                    and not store.refreshing):
+                store.begin_refresh(self._refresh_rng,
+                                    version=store.version + 1)
         except BaseException as e:
             with self._flock:         # publish to client threads
                 self.fabric_error = e

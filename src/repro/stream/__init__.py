@@ -1,0 +1,24 @@
+"""Streaming graph ingest: delta-CSR updates under live training/serving.
+
+Production graphs mutate while the server answers queries (ROADMAP item 4).
+This package applies edge/node deltas to the live structure WITHOUT pausing
+anything, by riding the generation machinery the repo already trusts:
+
+* :class:`DeltaBuffer` — thread-safe, bounded (``QueueFull``), seq-stamped
+  staging log producers append to at any time (``engine.ingest()``);
+* :func:`merge_delta_csr` — deterministic delta-CSR merge, bitwise-equal to
+  a from-scratch rebuild, applied by ``FeatureStore._build`` at the next
+  generation boundary — the atomic swap then publishes structure + features
+  together, while in-flight batches stay pinned to the pre-merge
+  generation;
+* :class:`StreamConfig` (re-exported from ``repro.gns.config``) — the
+  declarative knob block nested under ``EngineConfig.stream``.
+
+The temporal-event replay scenario lives in ``repro.data.temporal``; the
+serve-while-mutating benchmark in ``benchmarks/bench_stream.py``.
+"""
+from repro.gns.config import StreamConfig
+from repro.stream.delta import DeltaBatch, DeltaBuffer
+from repro.stream.merge import merge_delta_csr
+
+__all__ = ["DeltaBatch", "DeltaBuffer", "StreamConfig", "merge_delta_csr"]

@@ -1,0 +1,347 @@
+"""Streaming-ingest integration: serve-while-mutating acceptance.
+
+In-process (meshless, tiny dataset, runtime lock sanitizer armed by
+conftest):
+
+* **visibility + pinning + no-recompile** — a batch pinned pre-merge
+  recomputes bitwise-identically after the merge (its generation carries
+  the pre-merge graph), post-merge sampling traverses the new edges and
+  serves brand-new nodes, and the jit cache stays flat across the merge
+  (the device table keeps its padded shape);
+* **deterministic replay** — the same temporal event stream folded into
+  two independent engines produces bitwise-identical post-merge CSRs;
+* **ingest-while-serving** — a live 2-worker fabric drains staged deltas
+  through its watchdog (async build → atomic swap → router re-adopt) and
+  the routed-local fraction after the incremental placement re-solve does
+  not regress by more than 0.05.
+
+Subprocess (4 forced host devices, ``@pytest.mark.dryrun`` — the CI
+``stream-smoke`` acceptance): the same contract on the 2x2 sharded fused
+mesh with the lock sanitizer armed — ingest under live traffic, post-merge
+queries see the new structure, zero steady-state recompilation.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sampler import SamplerConfig
+from repro.data import temporal_event_stream
+from repro.featurestore import CacheConfig
+from repro.gns import (EngineConfig, FabricConfig, GNSEngine, ServeConfig,
+                       StreamConfig)
+from repro.graph.datasets import get_dataset
+
+
+def _engine(seed=0, *, shards=2):
+    # fresh dataset per engine: merges mutate the engine's dataset view
+    ds = get_dataset("tiny", seed=0)
+    scfg = SamplerConfig(fanouts=(3, 4), batch_size=32,
+                         cache=CacheConfig(fraction=0.1, strategy="adaptive",
+                                           placement="locality",
+                                           shards=shards))
+    cfg = EngineConfig(sampler="gns", sampling=scfg, cache=scfg.cache,
+                       serve=ServeConfig(buckets=(8, 32), max_wait_ms=2.0),
+                       stream=StreamConfig(merge_min_pending=1),
+                       seed=seed)
+    return GNSEngine(cfg, dataset=ds)
+
+
+def _wait(pred, timeout=30.0, interval=0.01):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# visibility + pinning + recompile-flat (engine level)
+# ---------------------------------------------------------------------------
+
+def test_merge_visibility_pinning_and_no_recompile():
+    eng = _engine()
+    eng.ensure_cache()
+    v0 = eng.ds.graph.num_nodes
+    ids = eng.ds.val_idx[:8].astype(np.int64)
+
+    mb0 = eng.infer_prepare(ids, bucket=32)
+    out0 = eng.infer_compute(mb0)
+    compiled0 = eng.infer_step._cache_size()
+
+    new = eng.ingest_nodes(
+        np.random.default_rng(0).normal(
+            size=(2, eng.ds.feat_dim)).astype(np.float32),
+        labels=np.zeros(2, np.int64))
+    eng.ingest(new, [int(ids[0]), int(ids[1])])
+    # also delete one real edge (first val target with any neighbors)
+    g = eng.ds.graph
+    u = next(int(i) for i in eng.ds.val_idx
+             if g.indptr[i + 1] > g.indptr[i])
+    v = int(g.indices[g.indptr[u]])
+    eng.ingest([u], [v], op="delete")
+    assert eng.pending_deltas == 5
+
+    eng.merge_deltas()
+    assert eng.pending_deltas == 0
+    assert eng.store.merges_applied == 1
+    assert eng.ds.graph.num_nodes == v0 + 2
+    assert eng.meter.bytes_delta_upload > 0
+
+    # (a) the pinned pre-merge batch recomputes bitwise-identically, off the
+    # pre-merge structure its generation carries
+    assert mb0.cache_gen.graph.num_nodes == v0
+    np.testing.assert_array_equal(out0, eng.infer_compute(mb0))
+
+    # (b) post-merge sampling runs on the merged structure
+    assert eng.sampler.g.num_nodes == v0 + 2
+    gm = eng.sampler.g
+    nb = gm.indices[gm.indptr[int(ids[0])]:gm.indptr[int(ids[0]) + 1]]
+    assert int(new[0]) in nb                       # inserted edge visible
+    nb_u = gm.indices[gm.indptr[u]:gm.indptr[u + 1]]
+    assert v not in nb_u                           # deleted edge gone
+    # brand-new node is queryable end to end
+    out_new = eng.infer_compute(eng.infer_prepare(new[:1], bucket=32))
+    assert out_new.shape[0] == 32 and np.isfinite(out_new[:1]).all()
+
+    # (c) the merge retraced nothing: table keeps its padded shape, batch
+    # shapes are bucket-static
+    assert eng.infer_step._cache_size() == compiled0
+
+    # describe() surfaces the run state, and diff() treats it as volatile
+    rec = eng.describe()
+    assert rec["stream"]["merges_applied"] == 1
+    from repro.gns.describe import diff_records
+    eng.ingest([int(ids[0])], [int(ids[3])])
+    d = diff_records(rec, eng.describe())
+    assert d["same"] and not d["changed"], d
+
+
+def test_event_stream_replay_deterministic():
+    """Same seed → same stream → bitwise-identical post-merge structure on
+    two independent engines (merge ≡ rebuild, end to end)."""
+    def run():
+        eng = _engine(seed=1)
+        eng.ensure_cache()
+        stream = temporal_event_stream(eng.ds, num_batches=3,
+                                       events_per_batch=24,
+                                       new_node_frac=0.15, seed=11)
+        for ev in stream:
+            eng.ingest_events(ev)
+        eng.merge_deltas()
+        return eng
+
+    a, b = run(), run()
+    assert a.ds.graph.num_nodes == b.ds.graph.num_nodes
+    np.testing.assert_array_equal(a.ds.graph.indptr, b.ds.graph.indptr)
+    np.testing.assert_array_equal(a.ds.graph.indices, b.ds.graph.indices)
+    np.testing.assert_array_equal(a.ds.features, b.ds.features)
+    np.testing.assert_array_equal(a.ds.labels, b.ds.labels)
+
+
+# ---------------------------------------------------------------------------
+# ingest while a fabric serves: watchdog drain + local-fraction floor
+# ---------------------------------------------------------------------------
+
+def test_fabric_drains_deltas_and_local_fraction_holds():
+    eng = _engine(seed=2)
+    fab = eng.serve_fabric(FabricConfig(workers=2, watch_interval_ms=20.0))
+    rng = np.random.default_rng(9)
+    ds = eng.ds
+    half = len(ds.val_idx) // 2
+    hot_a = ds.val_idx[:half][:12].astype(np.int64)
+    hot_b = ds.val_idx[half:][:12].astype(np.int64)
+
+    def burst(n=16):
+        futs = []
+        for i in range(n):
+            hot = hot_a if i % 2 == 0 else hot_b
+            ids = rng.choice(hot, size=int(rng.integers(2, 8)), replace=False)
+            futs.append(fab.submit(ids))
+        assert all(f.result(timeout=600).status == "ok" for f in futs)
+
+    def route_counts():
+        m = fab.meter
+        with m.lock:            # rw-guarded counters: lock to read, too
+            return m.routed_known_ids, m.routed_local_ids
+
+    def frac(c0, c1):
+        known = c1[0] - c0[0]
+        local = c1[1] - c0[1]
+        return known, (local / known if known else 0.0)
+
+    with fab:
+        burst()                                    # warm + demand histograms
+        # seed ingest: one edge — the watchdog must drain it (async build →
+        # swap → router re-adopt) without any explicit refresh call
+        eng.ingest([int(hot_a[0])], [int(hot_b[0])])
+        assert _wait(lambda: eng.store.merges_applied >= 1), "no merge"
+        assert _wait(lambda: eng.pending_deltas == 0)
+        swaps0 = fab.meter.snapshot()["swaps_observed"]
+        assert _wait(lambda: fab.meter.snapshot()["swaps_observed"] >= 1), \
+            "watchdog never swapped the merged generation in"
+
+        # pre-ingest window: placement solved from the warm traffic
+        c0 = route_counts()
+        burst()
+        known1, frac1 = frac(c0, route_counts())
+
+        # the mutation burst: temporal events staged while serving is live
+        stream = temporal_event_stream(ds, num_batches=2,
+                                       events_per_batch=24,
+                                       new_node_frac=0.1, seed=3)
+        merges0 = eng.store.merges_applied
+        for ev in stream:
+            eng.ingest_events(ev)
+            burst(6)                               # serving never pauses
+        assert _wait(lambda: eng.store.merges_applied > merges0), "no merge"
+        assert _wait(lambda: eng.pending_deltas == 0)
+        assert _wait(lambda: fab.meter.snapshot()["swaps_observed"] > swaps0)
+
+        # post-ingest window, same hot sets
+        c2 = route_counts()
+        burst()
+        known2, frac2 = frac(c2, route_counts())
+
+        # post-merge structure is serveable: a new node answers queries
+        new_first = int(ds.graph.num_nodes - stream.total_new_nodes)
+        out = fab.infer(np.array([new_first], np.int64), timeout=600)
+        assert out.shape[0] == 1 and np.isfinite(out).all()
+
+    # the incremental re-solve held the routed-local floor (acceptance (d))
+    if known1 > 0 and known2 > 0:
+        assert frac2 >= frac1 - 0.05, (frac1, frac2)
+    assert fab.meter.snapshot()["errors"] == 0
+    assert eng.store.merges_applied >= merges0 + 1
+    rec = eng.describe()["stream"]
+    assert rec["merges_applied"] == eng.store.merges_applied
+    assert rec["pending_deltas"] == 0
+
+
+# ---------------------------------------------------------------------------
+# subprocess: the CI stream-smoke acceptance (4 forced host devices)
+# ---------------------------------------------------------------------------
+
+STREAM_SMOKE_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["REPRO_LOCK_SANITIZER"] = "1"
+import time
+import numpy as np
+import jax
+
+from repro.analysis import enable_sanitizer
+enable_sanitizer(True)
+
+from repro.core.sampler import SamplerConfig
+from repro.data import temporal_event_stream
+from repro.featurestore import CacheConfig
+from repro.gns import (EngineConfig, FabricConfig, GNSEngine, ServeConfig,
+                       StreamConfig)
+from repro.gns.config import MeshConfig, ModelConfig
+
+assert len(jax.devices()) == 4
+
+# production shape at CI scale: 2 DP groups x 2 cache shards, fused input,
+# locality placement, streaming ingest armed
+scfg = SamplerConfig(fanouts=(3, 4), batch_size=32,
+                     cache=CacheConfig(fraction=0.05, strategy="adaptive",
+                                       placement="locality"))
+cfg = EngineConfig(sampler="gns", sampling=scfg, cache=scfg.cache,
+                   model=ModelConfig(input_impl="fused", hidden_dim=16),
+                   mesh=MeshConfig(data=2, model=2),
+                   serve=ServeConfig(buckets=(8, 32), max_wait_ms=2.0),
+                   stream=StreamConfig(merge_min_pending=1),
+                   seed=0)
+eng = GNSEngine(cfg)
+assert eng.store.n_shards == 2
+ds = eng.ds
+v0 = ds.graph.num_nodes
+
+fab = eng.serve_fabric(FabricConfig(workers=2, stall_timeout_ms=2000.0,
+                                    watch_interval_ms=50.0))
+rng = np.random.default_rng(7)
+hot = rng.choice(ds.val_idx, size=24, replace=False).astype(np.int64)
+
+
+def wait(pred, timeout=120.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.05)
+    return False
+
+
+with fab:
+    # warm both buckets' compiled steps, then freeze the jit-cache watermark
+    fab.infer(hot[:4], timeout=600)
+    fab.infer(hot[:20], timeout=600)
+    compiled0 = eng.infer_step._cache_size()
+
+    # pin a pre-merge answer at the engine level (deterministic rng)
+    mb0 = eng.infer_prepare(hot[:8], bucket=32,
+                            rng=np.random.default_rng(123))
+    out0 = eng.infer_compute(mb0)
+
+    # ingest under live traffic: watchdog drains, serving never pauses
+    stream = temporal_event_stream(ds, num_batches=2, events_per_batch=24,
+                                   new_node_frac=0.1, seed=3)
+    futs = []
+    for ev in stream:
+        eng.ingest_events(ev)
+        for _ in range(8):
+            ids = rng.choice(hot, size=int(rng.integers(2, 8)),
+                             replace=False)
+            futs.append(fab.submit(ids))
+    assert all(f.result(timeout=600).status == "ok" for f in futs)
+    assert wait(lambda: eng.store.merges_applied >= 1), "no merge applied"
+    assert wait(lambda: eng.pending_deltas == 0), "deltas not drained"
+    assert wait(lambda: fab.meter.snapshot()["swaps_observed"] >= 1), \
+        "merged generation never swapped in"
+
+    # (a) pre-swap pinned batch replays bitwise off the old generation
+    assert mb0.cache_gen.graph.num_nodes == v0
+    np.testing.assert_array_equal(out0, eng.infer_compute(mb0))
+
+    # (b) post-swap queries see the new structure (new node served)
+    assert ds.graph.num_nodes == v0 + stream.total_new_nodes
+    new_id = np.array([v0], np.int64)
+    out_new = fab.infer(new_id, timeout=600)
+    assert out_new.shape[0] == 1 and np.isfinite(out_new).all()
+
+    # (c) zero steady-state recompilation across the merges
+    assert eng.infer_step._cache_size() == compiled0, (
+        eng.infer_step._cache_size(), compiled0)
+
+snap = fab.meter.snapshot()
+assert snap["errors"] == 0, snap
+print("STREAM_SMOKE_OK", "merges=", eng.store.merges_applied,
+      "migrated=", eng.store.rows_migrated,
+      "delta_bytes=", eng.meter.bytes_delta_upload)
+"""
+
+
+def _run_sub(code: str, timeout: int = 900) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+@pytest.mark.dryrun
+def test_stream_smoke_on_mesh_subprocess():
+    """The CI stream-smoke acceptance: ingest while a 2-worker fabric on
+    the forced-host 2x2 mesh serves — pre-swap bitwise replay, post-swap
+    visibility, jit cache flat, lock sanitizer armed throughout."""
+    out = _run_sub(STREAM_SMOKE_CODE)
+    assert "STREAM_SMOKE_OK" in out, out[-3000:]

@@ -1,0 +1,256 @@
+"""Streaming-ingest unit layer: merge_delta_csr properties + DeltaBuffer.
+
+Property tests (hypothesis, or the fallback shim in bare environments)
+pin the merge kernel's one contract — **merge ≡ rebuild**: applying a
+drained delta batch to a CSR must produce the *bitwise* CSR a from-scratch
+``CSRGraph.from_edges`` over the post-delta edge set produces (indptr AND
+indices AND dtypes).  Everything downstream (eq. 11 probabilities, cache
+membership, routing) trusts that equivalence.
+
+All jax-free: the merge is pure host-side numpy, and the buffer is a
+plain threading.Lock structure.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.graph.csr import CSRGraph
+from repro.serve.server import QueueFull
+from repro.stream import DeltaBatch, DeltaBuffer, merge_delta_csr
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _random_graph(rng, num_nodes, num_edges):
+    src = rng.integers(0, num_nodes, size=num_edges)
+    dst = rng.integers(0, num_nodes, size=num_edges)
+    return CSRGraph.from_edges(src, dst, num_nodes), (src, dst)
+
+
+def _edge_set(g: CSRGraph):
+    """Directed edge set of a CSR as a set of (u, v) pairs."""
+    u = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+    return set(zip(u.tolist(), g.indices.tolist()))
+
+
+def _batch(src, dst, op, *, node_feats=None, node_base=0, seq0=0):
+    src = np.asarray(src, dtype=np.int64)
+    op = np.asarray(op, dtype=np.int8)
+    seq = np.arange(seq0, seq0 + len(src), dtype=np.int64)
+    return DeltaBatch(
+        edge_src=src, edge_dst=np.asarray(dst, dtype=np.int64),
+        edge_op=op, edge_seq=seq,
+        node_feats=node_feats,
+        node_labels=None if node_feats is None
+        else np.zeros(len(node_feats), np.int64),
+        node_base=node_base,
+        first_seq=seq0, last_seq=seq0 + max(len(src) - 1, 0))
+
+
+def _rebuild_reference(g: CSRGraph, batch: DeltaBatch) -> CSRGraph:
+    """From-scratch post-delta rebuild: replay ops on the edge SET, then
+    run the canonical ``from_edges`` construction."""
+    v_new = g.num_nodes + batch.num_new_nodes
+    edges = _edge_set(g)
+    for s, d, o in zip(batch.edge_src.tolist(), batch.edge_dst.tolist(),
+                       batch.edge_op.tolist()):
+        if s == d:
+            continue
+        pairs = [(s, d), (d, s)]             # symmetrized, like from_edges
+        for p in pairs:
+            if o > 0:
+                edges.add(p)
+            else:
+                edges.discard(p)
+    if edges:
+        src, dst = map(np.asarray, zip(*sorted(edges)))
+    else:
+        src = dst = np.zeros(0, np.int64)
+    # already symmetrized + loop-free: plain dedup build over the pair set
+    return CSRGraph.from_edges(src, dst, v_new, symmetrize=False)
+
+
+def _assert_bitwise_equal(a: CSRGraph, b: CSRGraph):
+    assert a.num_nodes == b.num_nodes
+    assert a.indptr.dtype == b.indptr.dtype, (a.indptr.dtype, b.indptr.dtype)
+    assert a.indices.dtype == b.indices.dtype
+    assert np.array_equal(a.indptr, b.indptr)
+    assert np.array_equal(a.indices, b.indices)
+
+
+# ---------------------------------------------------------------------------
+# merge ≡ rebuild (the central property)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25)
+@given(seed=st.integers(0, 10_000),
+       num_nodes=st.integers(2, 40),
+       num_edges=st.integers(0, 120),
+       num_ops=st.integers(0, 60),
+       n_new=st.integers(0, 6))
+def test_merge_equals_rebuild(seed, num_nodes, num_edges, num_ops, n_new):
+    rng = np.random.default_rng(seed)
+    g, _ = _random_graph(rng, num_nodes, num_edges)
+    v_new = num_nodes + n_new
+    src = rng.integers(0, v_new, size=num_ops)
+    dst = rng.integers(0, v_new, size=num_ops)
+    op = rng.choice(np.array([1, -1], np.int8), size=num_ops)
+    feats = (np.zeros((n_new, 4), np.float32) if n_new else None)
+    batch = _batch(src, dst, op, node_feats=feats, node_base=num_nodes)
+    merged = merge_delta_csr(g, batch)
+    _assert_bitwise_equal(merged, _rebuild_reference(g, batch))
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(0, 10_000))
+def test_duplicate_insert_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    g, _ = _random_graph(rng, 30, 80)
+    src = rng.integers(0, 30, size=20)
+    dst = rng.integers(0, 30, size=20)
+    once = merge_delta_csr(g, _batch(src, dst, np.ones(20)))
+    # same inserts again, twice over — including edges that already exist
+    src3, dst3 = np.tile(src, 2), np.tile(dst, 2)
+    thrice = merge_delta_csr(once, _batch(src3, dst3, np.ones(40)))
+    _assert_bitwise_equal(once, thrice)
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(0, 10_000))
+def test_last_op_wins_within_batch(seed):
+    rng = np.random.default_rng(seed)
+    g, _ = _random_graph(rng, 25, 60)
+    s, d = 3, 7
+    # insert-then-delete → absent
+    out = merge_delta_csr(g, _batch([s, s], [d, d], [1, -1]))
+    assert (s, d) not in _edge_set(out) and (d, s) not in _edge_set(out)
+    # delete-then-insert → present
+    out = merge_delta_csr(g, _batch([s, s], [d, d], [-1, 1]))
+    es = _edge_set(out)
+    assert (s, d) in es and (d, s) in es
+
+
+def test_delete_then_reinsert_round_trip_across_drains():
+    """delete in one drained batch, re-insert in the next → the original
+    structure comes back bitwise (merge is history-free)."""
+    rng = np.random.default_rng(7)
+    g, _ = _random_graph(rng, 40, 150)
+    # pick genuinely-present edges to remove
+    u = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+    pick = rng.choice(len(u), size=min(10, g.num_edges), replace=False)
+    s, d = u[pick], g.indices[pick].astype(np.int64)
+    after_del = merge_delta_csr(g, _batch(s, d, -np.ones(len(s))))
+    assert after_del.num_edges < g.num_edges
+    after_reins = merge_delta_csr(
+        after_del, _batch(s, d, np.ones(len(s)), seq0=100))
+    _assert_bitwise_equal(g, after_reins)
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(0, 10_000))
+def test_sorted_indices_invariant(seed):
+    """Per-row neighbor lists stay strictly increasing (the CSR invariant
+    every binary-search consumer relies on)."""
+    rng = np.random.default_rng(seed)
+    g, _ = _random_graph(rng, 35, 100)
+    src = rng.integers(0, 35, size=40)
+    dst = rng.integers(0, 35, size=40)
+    op = rng.choice(np.array([1, -1], np.int8), size=40)
+    m = merge_delta_csr(g, _batch(src, dst, op))
+    for r in range(m.num_nodes):
+        row = m.indices[m.indptr[r]:m.indptr[r + 1]]
+        assert np.all(np.diff(row) > 0), (r, row)
+
+
+def test_empty_batch_is_identity():
+    rng = np.random.default_rng(3)
+    g, _ = _random_graph(rng, 20, 50)
+    out = merge_delta_csr(g, _batch([], [], []))
+    _assert_bitwise_equal(g, out)
+
+
+# ---------------------------------------------------------------------------
+# DeltaBuffer: admission, sequencing, drain atomicity
+# ---------------------------------------------------------------------------
+
+def test_buffer_bounded_admission():
+    buf = DeltaBuffer(10, 4, max_pending=5)
+    buf.add_edges([0, 1, 2], [3, 4, 5])
+    with pytest.raises(QueueFull):
+        buf.add_edges([0, 1, 2], [3, 4, 5])       # 3 + 3 > 5
+    assert buf.pending() == 3 and buf.rejected == 3
+    buf.add_edges([6], [7])                       # 3 + 1 fits
+    assert buf.pending() == 4
+    batch = buf.drain()
+    assert batch.num_ops == 4 and buf.pending() == 0
+    # capacity freed by the drain
+    buf.add_edges([0, 1, 2], [3, 4, 5])
+    assert buf.pending() == 3
+
+
+def test_buffer_seq_monotonic_and_drain_order():
+    buf = DeltaBuffer(10, 4)
+    s0 = buf.add_edges([0, 1], [2, 3])
+    s1 = buf.delete_edges([4], [5])
+    assert s1 == s0 + 2
+    b = buf.drain()
+    assert np.array_equal(b.edge_seq, np.arange(3))
+    assert np.array_equal(b.edge_op, [1, 1, -1])
+    assert b.first_seq == 0 and b.last_seq == 2
+    # seq keeps counting across drains
+    s2 = buf.add_edges([6], [7])
+    assert s2 == 3 and buf.drain().first_seq == 3
+
+
+def test_buffer_add_nodes_contiguous_ids_and_edge_bounds():
+    buf = DeltaBuffer(100, 3)
+    ids = buf.add_nodes(np.zeros((4, 3), np.float32))
+    assert np.array_equal(ids, np.arange(100, 104))
+    assert buf.next_node == 104
+    buf.add_edges(ids[:2], [0, 1])                # staged ids usable at once
+    with pytest.raises(AssertionError):
+        buf.add_edges([104], [0])                 # beyond the staged space
+    b = buf.drain()
+    assert b.num_new_nodes == 4 and b.node_base == 100
+    assert b.node_labels is not None and len(b.node_labels) == 4
+
+
+def test_buffer_drain_empty_returns_none():
+    buf = DeltaBuffer(5, 2)
+    assert buf.drain() is None
+    assert buf.pending() == 0
+
+
+def test_buffer_concurrent_producers_unique_seqs():
+    buf = DeltaBuffer(64, 2, max_pending=100_000)
+    n_threads, per = 8, 200
+
+    def work():
+        for _ in range(per):
+            buf.add_edges([1], [2])
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    b = buf.drain()
+    assert b.num_ops == n_threads * per
+    assert len(np.unique(b.edge_seq)) == b.num_ops
+    assert buf.admitted == n_threads * per
+
+
+def test_buffer_payload_bytes():
+    buf = DeltaBuffer(10, 4)
+    buf.add_edges([0, 1], [2, 3])
+    buf.add_nodes(np.zeros((2, 4), np.float32))
+    b = buf.drain()
+    expect = (2 * 8 * 3) + (2 * 1)      # src+dst+seq int64, op int8
+    expect += 2 * 4 * 4 + 2 * 8         # feats f32, labels int64
+    assert b.payload_bytes == expect
