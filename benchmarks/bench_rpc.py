@@ -1,0 +1,131 @@
+"""RPC transport overhead: tcp fabric vs inproc fabric at equal load.
+
+The cross-host transport's acceptance number: the SAME request stream,
+worker count, and engine configuration served once through in-process
+``FabricWorker`` threads and once through ``WorkerEndpoint`` replicas over
+localhost TCP.  The wire adds framing + a socket hop + a scheduler handoff
+per request; it must NOT add a compile, a copy of the feature store, or a
+convoy — so end-to-end p99 stays within 3x of inproc (in practice the
+delta is microseconds of framing against milliseconds of compute).
+
+Reported per transport: throughput, total/queue p99, and for tcp the
+rpc-wait p99 split (wire + remote scheduling time per request) plus the
+byte ledger both directions.  The 3x bound is asserted in-bench.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, engine_config
+from repro.gns import FabricConfig, GNSEngine, ServeConfig, TenantConfig
+from repro.graph.datasets import get_dataset
+from repro.rpc import WorkerEndpoint
+
+REQ_IDS = 8
+TENANTS = ("mobile", "batch")
+
+
+def _cfg(fast: bool, seed: int = 0):
+    cfg = engine_config("gns", batch_size=128 if fast else 512, seed=seed)
+    return dataclasses.replace(cfg, serve=ServeConfig(
+        buckets=(32, 128), max_wait_ms=2.0, max_queue=4096))
+
+
+def _build(fast: bool, seed: int = 0) -> GNSEngine:
+    ds = get_dataset("ogbn-products", scale=0.25 if fast else 1.0, seed=seed)
+    return GNSEngine(_cfg(fast, seed), dataset=ds)
+
+
+def _fabric_cfg(n_requests: int, **kw) -> FabricConfig:
+    return FabricConfig(
+        workers=2,
+        tenants=tuple(TenantConfig(t, max_queue=2 * n_requests)
+                      for t in TENANTS),
+        # transport overhead is the subject; failover chaos is bench_fabric's
+        stall_timeout_ms=600_000.0, **kw)
+
+
+def _drive(fab, eng, n_requests: int):
+    """Warm both workers' compiled paths, then time a mixed-tenant flood."""
+    rng = np.random.default_rng(3)
+    for widx, t in ((0, TENANTS[0]), (1, TENANTS[1])):
+        fab.submit(eng.ds.val_idx[:REQ_IDS], tenant=t,
+                   worker=widx).result(timeout=600)
+    t0 = time.perf_counter()
+    futs = [fab.submit(rng.choice(eng.ds.val_idx, size=REQ_IDS,
+                                  replace=False),
+                       tenant=TENANTS[i % len(TENANTS)])
+            for i in range(n_requests)]
+    for f in futs:
+        res = f.result(timeout=600)
+        assert res.status == "ok", res.status
+    return time.perf_counter() - t0
+
+
+def run(fast: bool = True) -> list:
+    n_requests = 96 if fast else 512
+    rows = []
+
+    # -- inproc baseline ---------------------------------------------------
+    eng = _build(fast)
+    fab = eng.serve_fabric(_fabric_cfg(n_requests))
+    with fab:
+        wall = _drive(fab, eng, n_requests)
+    snap = fab.meter.snapshot()
+    rows.append({
+        "transport": "inproc", "requests": n_requests, "wall_s": wall,
+        "requests_per_s": n_requests / wall,
+        "total_p99_ms": snap["total_p99_ms"],
+        "queue_wait_p99_ms": snap["queue_wait_p99_ms"],
+        "rpc_wait_p99_ms": 0.0, "bytes_rpc_tx": 0, "bytes_rpc_rx": 0,
+        "errors": snap["errors"],
+    })
+
+    # -- tcp: endpoint replicas on localhost -------------------------------
+    eps = [WorkerEndpoint(_build(fast), index=i, heartbeat_ms=100.0)
+           for i in range(2)]
+    try:
+        for ep in eps:
+            ep.serve_in_thread()
+        eng = _build(fast)
+        fab = eng.serve_fabric(_fabric_cfg(
+            n_requests, transport="tcp",
+            endpoints=tuple(f"127.0.0.1:{ep.port}" for ep in eps)))
+        with fab:
+            wall = _drive(fab, eng, n_requests)
+        snap = fab.meter.snapshot()
+        rpc = fab.rpc_traffic()
+        rows.append({
+            "transport": "tcp", "requests": n_requests, "wall_s": wall,
+            "requests_per_s": n_requests / wall,
+            "total_p99_ms": snap["total_p99_ms"],
+            "queue_wait_p99_ms": snap["queue_wait_p99_ms"],
+            "rpc_wait_p99_ms": snap.get("rpc_wait_p99_ms", 0.0),
+            "bytes_rpc_tx": rpc["bytes_rpc_tx"],
+            "bytes_rpc_rx": rpc["bytes_rpc_rx"],
+            "errors": snap["errors"],
+        })
+    finally:
+        for ep in eps:
+            ep.stop()
+
+    base, tcp = rows
+    tcp["p99_vs_inproc"] = round(tcp["total_p99_ms"]
+                                 / max(base["total_p99_ms"], 1e-9), 3)
+    base["p99_vs_inproc"] = 1.0
+    emit("rpc_overhead", rows,
+         ["transport", "requests", "requests_per_s", "total_p99_ms",
+          "p99_vs_inproc", "queue_wait_p99_ms", "rpc_wait_p99_ms",
+          "bytes_rpc_tx", "bytes_rpc_rx", "errors"])
+    # the acceptance: the wire costs < 3x p99 at equal load
+    assert tcp["total_p99_ms"] <= 3.0 * base["total_p99_ms"], rows
+    assert tcp["errors"] == 0 and base["errors"] == 0, rows
+    assert tcp["bytes_rpc_tx"] > 0 and tcp["bytes_rpc_rx"] > 0, rows
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,7 @@
   Serving  bench_serve             micro-batched GNSServer vs infer() loop
   Fabric   bench_fabric            multi-tenant fairness/isolation/routing
   Stream   bench_stream            serve-while-mutating temporal replay
+  RPC      bench_rpc               tcp transport overhead vs inproc fabric
 
 ``python -m benchmarks.run`` runs all at CI scale (--full for paper scale);
 each prints CSV and persists JSON under benchmarks/results/.
@@ -31,8 +32,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_breakdown, bench_cache_sensitivity,
                             bench_convergence, bench_fabric,
                             bench_input_nodes, bench_isolated,
-                            bench_roofline, bench_serve, bench_stream,
-                            bench_throughput)
+                            bench_roofline, bench_rpc, bench_serve,
+                            bench_stream, bench_throughput)
     all_benches = {
         "throughput": bench_throughput.run,
         "input_nodes": bench_input_nodes.run,
@@ -44,6 +45,7 @@ def main(argv=None) -> None:
         "serve": bench_serve.run,
         "fabric": bench_fabric.run,
         "stream": bench_stream.run,
+        "rpc": bench_rpc.run,
     }
     names = (args.only.split(",") if args.only else list(all_benches))
     for name in names:

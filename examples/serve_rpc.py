@@ -1,0 +1,161 @@
+"""Cross-host serving quickstart: endpoint replicas over localhost TCP.
+
+The deployment shape this demonstrates (one process per box in production;
+here everything runs on localhost so the example is self-contained):
+
+* N ``WorkerEndpoint`` processes, each hosting a full engine replica —
+  its own feature-store cache, compiled inference buckets, and fair
+  scheduler — started with::
+
+      python -m repro.rpc.endpoint --config engine.json --index 0 --port 7001
+
+* ONE coordinator that connects a :class:`~repro.serve.ServeFabric` with
+  ``transport="tcp"`` to those endpoints.  Clients talk to the coordinator
+  exactly as they would to an in-process fabric — routing, tenancy,
+  heartbeat liveness, and failover all ride the same code path, just with
+  :class:`~repro.rpc.RemoteWorkerProxy` in place of a worker thread.
+
+By default this script spawns the endpoints as REAL subprocesses (the
+honest cross-host rehearsal: separate interpreters, separate caches, bytes
+on a socket).  ``--in-thread`` serves them on threads instead, which is
+faster to start when you just want to see the API.  ``--kill-endpoint``
+SIGKILLs endpoint 0 mid-stream to show lossless failover onto the
+survivor.
+
+Run:  PYTHONPATH=src python examples/serve_rpc.py [--requests 100]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.sampler import SamplerConfig
+from repro.featurestore import CacheConfig
+from repro.gns import (EngineConfig, FabricConfig, GNSEngine, ServeConfig,
+                       TenantConfig)
+from repro.gns.config import DataConfig
+
+
+def _engine_config(scale: float) -> EngineConfig:
+    return EngineConfig(
+        sampler="gns",
+        data=DataConfig(name="ogbn-products", scale=scale),
+        sampling=SamplerConfig(batch_size=128, fanouts=(5, 10)),
+        cache=CacheConfig(fraction=0.05, strategy="adaptive"),
+        serve=ServeConfig(buckets=(16, 64), max_wait_ms=2.0))
+
+
+def _spawn_subprocess_endpoints(cfg: EngineConfig, n: int):
+    """One ``python -m repro.rpc.endpoint`` process per replica."""
+    fd, cfg_path = tempfile.mkstemp(suffix=".json")
+    with os.fdopen(fd, "w") as f:
+        json.dump(cfg.to_dict(), f)
+    procs, ports = [], []
+    for i in range(n):
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.rpc.endpoint",
+             "--config", cfg_path, "--index", str(i), "--port", "0"],
+            env=dict(os.environ, PYTHONPATH="src"),
+            stdout=subprocess.PIPE, text=True))
+    for p in procs:
+        line = p.stdout.readline()           # blocks until the replica is up
+        assert "GNS_ENDPOINT_READY" in line, line
+        ports.append(int(dict(kv.split("=")
+                              for kv in line.split()[1:])["port"]))
+        print(f"  endpoint up: pid={p.pid} port={ports[-1]}")
+    return procs, ports, cfg_path
+
+
+def _spawn_thread_endpoints(cfg: EngineConfig, n: int):
+    from repro.rpc import WorkerEndpoint
+    eps = []
+    for i in range(n):
+        ep = WorkerEndpoint(GNSEngine(cfg), index=i)
+        ep.serve_in_thread()
+        eps.append(ep)
+        print(f"  endpoint up (thread): port={ep.port}")
+    return eps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--endpoints", type=int, default=2)
+    ap.add_argument("--in-thread", action="store_true",
+                    help="serve endpoints on threads instead of subprocesses")
+    ap.add_argument("--kill-endpoint", action="store_true",
+                    help="SIGKILL endpoint 0 mid-stream (subprocess mode)")
+    args = ap.parse_args()
+
+    cfg = _engine_config(args.scale)
+    print(f"starting {args.endpoints} endpoint replicas ...")
+    procs, eps = [], []
+    if args.in_thread:
+        eps = _spawn_thread_endpoints(cfg, args.endpoints)
+        ports = [ep.port for ep in eps]
+    else:
+        procs, ports, _ = _spawn_subprocess_endpoints(cfg, args.endpoints)
+
+    try:
+        coordinator = GNSEngine(cfg)
+        fab = coordinator.serve_fabric(FabricConfig(
+            workers=args.endpoints, transport="tcp",
+            endpoints=tuple(f"127.0.0.1:{p}" for p in ports),
+            tenants=(TenantConfig("mobile", weight=2.0,
+                                  max_queue=args.requests + 8),
+                     TenantConfig("batch", weight=1.0,
+                                  max_queue=args.requests + 8))))
+
+        rng = np.random.default_rng(0)
+        pool = coordinator.ds.val_idx
+        print(f"serving {args.requests} requests over TCP ...")
+        with fab:
+            futs = []
+            for i in range(args.requests):
+                ids = rng.choice(pool, size=int(rng.integers(2, 10)),
+                                 replace=False)
+                futs.append(fab.submit(
+                    ids, tenant="mobile" if i % 2 == 0 else "batch"))
+                if (args.kill_endpoint and procs
+                        and i == args.requests // 2):
+                    os.kill(procs[0].pid, signal.SIGKILL)
+                    print("SIGKILLed endpoint 0 — the heartbeat lapses, the "
+                          "watchdog reclaims its in-flight requests, and "
+                          "the survivor re-serves them ...")
+            for f in futs:
+                r = f.result(timeout=600)
+                assert r.status == "ok" and np.isfinite(r.logits).all()
+            remote = fab.pull_remote_stats(timeout=30.0)
+            snap = fab.snapshot()
+
+        print(f"served {args.requests}/{args.requests}; wire bytes "
+              f"tx={snap['rpc']['bytes_rpc_tx']:,} "
+              f"rx={snap['rpc']['bytes_rpc_rx']:,}")
+        for idx, stats in sorted(remote.items()):
+            c = stats["counters"]
+            print(f"  endpoint {idx}: served {c['served']:>4}  "
+                  f"rx {c['bytes_rpc_rx']:>9,}B  tx {c['bytes_rpc_tx']:>9,}B")
+        if args.kill_endpoint:
+            rt = snap["routing"]
+            print(f"failovers {rt['failovers']}, retries {rt['retries']}, "
+                  f"healthy at exit: {fab.healthy()}")
+    finally:
+        for ep in eps:
+            ep.stop()
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+            p.wait(timeout=30)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,7 +26,9 @@ TRANSFER_CALLS = {"device_put", "make_array_from_callback",
 ARRAY_CTORS = {"jnp.asarray", "jnp.array"}
 SCOPE_PREFIXES = ("repro/featurestore/", "repro/sampling/",
                   "repro/gns/", "repro/serve/", "repro/stream/",
-                  "featurestore/", "sampling/", "gns/", "serve/", "stream/")
+                  "repro/rpc/",
+                  "featurestore/", "sampling/", "gns/", "serve/", "stream/",
+                  "rpc/")
 # traced modules: jnp.asarray there is device-side math, not a tier transfer
 EXCLUDE_SUFFIXES = ("kernels.py", "ref.py", "rng.py", "ops.py")
 METER_MARKERS = {"meter", "bytes_cache_upload", "bytes_adj_upload",

@@ -1,5 +1,6 @@
 """Fault-tolerant checkpointing: atomic, keep-N, reshard-on-load."""
-from repro.checkpoint.store import (CheckpointManager, load_checkpoint,
-                                    save_checkpoint)
+from repro.checkpoint.store import (CheckpointManager, latest_step, load_aux,
+                                    load_checkpoint, save_checkpoint)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "load_aux", "latest_step"]

@@ -52,11 +52,20 @@ def _unflatten_into(tree_like, flat: dict):
 
 
 def save_checkpoint(directory: str | Path, step: int, tree,
-                    extra: Optional[dict] = None, keep: int = 3) -> Path:
-    """Atomically write ``tree`` (+ JSON-serializable ``extra``) as step N."""
+                    extra: Optional[dict] = None, keep: int = 3,
+                    aux: Optional[dict] = None) -> Path:
+    """Atomically write ``tree`` (+ JSON-serializable ``extra``) as step N.
+
+    ``aux`` is a flat ``{name: ndarray}`` side-payload stored OUTSIDE the
+    pytree (its own ``aux.npz``): run-state whose shapes vary between saves
+    — e.g. the streaming ingest's un-merged op log — and therefore cannot
+    ride the fixed-shape ``_unflatten_into`` path.  Read it back with
+    :func:`load_aux`.
+    """
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    aux = {k: np.asarray(v) for k, v in (aux or {}).items()}
 
     tmp = Path(tempfile.mkdtemp(dir=directory, prefix=f".step_{step}_"))
     try:
@@ -64,11 +73,18 @@ def save_checkpoint(directory: str | Path, step: int, tree,
             np.savez(f, **flat)
             f.flush()
             os.fsync(f.fileno())
+        if aux:
+            with open(tmp / "aux.npz", "wb") as f:
+                np.savez(f, **aux)
+                f.flush()
+                os.fsync(f.fileno())
         manifest = {
             "step": step,
             "extra": extra or {},
             "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                        for k, v in flat.items()},
+            "aux": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                    for k, v in aux.items()},
         }
         with open(tmp / "manifest.json", "w") as f:
             json.dump(manifest, f)
@@ -120,6 +136,18 @@ def load_checkpoint(directory: str | Path, tree_like,
         tree = jax.tree_util.tree_map(
             lambda x, s: jax.device_put(x, s), tree, shardings)
     return tree, manifest["step"], manifest.get("extra", {})
+
+
+def load_aux(directory: str | Path, step: Optional[int] = None) -> dict:
+    """The ``aux`` side-payload of a checkpoint ({} when none was saved)."""
+    directory = Path(directory)
+    step = step if step is not None else latest_step(directory)
+    assert step is not None, f"no checkpoint under {directory}"
+    path = directory / f"step_{step:08d}" / "aux.npz"
+    if not path.exists():
+        return {}
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
 
 
 class CheckpointManager:

@@ -67,6 +67,10 @@ class TrafficMeter:
                                    # from bytes_cache_upload/bytes_adj_upload
                                    # for the same reason: the 1/n upload-
                                    # ratio assert must never see ingest bytes
+    bytes_rpc_tx: int = 0          # host->host RPC frames shipped (wire
+                                   # header + meta + payload) — the fabric's
+                                   # cross-host serving transport
+    bytes_rpc_rx: int = 0          # host->host RPC frames received
     uploads: int = 0               # device-table uploads (one per generation)
     lanes_local: int = 0           # cache hits served by the requesting
                                    # group's home shard (no cache-axis hop)
@@ -162,6 +166,8 @@ class TrafficMeter:
             "bytes_cache_upload": self.bytes_cache_upload,
             "bytes_adj_upload": self.bytes_adj_upload,
             "bytes_delta_upload": self.bytes_delta_upload,
+            "bytes_rpc_tx": self.bytes_rpc_tx,
+            "bytes_rpc_rx": self.bytes_rpc_rx,
             "uploads": self.uploads,
             "steps": self.steps,
             "lanes_local": self.lanes_local,

@@ -114,6 +114,23 @@ class FabricConfig:
                                     # generation swaps, refresh kicks)
     max_retries: int = 2            # failover re-routes per request before
                                     # its future fails with WorkerDown
+    transport: str = "inproc"       # "inproc" (threads over one cache) |
+                                    # "tcp" (repro.rpc: each worker is a
+                                    # RemoteWorkerProxy to a WorkerEndpoint
+                                    # process with its own cache replica)
+    endpoints: Sequence[str] = ()   # "host:port" per worker (tcp transport;
+                                    # len must equal ``workers``)
+    heartbeat_ms: float = 100.0     # endpoint heartbeat period; beat ages
+                                    # feed the SAME stall_timeout_ms watchdog
+                                    # rule as in-proc workers
+    connect_timeout_ms: float = 5000.0
+                                    # per-attempt TCP connect timeout
+    connect_retries: int = 5        # bounded reconnect attempts with
+                                    # exponential backoff + deterministic
+                                    # (seeded) jitter
+    connect_backoff_ms: float = 50.0
+                                    # backoff base: attempt k sleeps
+                                    # base * 2^k * (1 + 0.25*jitter)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -277,7 +294,7 @@ class EngineConfig:
 # nested reconstruction
 # ---------------------------------------------------------------------------
 
-_TUPLE_FIELDS = {"fanouts", "walk_fanouts", "buckets"}
+_TUPLE_FIELDS = {"fanouts", "walk_fanouts", "buckets", "endpoints"}
 _DTYPES = {"float32": np.float32, "bfloat16": None}   # resolved lazily
 
 

@@ -658,6 +658,43 @@ class GNSEngine:
                 int(ids[0]), ev.node_base)
         return buf.add_edges(ev.src, ev.dst)
 
+    def save(self, directory, step: int = 0, *, keep: int = 3):
+        """Checkpoint model + optimizer state AND the un-merged delta log.
+
+        The streaming buffer's seq-stamped ops ride the checkpoint's ``aux``
+        side-payload (variable shapes between saves), so a crash between an
+        ingest and the next generation merge loses nothing: :meth:`restore`
+        replays them with their original seqs and last-op-wins resolution
+        makes the replay idempotent.
+        """
+        from repro import checkpoint as ckpt
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        aux = {}
+        extra: dict = {"seed": self.cfg.seed}
+        if self._stream is not None:
+            st = self._stream.state()
+            extra["stream"] = {"next_node": int(st["next_node"]),
+                               "next_seq": int(st["next_seq"])}
+            aux = {f"stream/{k}": v for k, v in st.items()}
+        return ckpt.save_checkpoint(directory, step, tree, extra=extra,
+                                    keep=keep, aux=aux)
+
+    def restore(self, directory, step: Optional[int] = None) -> int:
+        """Resume from :meth:`save`: params/opt state plus the staged delta
+        log (re-staged into this engine's buffer when the checkpoint carried
+        one).  Returns the restored step."""
+        from repro import checkpoint as ckpt
+        tree_like = {"params": self.params, "opt_state": self.opt_state}
+        tree, step, _extra = ckpt.load_checkpoint(directory, tree_like,
+                                                  step=step)
+        self.params, self.opt_state = tree["params"], tree["opt_state"]
+        aux = ckpt.load_aux(directory, step)
+        stream_state = {k.split("/", 1)[1]: v for k, v in aux.items()
+                        if k.startswith("stream/")}
+        if stream_state:
+            self.stream.restore(stream_state)
+        return step
+
     def merge_deltas(self):
         """Force a merge NOW: synchronous refresh (drains the buffer at the
         build boundary) + adoption by the training sampler.  The serving

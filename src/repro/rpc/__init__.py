@@ -1,0 +1,35 @@
+"""Cross-host serving transport (stdlib + numpy only).
+
+The fabric's cross-HOST leg: length-prefixed binary framing with zero-copy
+numpy payloads (:mod:`repro.rpc.wire`), a retrying heartbeat-carrying client
+:class:`~repro.rpc.channel.Channel`, a per-host worker process
+(:class:`~repro.rpc.endpoint.WorkerEndpoint`, ``python -m
+repro.rpc.endpoint``), and the :class:`~repro.rpc.proxy.RemoteWorkerProxy`
+that slots into :class:`~repro.serve.fabric.ServeFabric` unchanged
+(``FabricConfig(transport="tcp", endpoints=("host:port", ...))``).
+
+Deliberately importable without jax: the coordinator half (wire, channel,
+proxy) runs on a bare CPU host; only the endpoint pulls in the engine.
+"""
+from .channel import Channel, RpcError
+from .proxy import RemoteWorkerProxy, parse_endpoint
+from .wire import (ChannelClosed, FrameError, MAX_FRAME_BYTES, decode_frame,
+                   encode_frame, pack_table, recv_frame, send_frame,
+                   unpack_table)
+
+__all__ = [
+    "Channel", "ChannelClosed", "FrameError", "MAX_FRAME_BYTES",
+    "RemoteWorkerProxy", "RpcError", "WorkerEndpoint", "decode_frame",
+    "encode_frame", "pack_table", "parse_endpoint", "recv_frame",
+    "send_frame", "unpack_table",
+]
+
+
+def __getattr__(name):
+    # WorkerEndpoint imports the serve stack (which imports the engine's
+    # dependencies on use) — resolve it lazily so `import repro.rpc` stays
+    # cheap on coordinator-only hosts
+    if name == "WorkerEndpoint":
+        from .endpoint import WorkerEndpoint
+        return WorkerEndpoint
+    raise AttributeError(name)

@@ -303,7 +303,19 @@ class ServeFabric:
         self._stop = threading.Event()
         self._refresh_rng = np.random.default_rng(engine.cfg.seed + 0x5E12)
         self._last_refresh_batches = 0
-        self.workers = [FabricWorker(self, i) for i in range(cfg.workers)]
+        if cfg.transport == "tcp":
+            # cross-host fleet: each worker is a proxy over a TCP channel
+            # to a WorkerEndpoint process holding its own cache replica
+            from repro.rpc import RemoteWorkerProxy
+            endpoints = tuple(cfg.endpoints)
+            assert len(endpoints) == cfg.workers, (
+                f"transport='tcp' needs one endpoint per worker: "
+                f"{len(endpoints)} endpoints for {cfg.workers} workers")
+            self.workers = [RemoteWorkerProxy(self, i, endpoints[i])
+                            for i in range(cfg.workers)]
+        else:
+            assert cfg.transport == "inproc", cfg.transport
+            self.workers = [FabricWorker(self, i) for i in range(cfg.workers)]
         self._watchdog: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------------
@@ -311,13 +323,21 @@ class ServeFabric:
     # ------------------------------------------------------------------
     def start(self) -> "ServeFabric":
         assert self._watchdog is None, "fabric already started"
-        # cold-start the cache before any worker runs, and give the router
-        # its first table (generation 0's layout)
-        self.engine.ensure_cache(self._refresh_rng)
-        if self.engine.store is not None:
-            self.router.adopt(self.engine.store.routing_table())
-        for w in self.workers:
-            w.start()
+        if self.cfg.transport == "tcp":
+            # generation 0 lives on the endpoints (same config + same seeded
+            # rng streams -> bitwise the generation the inproc fabric would
+            # build); the placement leader's HELLO_ACK ships the routing
+            # table, adopted via _adopt_remote_table during w.start()
+            for w in self.workers:
+                w.start()
+        else:
+            # cold-start the cache before any worker runs, and give the
+            # router its first table (generation 0's layout)
+            self.engine.ensure_cache(self._refresh_rng)
+            if self.engine.store is not None:
+                self.router.adopt(self.engine.store.routing_table())
+            for w in self.workers:
+                w.start()
         self._stop.clear()
         self._watchdog = threading.Thread(
             target=self._watch, daemon=True, name="gns-fabric-watchdog")
@@ -514,6 +534,21 @@ class ServeFabric:
         """Swap point + refresh cadence + streaming-ingest drain (the
         single-server loop's tail, centralized so N workers never race the
         swap)."""
+        if self.cfg.transport == "tcp":
+            # generations live on the endpoints: the coordinator only drives
+            # the refresh CADENCE (broadcast REFRESH frames); each endpoint
+            # swaps locally and ships its new table back in a SWAPPED frame
+            # (_on_remote_swap adopts the placement leader's copy)
+            every = self.serve_cfg.refresh_every
+            if every is None or self._stop.is_set():
+                return
+            n = self.meter.batch_count()
+            if n > 0 and n - self._last_refresh_batches >= every:
+                self._last_refresh_batches = n
+                for w in self.workers:
+                    if w.alive():
+                        w.request_refresh()
+            return
         store = self.engine.store
         if store is None:
             return
@@ -540,3 +575,71 @@ class ServeFabric:
             with self._flock:         # publish to client threads
                 self.fabric_error = e
             self.meter.observe_refresh_failure()
+
+    # ------------------------------------------------------------------
+    # tcp transport hooks (called by RemoteWorkerProxy threads)
+    # ------------------------------------------------------------------
+    def _placement_leader(self, candidate: int) -> int:
+        """Which endpoint's routing table the Router follows: the
+        lowest-index live worker (``candidate`` counts as live — it is the
+        worker currently reporting).  Replicas under adaptive policies can
+        drift apart; following ONE keeps routing coherent (divergence only
+        costs locality on the others, never correctness)."""
+        with self._flock:
+            alive = {w.index for w in self.workers if w.alive()}
+        alive.add(candidate)
+        return min(alive)
+
+    def _adopt_remote_table(self, index: int, table) -> None:
+        """HELLO_ACK handshake: adopt the placement leader's table."""
+        if table is not None and index == self._placement_leader(index):
+            self.router.adopt(table)
+
+    def _on_remote_swap(self, index: int, table) -> None:
+        """SWAPPED frame: an endpoint published a new generation."""
+        if index == self._placement_leader(index):
+            self.meter.observe_swap()
+            if table is not None:
+                self.router.adopt(table)
+
+    def _note_fabric_error(self, err: BaseException) -> None:
+        with self._flock:
+            self.fabric_error = err
+        self.meter.observe_refresh_failure()
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def rpc_traffic(self) -> dict:
+        """Aggregate wire-bytes view over the proxies' channel meters."""
+        tx = sum(w.copy_meter.bytes_rpc_tx for w in self.workers)
+        rx = sum(w.copy_meter.bytes_rpc_rx for w in self.workers)
+        return {"bytes_rpc_tx": tx, "bytes_rpc_rx": rx}
+
+    def pull_remote_stats(self, timeout: float = 5.0) -> dict:
+        """tcp transport: pull each live endpoint's STATS (remote tenant
+        ledgers + wire counters) into the serve meter's ``remote`` section.
+        Returns the raw per-worker replies."""
+        out = {}
+        if self.cfg.transport != "tcp":
+            return out
+        for w in self.workers:
+            if not w.alive():
+                continue
+            try:
+                stats = w.fetch_remote_stats(timeout=timeout)
+            except BaseException:
+                continue
+            out[w.index] = stats
+            self.meter.observe_remote_stats(w.index, stats)
+        return out
+
+    def snapshot(self) -> dict:
+        """``meter.snapshot()`` plus the transport view: scheduler fair-share
+        counters per worker and, over tcp, the aggregate wire traffic."""
+        snap = self.meter.snapshot()
+        snap["scheduler_counters"] = {
+            w.index: w.scheduler.counters() for w in self.workers}
+        if self.cfg.transport == "tcp":
+            snap["rpc"] = self.rpc_traffic()
+        return snap

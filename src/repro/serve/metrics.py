@@ -107,7 +107,8 @@ def _latency_percentiles(named_bufs) -> dict:
             "deadline_miss", "errors", "refresh_failures", "batches",
             "real_rows", "swaps_observed", "routed_known_ids",
             "routed_local_ids", "route_fallbacks", "failovers",
-            "retries_total", "tenant_stats", "worker_batches")
+            "retries_total", "tenant_stats", "worker_batches",
+            "remote_worker_stats")
 class ServeMeter:
     """Latency + traffic accounting for one server or one worker fleet.
 
@@ -143,9 +144,18 @@ class ServeMeter:
                                             # stall/death
         self.tenant_stats: dict = {}        # name -> TenantStats
         self.worker_batches: dict = {}      # worker index -> batches served
+        self.remote_worker_stats: dict = {} # worker index -> endpoint-side
+                                            # stats dict (tcp transport:
+                                            # absorbed via STATS frames so
+                                            # per-tenant ledgers aggregate
+                                            # across hosts)
         self._queue_wait: Deque[float] = collections.deque(maxlen=latency_window)
         self._compute: Deque[float] = collections.deque(maxlen=latency_window)
         self._total: Deque[float] = collections.deque(maxlen=latency_window)
+        self._rpc_wait: Deque[float] = collections.deque(maxlen=latency_window)
+                                            # tcp transport: per-request wire
+                                            # + (de)serialization time — the
+                                            # RPC-vs-compute latency split
         self.batch_log: Deque[BatchRecord] = collections.deque(maxlen=latency_window)
 
     # ------------------------------------------------------------------
@@ -190,11 +200,14 @@ class ServeMeter:
     # ------------------------------------------------------------------
     def observe_request(self, queue_wait_s: float, compute_s: float,
                         total_s: float, tenant: Optional[str] = None,
-                        late: bool = False) -> None:
+                        late: bool = False,
+                        rpc_s: Optional[float] = None) -> None:
         with self.lock:
             self.served += 1
             if late:
                 self.deadline_miss += 1
+            if rpc_s is not None:
+                self._rpc_wait.append(rpc_s)
             self._queue_wait.append(queue_wait_s)
             self._compute.append(compute_s)
             self._total.append(total_s)
@@ -247,6 +260,13 @@ class ServeMeter:
         with self.lock:
             self.refresh_failures += 1
 
+    def observe_remote_stats(self, worker: int, stats: dict) -> None:
+        """Absorb one endpoint's STATS reply (tcp transport): the remote
+        per-tenant ledger + wire counters, keyed by worker index, so a
+        cross-host fleet still has ONE aggregation point."""
+        with self.lock:
+            self.remote_worker_stats[worker] = dict(stats)
+
     # ------------------------------------------------------------------
     # readers
     # ------------------------------------------------------------------
@@ -288,10 +308,12 @@ class ServeMeter:
 
     def percentiles(self) -> dict:
         with self.lock:
-            return _latency_percentiles(
-                (("queue_wait", self._queue_wait),
-                 ("compute", self._compute),
-                 ("total", self._total)))
+            named = [("queue_wait", self._queue_wait),
+                     ("compute", self._compute),
+                     ("total", self._total)]
+            if self._rpc_wait:
+                named.append(("rpc_wait", self._rpc_wait))
+            return _latency_percentiles(named)
 
     def tenant_snapshot(self) -> dict:
         """Per-tenant ledger: counters + p50/p99, JSON-safe."""
@@ -317,6 +339,12 @@ class ServeMeter:
                      ("compute", self._compute),
                      ("total", self._total))),
             }
+            if self._rpc_wait:
+                out.update(_latency_percentiles(
+                    (("rpc_wait", self._rpc_wait),)))
+            if self.remote_worker_stats:
+                out["remote"] = {str(k): v for k, v in sorted(
+                    self.remote_worker_stats.items())}
             if self.tenant_stats:
                 out["tenants"] = {name: ts.as_dict()
                                   for name, ts in

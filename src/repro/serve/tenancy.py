@@ -41,7 +41,7 @@ class UnknownTenant(KeyError):
 
 
 @guarded_by("_slock", "_tq", "_tpass", "_tweight", "_tstride", "_tquota",
-            "_torder", "_vtime")
+            "_torder", "_vtime", "_toffered", "_tpopped")
 class FairScheduler:
     """Weighted-fair (stride) scheduler over per-tenant bounded FIFOs.
 
@@ -63,6 +63,10 @@ class FairScheduler:
         self._tquota: Dict[str, int] = {}
         self._torder: Dict[str, int] = {}   # registration rank: pass ties
                                             # break deterministically
+        self._toffered: Dict[str, int] = {} # admitted offers per tenant
+        self._tpopped: Dict[str, int] = {}  # fair-order dispatches per
+                                            # tenant (cross-host fleets
+                                            # aggregate these per proxy)
         self._vtime = 0.0                   # global virtual time (last pass
                                             # dispatched)
         self.default_weight = float(default_weight)
@@ -88,6 +92,8 @@ class FairScheduler:
                                  else quota)
         self._tpass[name] = self._vtime
         self._torder[name] = len(self._torder)
+        self._toffered[name] = 0
+        self._tpopped[name] = 0
 
     # ------------------------------------------------------------------
     def offer(self, tenant: str, item: Any) -> bool:
@@ -106,6 +112,7 @@ class FairScheduler:
                 # rejoin after idle: no hoarded credit
                 self._tpass[tenant] = max(self._tpass[tenant], self._vtime)
             q.append(item)
+            self._toffered[tenant] += 1
             self.work_ev.set()
             return True
 
@@ -135,6 +142,7 @@ class FairScheduler:
                 return None
             name = best[1]
             item = self._tq[name].popleft()
+            self._tpopped[name] += 1
             self._vtime = self._tpass[name]
             self._tpass[name] += self._tstride[name]
             if not any(self._tq.values()):
@@ -168,3 +176,14 @@ class FairScheduler:
         """Per-tenant queue depth snapshot (observability)."""
         with self._slock:
             return {name: len(q) for name, q in self._tq.items()}
+
+    def counters(self) -> dict:
+        """Per-tenant admitted/dispatched totals — the fair-share ledger a
+        multi-host fleet sums across its per-proxy schedulers (each remote
+        worker's fair order is applied coordinator-side, so these ARE the
+        cross-host dispatch counts)."""
+        with self._slock:
+            return {name: {"offered": self._toffered.get(name, 0),
+                           "popped": self._tpopped.get(name, 0),
+                           "queued": len(q)}
+                    for name, q in self._tq.items()}

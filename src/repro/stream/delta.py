@@ -184,6 +184,74 @@ class DeltaBuffer:
         with self._lock:
             return self._next_node
 
+    # ------------------------------------------------------------------
+    # checkpoint surface (repro.checkpoint aux payload)
+    # ------------------------------------------------------------------
+    def state(self) -> dict:
+        """Snapshot the staged-but-unmerged log for checkpointing.
+
+        Returns a dict of flat numpy arrays plus the id/seq high-water
+        marks — exactly what :meth:`restore` consumes.  The snapshot is
+        taken atomically, so a save that races with producers captures a
+        consistent seq prefix.
+        """
+        with self._lock:
+            feats = (np.concatenate(self._feats) if self._feats
+                     else np.zeros((0, self.feat_dim), np.float32))
+            labels = (np.concatenate(self._labels) if self._labels
+                      else np.zeros(0, np.int64))
+            return {
+                "edge_src": (np.concatenate(self._src) if self._src
+                             else np.zeros(0, np.int64)),
+                "edge_dst": (np.concatenate(self._dst) if self._dst
+                             else np.zeros(0, np.int64)),
+                "edge_op": (np.concatenate(self._op) if self._op
+                            else np.zeros(0, np.int8)),
+                "edge_seq": (np.concatenate(self._seq) if self._seq
+                             else np.zeros(0, np.int64)),
+                "node_feats": feats,
+                "node_labels": labels,
+                "next_node": np.int64(self._next_node),
+                "next_seq": np.int64(self._next_seq),
+            }
+
+    def restore(self, state: dict) -> None:
+        """Adopt a checkpointed staging log (inverse of :meth:`state`).
+
+        REPLACES whatever is currently staged — restore-then-restore is a
+        no-op (idempotent), and replaying a snapshot whose ops were already
+        merged is safe because the merge resolves per-edge conflicts by
+        highest seq (last-op-wins): re-applied ops carry their original
+        seqs, so they can never override anything staged after them.
+        """
+        src = np.asarray(state["edge_src"], dtype=np.int64)
+        dst = np.asarray(state["edge_dst"], dtype=np.int64)
+        op = np.asarray(state["edge_op"], dtype=np.int8)
+        seq = np.asarray(state["edge_seq"], dtype=np.int64)
+        feats = np.asarray(state["node_feats"], dtype=np.float32)
+        labels = np.asarray(state["node_labels"], dtype=np.int64)
+        assert src.shape == dst.shape == op.shape == seq.shape, (
+            src.shape, dst.shape, op.shape, seq.shape)
+        assert feats.ndim == 2 and feats.shape[1] == self.feat_dim, (
+            feats.shape, self.feat_dim)
+        next_seq = int(state["next_seq"])
+        next_node = int(state["next_node"])
+        if len(seq):
+            assert next_seq > int(seq.max()), (next_seq, int(seq.max()))
+        with self._lock:
+            self._src = [src] if len(src) else []
+            self._dst = [dst] if len(dst) else []
+            self._op = [op] if len(op) else []
+            self._seq = [seq] if len(seq) else []
+            self._feats = [feats] if len(feats) else []
+            self._labels = [labels] if len(feats) else []
+            # never rewind the seq/id clocks: a snapshot older than what
+            # this buffer already handed out must not recycle seqs (the
+            # last-op-wins guarantee depends on monotonicity)
+            self._next_seq = max(self._next_seq, next_seq)
+            self._next_node = max(self._next_node, next_node)
+            self._pending = int(len(src) + len(feats))
+
     def drain(self) -> Optional[DeltaBatch]:
         """Atomically take everything staged (None when empty).
 

@@ -1,0 +1,479 @@
+"""Cross-host serving transport acceptance (``repro.rpc`` + ServeFabric).
+
+In-process (meshless tiny dataset, endpoints served on threads inside this
+process, runtime lock sanitizer armed by conftest):
+
+* ``transport="tcp"`` serves the SAME request stream bitwise-identically to
+  ``transport="inproc"`` — same seeds, same generation, same routing;
+* killing one endpoint's connection mid-stream re-serves its shipped-but-
+  unanswered requests on the survivor (the watchdog DEAD path over
+  ``take_inflight``), losslessly; with every endpoint dead the futures fail
+  fast with :class:`WorkerDown`;
+* an endpoint survives its coordinator: a second fabric re-adopts the warm
+  replica after the first disconnects;
+* ``Router.adopt`` is safe against concurrent ``route`` readers (the
+  snapshot-swap contract the remote SWAPPED path leans on);
+* cross-host observability: wire bytes metered per direction, remote tenant
+  ledgers aggregated into the coordinator meter, per-request rpc wait
+  split out of queue wait.
+
+Subprocess (``@pytest.mark.dryrun`` — the CI ``rpc-smoke`` acceptance):
+two REAL endpoint processes on the forced-host 2x2 mesh + a coordinator
+process over localhost TCP, sanitizer armed end to end — majority-local
+routing, zero errors, and lossless recovery after a mid-stream SIGKILL of
+one endpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sampler import SamplerConfig
+from repro.featurestore import CacheConfig
+from repro.featurestore.placement import RoutingTable
+from repro.gns import (EngineConfig, FabricConfig, GNSEngine, ServeConfig,
+                       TenantConfig)
+from repro.graph.datasets import get_dataset
+from repro.rpc import RemoteWorkerProxy, WorkerEndpoint, parse_endpoint
+from repro.serve import Router, ServeFabric, WorkerDown
+
+
+def _mk_engine(seed=0):
+    # fresh dataset per engine: each endpoint replica owns its own copy
+    ds = get_dataset("tiny", seed=0)
+    scfg = SamplerConfig(fanouts=(3, 4), batch_size=32,
+                         cache=CacheConfig(fraction=0.1,
+                                           placement="locality", shards=2))
+    cfg = EngineConfig(sampler="gns", sampling=scfg, cache=scfg.cache,
+                       serve=ServeConfig(buckets=(8, 32), max_wait_ms=2.0),
+                       seed=seed)
+    return GNSEngine(cfg, dataset=ds)
+
+
+def _endpoints(n=2, seed=0, heartbeat_ms=25.0):
+    eps = []
+    for i in range(n):
+        ep = WorkerEndpoint(_mk_engine(seed), index=i,
+                            heartbeat_ms=heartbeat_ms)
+        ep.serve_in_thread()                 # bind() runs synchronously
+        eps.append(ep)
+    return eps
+
+
+def _tcp_fabric(eng, eps, **kw):
+    kw.setdefault("stall_timeout_ms", 5000.0)
+    kw.setdefault("watch_interval_ms", 20.0)
+    cfg = FabricConfig(workers=len(eps), transport="tcp",
+                       endpoints=tuple(f"127.0.0.1:{ep.port}" for ep in eps),
+                       **kw)
+    return ServeFabric(eng, cfg=cfg)
+
+
+def _wait(pred, timeout=30.0, interval=0.01):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def _request_stream(ds, n=14):
+    """A deterministic mixed-tenant request sequence."""
+    rng = np.random.default_rng(42)
+    out = []
+    for i in range(n):
+        ids = rng.choice(ds.val_idx, size=int(rng.integers(2, 8)),
+                         replace=False).astype(np.int64)
+        out.append(("mobile" if i % 2 == 0 else "batch", ids))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_fabric_config_tcp_json_roundtrip():
+    cfg = EngineConfig(
+        serve=ServeConfig(fabric=FabricConfig(
+            workers=2, transport="tcp",
+            endpoints=("127.0.0.1:7001", "hostb:7002"),
+            heartbeat_ms=50.0, connect_retries=3)))
+    d = json.loads(json.dumps(cfg.to_dict()))
+    back = EngineConfig.from_dict(d).serve.fabric
+    assert back.transport == "tcp"
+    assert back.endpoints == ("127.0.0.1:7001", "hostb:7002")
+    assert back.heartbeat_ms == 50.0 and back.connect_retries == 3
+
+    assert parse_endpoint("hostb:7002") == ("hostb", 7002)
+    assert parse_endpoint(":7002") == ("127.0.0.1", 7002)
+    assert parse_endpoint("7002") == ("127.0.0.1", 7002)
+
+
+# ---------------------------------------------------------------------------
+# bitwise identity: tcp ≡ inproc
+# ---------------------------------------------------------------------------
+
+def test_tcp_results_bitwise_identical_to_inproc():
+    reqs = _request_stream(get_dataset("tiny", seed=0))
+
+    def run_inproc():
+        eng = _mk_engine(seed=4)
+        fab = ServeFabric(eng, cfg=FabricConfig(workers=2))
+        out = []
+        with fab:
+            for tenant, ids in reqs:
+                out.append(fab.submit(ids, tenant=tenant).result(timeout=600))
+        return out
+
+    def run_tcp():
+        eps = _endpoints(2, seed=4)
+        try:
+            fab = _tcp_fabric(_mk_engine(seed=4), eps)
+            out = []
+            with fab:
+                for tenant, ids in reqs:
+                    out.append(fab.submit(ids, tenant=tenant)
+                               .result(timeout=600))
+            return out, fab
+        finally:
+            for ep in eps:
+                ep.stop()
+
+    inproc = run_inproc()
+    tcp, fab = run_tcp()
+    assert all(r.status == "ok" for r in inproc + tcp)
+    for a, b in zip(inproc, tcp):
+        np.testing.assert_array_equal(a.logits, b.logits)
+        assert a.cache_version == b.cache_version
+        assert a.bucket == b.bucket
+    # the wire was actually used, both directions, and metered
+    rpc = fab.rpc_traffic()
+    assert rpc["bytes_rpc_tx"] > 0 and rpc["bytes_rpc_rx"] > 0
+    assert fab.snapshot()["rpc"] == rpc
+
+
+def test_endpoint_survives_coordinator_and_readopts():
+    eps = _endpoints(1, seed=6)
+    try:
+        ids = get_dataset("tiny", seed=0).val_idx[:4].astype(np.int64)
+        fab1 = _tcp_fabric(_mk_engine(seed=6), eps)
+        with fab1:
+            r1 = fab1.submit(ids).result(timeout=600)
+        # fab1 disconnected cleanly; the endpoint keeps its warm replica
+        # (same process, same generation, serving ledger accumulates)
+        fab2 = _tcp_fabric(_mk_engine(seed=6), eps)
+        with fab2:
+            r2 = fab2.submit(ids).result(timeout=600)
+            stats = fab2.pull_remote_stats(timeout=30.0)
+        assert r1.status == "ok" and r2.status == "ok"
+        assert r2.cache_version == r1.cache_version   # no rebuild between
+        assert r2.logits.shape == r1.logits.shape
+        # the replica's ledger spans BOTH coordinator sessions
+        assert stats[0]["counters"]["served"] == 2
+    finally:
+        for ep in eps:
+            ep.stop()
+
+
+# ---------------------------------------------------------------------------
+# chaos: mid-stream endpoint loss
+# ---------------------------------------------------------------------------
+
+def test_killed_endpoint_inflight_rerouted_to_survivor():
+    eps = _endpoints(2, seed=7)
+    try:
+        ds = get_dataset("tiny", seed=0)
+        fab = _tcp_fabric(_mk_engine(seed=7), eps)
+        with fab:
+            fab.submit(ds.val_idx[:4], worker=0).result(timeout=600)  # warm
+            fab.submit(ds.val_idx[:4], worker=1).result(timeout=600)
+            w1 = fab.workers[1]
+            assert isinstance(w1, RemoteWorkerProxy)
+            # hold results on endpoint 1 so requests sit shipped-but-
+            # unanswered, then sever the connection mid-flight
+            eps[1].stall_s = 0.5
+            futs = [fab.submit(ds.val_idx[i * 4:(i + 1) * 4], worker=1)
+                    for i in range(3)]
+            assert _wait(lambda: w1.inflight_count() > 0
+                         or w1.scheduler.qsize() > 0)
+            w1.kill()                        # one-call network partition
+            assert _wait(lambda: not w1.alive()), "sender thread stuck"
+            # the watchdog reclaims + re-routes; the survivor serves all
+            for f in futs:
+                assert f.result(timeout=600).status == "ok"
+            assert _wait(lambda: fab.healthy() == [0]), fab.healthy()
+            # un-pinned traffic keeps flowing
+            assert fab.infer(ds.val_idx[:4], timeout=600).shape[0] == 4
+        m = fab.meter
+        assert m.failovers >= 1 and m.retries_total >= 1
+        assert m.errors == 0
+        # endpoint 1 is still running (partition, not crash): it reconnects
+        fab2 = _tcp_fabric(_mk_engine(seed=7), [eps[1]])
+        with fab2:
+            assert fab2.infer(ds.val_idx[:4], timeout=600).shape[0] == 4
+    finally:
+        for ep in eps:
+            ep.stop()
+
+
+def test_all_endpoints_dead_fails_fast():
+    eps = _endpoints(1, seed=8)
+    try:
+        ds = get_dataset("tiny", seed=0)
+        fab = _tcp_fabric(_mk_engine(seed=8), eps)
+        with fab:
+            fab.infer(ds.val_idx[:4], timeout=600)     # warm
+            w0 = fab.workers[0]
+            eps[0].stall_s = 0.5
+            fut = fab.submit(ds.val_idx[:8], worker=0)
+            _wait(lambda: w0.inflight_count() > 0)
+            w0.kill()
+            assert _wait(lambda: not w0.alive())
+            with pytest.raises(WorkerDown):
+                fut.result(timeout=600)
+            _wait(lambda: fab.healthy() == [], timeout=5.0)
+            with pytest.raises(WorkerDown):
+                fab.submit(ds.val_idx[:4])
+    finally:
+        for ep in eps:
+            ep.stop()
+
+
+# ---------------------------------------------------------------------------
+# satellite: Router.adopt vs concurrent route (snapshot-swap contract)
+# ---------------------------------------------------------------------------
+
+def test_router_adopt_concurrent_with_route():
+    """The watchdog (inproc) and the channel receiver threads (tcp SWAPPED
+    frames) adopt tables while submit threads route — the sanitizer-armed
+    hammer for the ``_rtable`` snapshot-swap annotation."""
+    router = Router(range(2), 2, mode="locality")
+    rng = np.random.default_rng(0)
+    tables = [RoutingTable(
+        shard_of_node=rng.integers(-1, 2, size=500).astype(np.int16),
+        n_shards=2, version=v) for v in range(8)]
+    router.adopt(tables[0])
+    stop = threading.Event()
+    errs = []
+
+    def route_loop():
+        r = np.random.default_rng(1)
+        try:
+            while not stop.is_set():
+                ids = r.integers(0, 500, size=6)
+                d = router.route(ids, [0, 1])
+                assert d.worker in (0, 1)
+        except BaseException as e:          # pragma: no cover
+            errs.append(e)
+
+    def adopt_loop():
+        try:
+            for i in range(400):
+                router.adopt(tables[i % len(tables)])
+        except BaseException as e:          # pragma: no cover
+            errs.append(e)
+
+    readers = [threading.Thread(target=route_loop) for _ in range(4)]
+    writer = threading.Thread(target=adopt_loop)
+    for t in readers:
+        t.start()
+    writer.start()
+    writer.join(60)
+    stop.set()
+    for t in readers:
+        t.join(60)
+    assert not errs, errs
+    assert router.table_version == tables[399 % len(tables)].version
+
+
+# ---------------------------------------------------------------------------
+# cross-host observability
+# ---------------------------------------------------------------------------
+
+def test_remote_stats_aggregation_and_rpc_wait_split():
+    eps = _endpoints(2, seed=9)
+    try:
+        ds = get_dataset("tiny", seed=0)
+        fab = _tcp_fabric(_mk_engine(seed=9), eps)
+        with fab:
+            for tenant, ids in _request_stream(ds, n=8):
+                fab.submit(ids, tenant=tenant).result(timeout=600)
+            raw = fab.pull_remote_stats(timeout=30.0)
+            snap = fab.snapshot()
+        # every live endpoint answered with its own ledger + wire counters
+        assert set(raw) == {0, 1}
+        for idx, stats in raw.items():
+            assert stats["index"] == idx
+            assert stats["counters"]["bytes_rpc_rx"] > 0
+        served_remote = sum(s["counters"]["served"] for s in raw.values())
+        assert served_remote == 8
+        # ... and landed in the coordinator meter's remote section
+        assert set(snap["remote"]) == {"0", "1"}
+        # per-tenant fair-share ledgers exist per proxy scheduler
+        offered = sum(c.get("mobile", {}).get("offered", 0)
+                      for c in snap["scheduler_counters"].values())
+        assert offered == 4
+        # rpc wait is split out of queue wait (percentile present)
+        assert "rpc_wait_p99_ms" in snap
+        assert snap["errors"] == 0
+        # both directions metered on the coordinator side
+        assert snap["rpc"]["bytes_rpc_tx"] > 0
+        assert snap["rpc"]["bytes_rpc_rx"] > 0
+        # ... and mirrored endpoint-side (tx there ~ rx here)
+        ep_tx = sum(ep.meter.traffic.bytes_rpc_tx for ep in eps)
+        assert ep_tx >= snap["rpc"]["bytes_rpc_rx"]
+    finally:
+        for ep in eps:
+            ep.stop()
+
+
+# ---------------------------------------------------------------------------
+# subprocess: the CI rpc-smoke acceptance (real processes, localhost TCP)
+# ---------------------------------------------------------------------------
+
+RPC_COORD_CODE = r"""
+import os, signal, time
+import numpy as np
+import jax
+
+from repro.analysis import enable_sanitizer
+enable_sanitizer(True)
+
+from repro.gns import EngineConfig, FabricConfig, GNSEngine, TenantConfig
+
+assert len(jax.devices()) == 4
+
+import json
+with open({cfg_path!r}) as f:
+    cfg = EngineConfig.from_dict(json.load(f))
+eng = GNSEngine(cfg)
+ds = eng.ds
+
+fab = eng.serve_fabric(FabricConfig(
+    workers=2, transport="tcp",
+    endpoints=("127.0.0.1:{port0}", "127.0.0.1:{port1}"),
+    tenants=(TenantConfig("mobile", weight=2.0, max_queue=64),
+             TenantConfig("batch", weight=1.0, max_queue=64)),
+    stall_timeout_ms=5000.0, watch_interval_ms=50.0, heartbeat_ms=50.0))
+
+rng = np.random.default_rng(7)
+half = len(ds.val_idx) // 2
+hot_a = rng.choice(ds.val_idx[:half], size=30, replace=False)
+hot_b = rng.choice(ds.val_idx[half:], size=30, replace=False)
+
+with fab:
+    futs = []
+    for i in range(40):
+        tenant, hot = (("mobile", hot_a) if i % 2 == 0 else ("batch", hot_b))
+        ids = rng.choice(hot, size=int(rng.integers(2, 8)), replace=False)
+        futs.append(fab.submit(ids, tenant=tenant))
+    res = [f.result(timeout=600) for f in futs]
+    assert all(r.status == "ok" for r in res), [r.status for r in res]
+
+    # chaos mid-stream: SIGKILL endpoint 0 with requests in flight
+    w0 = fab.workers[0]
+    futs = [fab.submit(rng.choice(hot_a, size=4, replace=False),
+                       tenant="mobile", worker=0) for _ in range(4)]
+    os.kill({pid0}, signal.SIGKILL)
+    deadline = time.monotonic() + 120
+    while w0.alive() and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert not w0.alive(), "proxy sender survived the endpoint SIGKILL"
+    # reclaimed + re-served on the survivor, losslessly
+    assert all(f.result(timeout=600).status == "ok" for f in futs)
+    tail = [fab.submit(rng.choice(hot_b, size=4, replace=False),
+                       tenant="batch") for _ in range(6)]
+    assert all(f.result(timeout=600).status == "ok" for f in tail)
+    assert fab.healthy() == [1], fab.healthy()
+    remote = fab.pull_remote_stats(timeout=30.0)
+    assert set(remote) == (set((1,))), remote
+    snap = fab.snapshot()
+
+rt = snap["routing"]
+assert rt["routed_known_ids"] > 0, rt
+assert rt["route_local_fraction"] > 0.5, rt
+assert rt["failovers"] >= 1 and rt["retries"] >= 1, rt
+assert snap["errors"] == 0, snap
+assert snap["rpc"]["bytes_rpc_tx"] > 0 and snap["rpc"]["bytes_rpc_rx"] > 0
+assert "rpc_wait_p99_ms" in snap, sorted(snap)
+
+print("RPC_SMOKE_OK", "local=", rt["route_local_fraction"],
+      "failovers=", rt["failovers"], "rpc=", snap["rpc"])
+"""
+
+
+def _smoke_config() -> dict:
+    """The CI-scale production shape: 2 DP groups x 2 cache shards on the
+    forced-host 2x2 mesh, fused input, locality placement."""
+    from repro.gns.config import MeshConfig, ModelConfig
+    scfg = SamplerConfig(fanouts=(3, 4), batch_size=32,
+                         cache=CacheConfig(fraction=0.05,
+                                           strategy="adaptive",
+                                           placement="locality"))
+    return EngineConfig(
+        sampler="gns", sampling=scfg, cache=scfg.cache,
+        model=ModelConfig(input_impl="fused", hidden_dim=16),
+        mesh=MeshConfig(data=2, model=2),
+        serve=ServeConfig(buckets=(8, 32), max_wait_ms=2.0),
+        seed=0).to_dict()
+
+
+def _sub_env():
+    return dict(os.environ, PYTHONPATH="src",
+                XLA_FLAGS="--xla_force_host_platform_device_count=4",
+                REPRO_LOCK_SANITIZER="1")
+
+
+@pytest.mark.dryrun
+def test_rpc_smoke_two_processes_subprocess(tmp_path):
+    """The CI rpc-smoke acceptance: 2 endpoint PROCESSES + a coordinator
+    process over localhost TCP on the forced-host 2x2 mesh — majority-local
+    routing, zero errors, lossless recovery after a mid-stream SIGKILL,
+    lock sanitizer armed in all three processes."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cfg_path = str(tmp_path / "engine.json")
+    with open(cfg_path, "w") as f:
+        json.dump(_smoke_config(), f)
+
+    eps = []
+    try:
+        ports = []
+        for i in range(2):
+            p = subprocess.Popen(
+                [sys.executable, "-m", "repro.rpc.endpoint",
+                 "--config", cfg_path, "--index", str(i),
+                 "--port", "0", "--heartbeat-ms", "50"],
+                cwd=root, env=_sub_env(), stdout=subprocess.PIPE,
+                stderr=subprocess.PIPE, text=True)
+            eps.append(p)
+        for p in eps:
+            line = p.stdout.readline()      # blocks until the replica is up
+            assert "GNS_ENDPOINT_READY" in line, (
+                line, p.stderr.read() if p.poll() is not None else "")
+            ports.append(int(dict(kv.split("=") for kv in
+                                  line.split()[1:])["port"]))
+
+        code = RPC_COORD_CODE.format(cfg_path=cfg_path, port0=ports[0],
+                                     port1=ports[1], pid0=eps[0].pid)
+        proc = subprocess.run([sys.executable, "-c", code], cwd=root,
+                              env=_sub_env(), capture_output=True,
+                              text=True, timeout=900)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        assert "RPC_SMOKE_OK" in proc.stdout, proc.stdout[-3000:]
+        # endpoint 0 was SIGKILLed by the coordinator; endpoint 1 survived
+        assert eps[0].poll() is not None
+        assert eps[1].poll() is None
+    finally:
+        for p in eps:
+            if p.poll() is None:
+                p.kill()
+            p.wait(timeout=30)
